@@ -1,0 +1,33 @@
+"""Shared benchmark utilities: timing protocol + CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+import jax
+import numpy as np
+
+ROWS: List[str] = []
+
+
+def bench(fn: Callable, *args, repeats: int = 3) -> float:
+    """Median wall seconds of a jitted call (compile excluded)."""
+    out = fn(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.3f},{derived}"
+    ROWS.append(row)
+    print(row)
+
+
+def header() -> None:
+    print("name,us_per_call,derived")

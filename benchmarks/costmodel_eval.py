@@ -1,0 +1,69 @@
+"""Cost-model quality — paper Figs. 9/16.
+
+Trains the regression zoo on the installed profiling table under the three
+paper methods (all-in-one / individual / individual+log-features) and
+reports the median |log(pred) − log(actual)| — the paper's "proportional on
+a log scale" criterion, quantified.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.costmodel import profiler, regression, store
+from .common import emit
+
+
+def run(quick: bool = True, max_rows: int = 400) -> None:
+    table = store.load_profile()
+    if table is None:
+        table = profiler.profile_quick() if quick else profiler.profile()
+    if len(table.rows) > max_rows:
+        # subsample uniformly for the zoo comparison — tree/forest training
+        # is O(n²) python; the full table still backs the installed model
+        import numpy as _np
+
+        idx = _np.linspace(0, len(table.rows) - 1, max_rows).astype(int)
+        table = profiler.ProfileTable([table.rows[i] for i in idx])
+    # method 3: individual models WITH log features (the paper's winner)
+    for model_name in ("linear", "poly2", "knn4", "tree5", "gboost", "forest"):
+        m = store.train(table, model_name=model_name, log_features=True)
+        errs = [
+            abs(
+                np.log(max(m.op_cost(r.ds, r.op, r.n, r.size, r.ordered), 1e-12))
+                - np.log(r.seconds)
+            )
+            for r in table.rows
+        ]
+        emit(
+            f"fig16_individual_logfeat/{model_name}",
+            float(np.median(errs)) * 1e6,  # report in micro-logs for CSV
+            f"median_abs_log_err={np.median(errs):.4f}",
+        )
+    # method 2: individual, no feature engineering
+    m2 = store.train(table, model_name="knn4", log_features=False)
+    errs2 = [
+        abs(
+            np.log(max(m2.op_cost(r.ds, r.op, r.n, r.size, r.ordered), 1e-12))
+            - np.log(r.seconds)
+        )
+        for r in table.rows
+    ]
+    emit(
+        "fig16_individual_nofeat/knn4",
+        float(np.median(errs2)) * 1e6,
+        f"median_abs_log_err={np.median(errs2):.4f}",
+    )
+    # method 1: all-in-one
+    m3 = store.train_all_in_one(table, model_name="knn4")
+    errs3 = [
+        abs(
+            np.log(max(m3.op_cost(r.ds, r.op, r.n, r.size, r.ordered), 1e-12))
+            - np.log(r.seconds)
+        )
+        for r in table.rows
+    ]
+    emit(
+        "fig16_all_in_one/knn4",
+        float(np.median(errs3)) * 1e6,
+        f"median_abs_log_err={np.median(errs3):.4f}",
+    )

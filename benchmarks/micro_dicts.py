@@ -1,0 +1,60 @@
+"""Micro-benchmarks for the dictionary backends — paper Appendix A.
+
+Fig. 13 (insert), Fig. 15 (successful lookup), Fig. 14 (failed lookup):
+per backend × dictionary size × key orderedness, ns/op.  The numbers are
+*this machine's* — the whole point of the paper is that the cost model is
+learned from exactly this sweep at installation time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dicts import base as dbase
+from repro.dicts import registry
+from .common import bench, emit
+
+
+def run(sizes=(2**10, 2**14, 2**17), repeats: int = 3, seed: int = 0) -> None:
+    rng = np.random.default_rng(seed)
+    for size in sizes:
+        universe = rng.choice(
+            np.arange(1, 8 * size, dtype=np.int32), 2 * size, replace=False
+        )
+        present, absent = universe[:size], universe[size:]
+        vals = rng.normal(size=(size, 1)).astype(np.float32)
+        for ds in registry.names():
+            mod = registry.get(ds)
+            cap = dbase.next_pow2(2 * size)
+            for ordered in (False, True):
+                ks = np.sort(present) if ordered else present
+                build = jax.jit(
+                    lambda k, v, _m=mod, _c=cap, _o=ordered: _m.build(
+                        k, v, _c, assume_sorted=_o
+                    )
+                )
+                sec = bench(build, jnp.asarray(ks), jnp.asarray(vals), repeats=repeats)
+                emit(
+                    f"fig13_insert/{ds}/n={size}/ordered={int(ordered)}",
+                    sec / size * 1e6,
+                    f"total_ms={sec*1e3:.2f}",
+                )
+                t = build(jnp.asarray(ks), jnp.asarray(vals))
+                lookup = jax.jit(lambda tt, q, _m=mod: _m.lookup(tt, q))
+                hit_q = rng.choice(present, size, replace=True)
+                miss_q = rng.choice(absent, size, replace=True)
+                if ordered:
+                    hit_q, miss_q = np.sort(hit_q), np.sort(miss_q)
+                s_hit = bench(lookup, t, jnp.asarray(hit_q), repeats=repeats)
+                s_miss = bench(lookup, t, jnp.asarray(miss_q), repeats=repeats)
+                emit(
+                    f"fig15_lookup_hit/{ds}/n={size}/ordered={int(ordered)}",
+                    s_hit / size * 1e6,
+                    f"total_ms={s_hit*1e3:.2f}",
+                )
+                emit(
+                    f"fig14_lookup_miss/{ds}/n={size}/ordered={int(ordered)}",
+                    s_miss / size * 1e6,
+                    f"total_ms={s_miss*1e3:.2f}",
+                )

@@ -1,0 +1,33 @@
+"""Beyond-paper: MoE dispatch = the paper's hash/sort duality inside an LM.
+
+Measures sort-dispatch vs scatter-dispatch position assignment across
+(token count × expert count) — the crossover in E mirrors Fig. 10's
+selectivity crossover, and ``auto`` must track the winner.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import moe as M
+from .common import bench, emit
+
+
+def run(repeats: int = 3, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    for n_tokens in (4096, 32768):
+        for n_experts in (8, 64, 256):
+            eid = jnp.asarray(rng.integers(0, n_experts, n_tokens).astype(np.int32))
+            f_sort = jax.jit(lambda e: M.positions_sort(e, n_experts))
+            f_scat = jax.jit(lambda e: M.positions_scatter(e, n_experts))
+            t_sort = bench(f_sort, eid, repeats=repeats)
+            t_scat = bench(f_scat, eid, repeats=repeats)
+            auto = M.auto_dispatch(n_tokens, n_experts)
+            winner = "sort" if t_sort < t_scat else "scatter"
+            emit(
+                f"moe_dispatch/N={n_tokens}/E={n_experts}",
+                min(t_sort, t_scat) * 1e6,
+                f"sort_ms={t_sort*1e3:.2f},scatter_ms={t_scat*1e3:.2f},"
+                f"winner={winner},auto={auto}",
+            )

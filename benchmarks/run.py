@@ -1,0 +1,67 @@
+"""Benchmark entry point — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Default sizes finish on a single CPU core in a few minutes; ``--full`` uses
+the paper-scale sweeps.  Output: ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import common
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument(
+        "--only", default=None,
+        help="comma list: micro,costmodel,groupby,tpch,indbml,moe",
+    )
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name: str) -> bool:
+        return only is None or name in only
+
+    common.header()
+    t0 = time.time()
+
+    if want("micro"):
+        from . import micro_dicts
+
+        micro_dicts.run(
+            sizes=(2**10, 2**14, 2**17) if args.full else (2**10, 2**13)
+        )
+    if want("costmodel"):
+        from . import costmodel_eval
+
+        costmodel_eval.run(quick=not args.full)
+    if want("groupby"):
+        from . import groupby_selectivity
+
+        groupby_selectivity.run(
+            n_rows=1_000_000 if args.full else 120_000,
+            n_groups=8192 if args.full else 2048,
+        )
+    if want("tpch"):
+        from . import tpch_bench
+
+        tpch_bench.run(scale=0.05 if args.full else 0.01)
+    if want("indbml"):
+        from . import indb_ml
+
+        indb_ml.run()
+    if want("moe"):
+        from . import moe_dispatch_bench
+
+        moe_dispatch_bench.run()
+
+    print(f"# total {time.time()-t0:.1f}s, {len(common.ROWS)} rows", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""TPC-H query benchmark — paper Fig. 11.
+
+Runs Q1/Q3/Q5/Q9/Q18 under: (a) each single-dictionary policy (every LLQL
+dictionary forced to one implementation — the Typer-like "one hash table
+everywhere" policy and its variants), and (b) the fine-tuned plan chosen by
+Alg. 1 with the installed cost model.  Reports wall time per query and the
+tuned plan's speedup over the best and worst single policies.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core.cost import AnalyticCostModel, DictChoice
+from repro.core.synthesis import synthesize
+from repro.data import tpch
+from repro.data.table import collect_stats
+from repro.exec.queries import QUERIES
+from .common import bench, emit
+
+ALL_SYMS = ("Agg", "Sd", "OD", "QtyAgg", "CN", "SN", "PX", "Ragg")
+
+
+def run(scale: float = 0.02, repeats: int = 3, seed: int = 0):
+    from repro.costmodel import load_model
+
+    delta = load_model() or AnalyticCostModel()
+    db = tpch.generate(scale=scale, seed=seed).tables()
+    sigma = collect_stats(db)
+    backends = ("ht_linear", "ht_twochoice", "st_sorted", "st_blocked")
+    for qname, q in sorted(QUERIES.items()):
+        times = {}
+        for ds in backends:
+            choices = {s: DictChoice(ds, hinted=ds.startswith("st")) for s in ALL_SYMS}
+            fn = lambda: q.run(db, choices)
+            sec = bench(fn, repeats=repeats)
+            times[ds] = sec
+            emit(f"fig11_{qname}/single/{ds}", sec * 1e6, f"ms={sec*1e3:.2f}")
+        syn = synthesize(q.llql(), sigma, delta)
+        tuned_choices = dict(syn.choices)
+        for s in ALL_SYMS:
+            tuned_choices.setdefault(s, next(iter(syn.choices.values())))
+        fn = lambda: q.run(db, tuned_choices)
+        sec = bench(fn, repeats=repeats)
+        best, worst = min(times.values()), max(times.values())
+        emit(
+            f"fig11_{qname}/tuned",
+            sec * 1e6,
+            f"ms={sec*1e3:.2f},vs_best={sec/best:.2f}x,vs_worst={sec/worst:.2f}x,"
+            f"plan={'|'.join(f'{k}:{v}' for k, v in sorted(syn.choices.items()))}",
+        )

@@ -1,0 +1,38 @@
+"""Installation stage (paper Fig. 3): profile every registered dictionary
+backend on THIS machine and train + persist the learned cost model Δ.
+
+    PYTHONPATH=src python examples/install_costmodel.py [--quick]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--model", default="knn4")
+    args = ap.parse_args()
+
+    from repro.costmodel import install, load_profile
+
+    model = install(quick=args.quick, model_name=args.model, verbose=True)
+    table = load_profile()
+    print(f"installed Δ: {len(model.models)} per-(backend,op,order) regressors")
+    if table:
+        print(f"profiling table: {len(table.rows)} measurements")
+    # show the learned hash/sort crossover
+    for size in (1024, 65536):
+        h = model.op_cost("ht_linear", "lookup_hit", size, size, False)
+        su = model.op_cost("st_sorted", "lookup_hit", size, size, False)
+        so = model.op_cost("st_sorted", "lookup_hit", size, size, True)
+        print(
+            f"  size={size}: hash={h*1e6:.1f}us sorted/unordered={su*1e6:.1f}us "
+            f"sorted/ordered={so*1e6:.1f}us"
+        )
+
+
+if __name__ == "__main__":
+    main()

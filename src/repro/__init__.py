@@ -1,0 +1,4 @@
+"""DBFlex-JAX: fine-tuned data structures for analytical query processing,
+re-derived for TPU pods.  See DESIGN.md."""
+
+__version__ = "1.0.0"

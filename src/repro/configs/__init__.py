@@ -1,0 +1,27 @@
+"""Per-architecture configs (assigned pool + the paper's own workload).
+
+Each module exports ``CONFIG: ArchConfig``; ``get(name)`` resolves ids with
+dashes/dots normalized.  The paper's own workload family lives in
+``dbflex_paper`` (query-engine configs, not an LM).
+"""
+from importlib import import_module
+
+_ALIASES = {
+    "whisper-large-v3": "whisper_large_v3",
+    "granite-20b": "granite_20b",
+    "qwen1.5-0.5b": "qwen1_5_0_5b",
+    "granite-34b": "granite_34b",
+    "llama3.2-3b": "llama3_2_3b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "pixtral-12b": "pixtral_12b",
+    "rwkv6-3b": "rwkv6_3b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+}
+
+ARCH_IDS = tuple(_ALIASES)
+
+
+def get(name: str):
+    mod = _ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
+    return import_module(f"repro.configs.{mod}").CONFIG

@@ -1,0 +1,17 @@
+"""granite-20b [dense] — llama-arch code model, MQA (kv=1).
+[arXiv:2405.04324]: 52L, d=6144, 48H, kv=1, d_ff=24576, vocab=49152."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite-20b",
+    family="dense",
+    n_layers=52,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=1,
+    d_ff=24576,
+    vocab=49152,
+    # §Perf layout sweep: 0.311 -> 0.728 (granite-34b keeps TP: the 88-layer
+    # DP residual stacks exceed HBM — fraction-vs-memory trade, EXPERIMENTS.md)
+    layout="dp",
+)

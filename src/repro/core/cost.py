@@ -1,0 +1,520 @@
+"""LLQL cost model — the paper's Fig. 8 inference rules.
+
+Combines three ingredients, exactly as the paper does:
+
+* **Σ** (``cardinality.CardModel``) — cardinalities, distinct counts,
+  selectivities, physical orderedness of inputs;
+* **Δ** (``DictCostModel`` protocol) — per-operation dictionary costs.  The
+  production Δ is *learned* from installation-stage profiling
+  (``repro.costmodel``); ``AnalyticCostModel`` below is a closed-form fallback
+  used by unit tests and as a sanity prior;
+* **Γ** (``Gamma``) — the runtime context threaded through the rules:
+  accumulated invocation count ``Γ_calls``, path probability ``Γ_cond``, and
+  the dictionary-implementation assignment ``Γ_dict``.
+
+The inference walks the program once, maintaining per-dictionary metadata
+(estimated cardinality, nested-group size, build orderedness), and emits both
+a total cost and a per-site breakdown (for the paper-style "explain" output
+in the benchmarks).
+
+Deviation from the paper (documented): Fig. 8's lookup rule sets the hit
+fraction σ = Σ_dist(e2)/N, which exceeds 1 whenever the probe side has more
+distinct keys than the dictionary.  We use the standard containment form
+σ = min(1, N / Σ_dist(e2)) — identical on the paper's key/foreign-key
+workloads, well-behaved elsewhere.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Protocol, Tuple, Union
+
+from . import llql as L
+from .cardinality import CardModel, key_columns
+
+DEFAULT_DS = "ht_linear"
+
+# Vectorized-engine counting (DESIGN.md §2, EXPERIMENTS.md §Perf finding):
+# on batch-vectorized hardware a masked (filtered) loop still runs every
+# row through the dictionary op, and a masked build cannot use the
+# sorted-input fast path (dicts.base re-sorts under a mask).  The paper's
+# per-row rules (Fig. 8 exactly) are recovered with vectorized=False.
+VECTORIZED_DEFAULT = True
+
+# ---------------------------------------------------------------------------
+# Δ — dictionary cost model interface
+# ---------------------------------------------------------------------------
+
+OPS = ("insert", "lookup_hit", "lookup_miss")
+
+
+class DictCostModel(Protocol):
+    def op_cost(self, ds: str, op: str, n: float, size: float, ordered: bool) -> float:
+        """Total cost in **seconds** of ``n`` operations of kind ``op`` against
+        a dictionary of (final) cardinality ``size``; ``ordered`` = the key
+        sequence of the n operations is sorted."""
+        ...
+
+
+class AnalyticCostModel:
+    """Closed-form Δ with plausible big-O shapes and constants.
+
+    Used by unit tests and as the pre-installation prior; the learned model
+    (``repro.costmodel.store.load_model``) replaces it after profiling.  The
+    constants are per-op nanoseconds on a generic core; only *relative* shape
+    matters for the tests that use it.
+    """
+
+    def __init__(self, scale: float = 1.0) -> None:
+        self.scale = scale
+
+    def op_cost(self, ds: str, op: str, n: float, size: float, ordered: bool) -> float:
+        n = max(0.0, float(n))
+        if n == 0.0:
+            return 0.0
+        size = max(2.0, float(size))
+        lg = math.log2(size)
+        cache_penalty = 1.0 + 0.12 * max(0.0, lg - 10.0)  # past-L1 growth
+        if ds.startswith("ht"):
+            base = {
+                ("ht_linear", "insert"): 26.0,
+                ("ht_linear", "lookup_hit"): 18.0,
+                ("ht_linear", "lookup_miss"): 34.0,
+                ("ht_twochoice", "insert"): 38.0,
+                ("ht_twochoice", "lookup_hit"): 22.0,
+                ("ht_twochoice", "lookup_miss"): 24.0,
+            }[(ds, op)]
+            per = base * cache_penalty
+        elif ds.startswith("st"):
+            blk = ds == "st_blocked"
+            if ordered:
+                # hinted/merge access or append-build: amortized O(1)
+                per = {"insert": 7.0, "lookup_hit": 9.0, "lookup_miss": 9.0}[op]
+                per *= 0.9 if blk else 1.0
+            else:
+                c = {"insert": 14.0, "lookup_hit": 11.0, "lookup_miss": 11.0}[op]
+                if op == "insert":
+                    # unordered sorted-dict build ~ sort: O(log n) amortized/op
+                    per = c * lg
+                else:
+                    per = c * lg * (0.55 if blk else 1.0)  # block index helps
+                per *= 1.0 + 0.05 * max(0.0, lg - 13.0)
+        else:  # pragma: no cover - unknown backend
+            raise KeyError(f"unknown dictionary implementation {ds!r}")
+        return self.scale * n * per * 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Γ — runtime context & synthesis choices
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class DictChoice:
+    ds: str = DEFAULT_DS
+    hinted: bool = False  # use hinted (iterator/merge) probe & insert sites
+
+    def __str__(self) -> str:
+        return self.ds + ("<hinted>" if self.hinted else "")
+
+
+GammaDict = Dict[str, DictChoice]
+
+
+@dataclass
+class DictMeta:
+    name: str
+    choice: DictChoice
+    card: float = 0.0  # estimated final cardinality
+    elems: float = 0.0  # total inserted elements incl. duplicates (for groups)
+    nested: bool = False  # values are inner dictionaries (partition/trie dict)
+    build_ordered: bool = True  # every build site saw sorted keys
+
+    @property
+    def group_sz(self) -> float:
+        if not self.nested or self.card <= 0:
+            return 1.0
+        return max(1.0, self.elems / self.card)
+
+
+@dataclass
+class CostItem:
+    site: str  # human-readable site tag
+    dict: str
+    ds: str
+    op: str
+    n: float
+    size: float
+    ordered: bool
+    seconds: float
+
+
+@dataclass
+class CostResult:
+    total: float = 0.0
+    items: List[CostItem] = field(default_factory=list)
+    scalar_seconds: float = 0.0
+    dict_meta: Dict[str, DictMeta] = field(default_factory=dict)
+
+    def add(self, item: CostItem) -> None:
+        self.items.append(item)
+        self.total += item.seconds
+
+    def add_scalar(self, seconds: float) -> None:
+        self.scalar_seconds += seconds
+        self.total += seconds
+
+    def by_dict(self) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for it in self.items:
+            out[it.dict] = out.get(it.dict, 0.0) + it.seconds
+        return out
+
+    def explain(self) -> str:
+        lines = [f"total {self.total*1e3:.3f} ms (scalar {self.scalar_seconds*1e3:.3f} ms)"]
+        for it in self.items:
+            lines.append(
+                f"  {it.site:<28} {it.dict:<8} {it.ds:<14} {it.op:<12}"
+                f" n={it.n:<12.0f} size={it.size:<12.0f}"
+                f" ordered={int(it.ordered)} -> {it.seconds*1e3:.3f} ms"
+            )
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Environment entries for the static walk
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class RowOf:
+    rel: str  # loop variable ranges over rows of this input relation
+
+
+@dataclass
+class InnerRowOf:
+    meta: Optional[DictMeta]  # rows of an inner (group) dictionary; None=input trie
+    rel: Optional[str] = None  # for input tries: the trie's stats name
+
+
+@dataclass
+class DictRowOf:
+    meta: DictMeta  # iterating a result dictionary's key/value pairs
+
+
+@dataclass
+class IterOf:
+    meta: DictMeta
+
+
+@dataclass
+class RefVal:
+    pass
+
+
+@dataclass
+class ScalarVal:
+    pass
+
+
+EnvEntry = Union[RowOf, InnerRowOf, DictRowOf, IterOf, RefVal, ScalarVal, DictMeta]
+
+SCALAR_NS = 1.4  # per scalar op (arith/field/record), calibrated vs interp
+ITER_NS = 2.0  # per-element loop overhead
+
+
+# ---------------------------------------------------------------------------
+# The inference engine
+# ---------------------------------------------------------------------------
+
+
+class _Infer:
+    def __init__(
+        self,
+        sigma: CardModel,
+        delta: DictCostModel,
+        gamma_dict: GammaDict,
+        vectorized: bool = VECTORIZED_DEFAULT,
+    ):
+        self.sigma = sigma
+        self.delta = delta
+        self.gamma_dict = dict(gamma_dict)
+        self.vectorized = vectorized
+        self.res = CostResult()
+
+    # -- scalar expression op counting ------------------------------------
+    def _scalar_ops(self, e: L.Expr) -> float:
+        n = 0.0
+        for node in L.walk(e):
+            if isinstance(node, (L.BinOp, L.UnOp, L.FieldAccess)):
+                n += 1.0
+            elif isinstance(node, L.RecordCtor):
+                n += len(node.fields)
+        return n
+
+    def _charge_scalar(self, e: L.Expr, calls: float) -> None:
+        self.res.add_scalar(self._scalar_ops(e) * calls * SCALAR_NS * 1e-9)
+
+    # -- source cardinality for For loops ----------------------------------
+    def _loop_info(
+        self, src: L.Expr, env: Dict[str, EnvEntry], calls: float
+    ) -> Tuple[float, EnvEntry, Optional[str]]:
+        """Returns (iterations per invocation, env entry for loop var, rel)."""
+        if isinstance(src, L.Input):
+            st = self.sigma.rel(src.name)
+            inner = getattr(st, "inner_rows", 0.0)
+            if inner:
+                return st.rows, RowOf(src.name), src.name
+            return st.rows, RowOf(src.name), src.name
+        if isinstance(src, L.Var):
+            ent = env.get(src.name)
+            if isinstance(ent, DictMeta):
+                return ent.card, DictRowOf(ent), None
+        if isinstance(src, (L.DictLookup, L.HintedLookup)):
+            # probe cost charged by the lookup rule; iterate inner group
+            meta = self._dict_of(src.dict, env)
+            self._lookup_cost(src, env, calls, site="probe-loop")
+            if meta is not None:
+                return meta.group_sz, InnerRowOf(meta), None
+            # lookup into an *input* dictionary (index-nested-loop join)
+            rel = src.dict.name if isinstance(src.dict, L.Input) else "?"
+            st = self.sigma.rel(rel)
+            grp = st.rows / max(1.0, self.sigma.dist(rel, ("*",)))
+            return max(1.0, grp), InnerRowOf(None, rel), None
+        if isinstance(src, L.FieldAccess) and src.name == "val":
+            base = src.rec
+            if isinstance(base, L.Var):
+                ent = env.get(base.name)
+                if isinstance(ent, RowOf):
+                    st = self.sigma.rel(ent.rel)
+                    return max(1.0, getattr(st, "inner_rows", 1.0)), InnerRowOf(
+                        None, ent.rel
+                    ), ent.rel
+                if isinstance(ent, DictRowOf):
+                    return ent.meta.group_sz, InnerRowOf(ent.meta), None
+        raise NotImplementedError(f"cannot infer loop source {src}")
+
+    def _dict_of(self, e: L.Expr, env: Dict[str, EnvEntry]) -> Optional[DictMeta]:
+        if isinstance(e, L.Var):
+            ent = env.get(e.name)
+            if isinstance(ent, DictMeta):
+                return ent
+        return None
+
+    # -- probe-side distinct & orderedness ---------------------------------
+    def _probe_stats(
+        self, keyexpr: L.Expr, env: Dict[str, EnvEntry]
+    ) -> Tuple[float, bool]:
+        """(distinct probe keys, probe sequence sorted?) for a key expression
+        evaluated inside the current innermost relation loop."""
+        for node in L.walk(keyexpr):
+            if isinstance(node, L.Var) and isinstance(env.get(node.name), RowOf):
+                rel = env[node.name].rel  # type: ignore[union-attr]
+                cols = key_columns(keyexpr, node.name)
+                dist = self.sigma.dist(rel, cols)
+                ordered = self.sigma.is_sorted_on(rel, cols)
+                return dist, ordered
+            if isinstance(node, L.Var) and isinstance(env.get(node.name), DictRowOf):
+                meta = env[node.name].meta  # type: ignore[union-attr]
+                # iterating a dictionary yields sorted keys for @st families
+                return meta.card, meta.choice.ds.startswith("st")
+        return 1.0, False
+
+    # -- Fig. 8 lookup rule -------------------------------------------------
+    def _lookup_cost(
+        self,
+        e: Union[L.DictLookup, L.HintedLookup],
+        env: Dict[str, EnvEntry],
+        calls: float,
+        site: str,
+        cond: float = 1.0,
+    ) -> None:
+        meta = self._dict_of(e.dict, env)
+        self._charge_scalar(e.keyexpr, calls)
+        if meta is None:
+            return  # input index: charged as memory traffic by the lowering
+        # vectorized engines run every physical row through the op; masked
+        # rows count as misses.  Paper mode uses the semantic count.
+        C = calls if self.vectorized else calls * cond
+        N = max(1.0, meta.card)
+        dist, probe_sorted = self._probe_stats(e.keyexpr, env)
+        sigma_hit = min(1.0, N / max(1.0, dist)) * (cond if self.vectorized else 1.0)
+        H = sigma_hit * C
+        M = C - H
+        hinted = isinstance(e, L.HintedLookup) or meta.choice.hinted
+        ordered = probe_sorted and (hinted or meta.choice.ds.startswith("ht"))
+        ds = meta.choice.ds
+        for op, n in (("lookup_hit", H), ("lookup_miss", M)):
+            if n <= 0:
+                continue
+            sec = self.delta.op_cost(ds, op, n, N, ordered)
+            self.res.add(CostItem(site, meta.name, ds, op, n, N, ordered, sec))
+
+    # -- Fig. 8 update rule --------------------------------------------------
+    def _update_cost(
+        self,
+        e: Union[L.DictUpdate, L.HintedUpdate],
+        env: Dict[str, EnvEntry],
+        calls: float,
+        site: str,
+        cond: float = 1.0,
+    ) -> None:
+        meta = self._dict_of(e.dict, env)
+        self._charge_scalar(e.keyexpr, calls)
+        self._charge_scalar(e.value, calls)
+        if meta is None:
+            raise NotImplementedError("update of non-let-bound dictionary")
+        C = calls if self.vectorized else calls * cond
+        C_sem = calls * cond  # semantic rows that actually insert/aggregate
+        dist, probe_sorted = self._probe_stats(e.keyexpr, env)
+        new = max(0.0, min(dist, C_sem) - meta.card)  # containment
+        H = C - new
+        N = meta.card + new
+        hinted = isinstance(e, L.HintedUpdate) or meta.choice.hinted
+        ordered = probe_sorted and (hinted or meta.choice.ds.startswith("ht"))
+        if self.vectorized and cond < 1.0 and not meta.choice.ds.startswith("ht"):
+            # a masked vectorized build cannot use the sorted-input fast path
+            # (dicts.base re-sorts under a valid-mask)
+            ordered = False
+        ds = meta.choice.ds
+        if self.vectorized:
+            # a vectorized build is ONE batched insert of every physical row
+            # (hash: probe rounds over the batch; sort: argsort + segment
+            # dedupe) — the paper's find-then-emplace decomposition describes
+            # per-row CPU execution, not batch execution.  The profiler
+            # measures exactly this op shape (n rows collapsing into N keys).
+            sec = self.delta.op_cost(ds, "insert", C, max(1.0, N), ordered)
+            self.res.add(
+                CostItem(site, meta.name, ds, "insert", C, max(1.0, N), ordered, sec)
+            )
+        else:
+            for op, n in (("lookup_hit", H), ("lookup_miss", new), ("insert", new)):
+                if n <= 0:
+                    continue
+                sec = self.delta.op_cost(ds, op, n, max(1.0, N), ordered)
+                self.res.add(
+                    CostItem(site, meta.name, ds, op, n, max(1.0, N), ordered, sec)
+                )
+        meta.card = N
+        meta.elems += C
+        if isinstance(e.value, L.DictNew) and e.value.key is not None:
+            meta.nested = True
+        if not ordered and not meta.choice.ds.startswith("ht"):
+            meta.build_ordered = False
+        if not probe_sorted:
+            meta.build_ordered = False
+
+    # -- main walk -----------------------------------------------------------
+    def infer(self, e: L.Expr, env: Dict[str, EnvEntry], calls: float, site: str, cond: float = 1.0) -> None:
+        if isinstance(e, (L.Const, L.Var, L.Input, L.Noop)):
+            return
+        if isinstance(e, L.Seq):
+            self.infer(e.first, env, calls, site)
+            self.infer(e.second, env, calls, site)
+            return
+        if isinstance(e, L.Let):
+            v = e.value
+            env2 = dict(env)
+            if isinstance(v, L.DictNew):
+                choice = self.gamma_dict.get(e.name) or (
+                    DictChoice(v.ds) if v.ds else DictChoice()
+                )
+                meta = DictMeta(e.name, choice)
+                self.res.dict_meta[e.name] = meta
+                env2[e.name] = meta
+            elif isinstance(v, L.RefNew):
+                env2[e.name] = RefVal()
+            elif isinstance(v, L.DictIter):
+                m = self._dict_of(v.dict, env)
+                env2[e.name] = IterOf(m) if m else ScalarVal()
+            elif isinstance(v, (L.DictLookup, L.HintedLookup)):
+                self._lookup_cost(v, env, calls, site=f"let {e.name}")
+                env2[e.name] = ScalarVal()
+            else:
+                self.infer(v, env, calls, site)
+                env2[e.name] = ScalarVal()
+            self.infer(e.body, env2, calls, site)
+            return
+        if isinstance(e, L.If):
+            # find the relation the condition ranges over for Σ_sel
+            sel = 0.5
+            for node in L.walk(e.cond):
+                if isinstance(node, L.Var) and isinstance(env.get(node.name), RowOf):
+                    sel = self.sigma.sel(e.cond, node.name, env[node.name].rel)  # type: ignore[union-attr]
+                    break
+            # contains-style guard: If(lookup != none) -> hit-rate selectivity
+            lk = _find_lookup(e.cond)
+            if lk is not None:
+                meta = self._dict_of(lk.dict, env)
+                if meta is not None:
+                    self._lookup_cost(lk, env, calls, site=f"{site}/guard", cond=cond)
+                    dist, _ = self._probe_stats(lk.keyexpr, env)
+                    sel = min(1.0, max(1.0, meta.card) / max(1.0, dist))
+            else:
+                self._charge_scalar(e.cond, calls)
+            if self.vectorized:
+                # masked rows still flow through the ops; selectivity rides
+                # in ``cond`` (affects hit rates and dictionary sizes only)
+                self.infer(e.then, env, calls, site, cond=cond * sel)
+                self.infer(e.els, env, calls, site, cond=cond * (1.0 - sel))
+            else:
+                self.infer(e.then, env, calls * sel, site, cond=cond)
+                self.infer(e.els, env, calls * (1.0 - sel), site, cond=cond)
+            return
+        if isinstance(e, L.For):
+            n, entry, _rel = self._loop_info(e.source, env, calls)
+            env2 = dict(env)
+            env2[e.var] = entry
+            self.res.add_scalar(calls * n * ITER_NS * 1e-9)
+            self.infer(e.body, env2, calls * n, site=f"{site}/for:{e.var}", cond=cond)
+            return
+        if isinstance(e, (L.DictUpdate, L.HintedUpdate)):
+            if isinstance(e.value, (L.DictLookup, L.HintedLookup)):
+                self._lookup_cost(e.value, env, calls, site=f"{site}/val", cond=cond)
+            else:
+                for sub in L.walk(e.value):
+                    if isinstance(sub, (L.DictLookup, L.HintedLookup)):
+                        self._lookup_cost(sub, env, calls, site=f"{site}/val", cond=cond)
+            self._update_cost(e, env, calls, site=f"{site}/update", cond=cond)
+            return
+        if isinstance(e, (L.DictLookup, L.HintedLookup)):
+            self._lookup_cost(e, env, calls, site=site, cond=cond)
+            return
+        if isinstance(e, L.RefAdd):
+            for sub in L.walk(e.value):
+                if isinstance(sub, (L.DictLookup, L.HintedLookup)):
+                    self._lookup_cost(sub, env, calls, site=f"{site}/refadd")
+            self._charge_scalar(e.value, calls)
+            return
+        if isinstance(e, (L.RecordCtor, L.BinOp, L.UnOp, L.FieldAccess)):
+            self._charge_scalar(e, calls)
+            return
+        if isinstance(e, (L.DictNew, L.RefNew, L.DictIter)):
+            return
+        raise TypeError(f"cost inference: unknown node {type(e)}")  # pragma: no cover
+
+
+def _find_lookup(e: L.Expr) -> Optional[Union[L.DictLookup, L.HintedLookup]]:
+    for node in L.walk(e):
+        if isinstance(node, (L.DictLookup, L.HintedLookup)):
+            return node
+    return None
+
+
+def infer_cost(
+    expr: L.Expr,
+    sigma: CardModel,
+    delta: DictCostModel,
+    gamma_dict: Optional[GammaDict] = None,
+    vectorized: bool = VECTORIZED_DEFAULT,
+) -> CostResult:
+    """Run the Fig. 8 inference over a whole program.
+
+    ``gamma_dict`` maps dictionary symbols to their (implementation, hinted)
+    choice; unmentioned symbols fall back to their ``@ds`` annotation, then to
+    ``DEFAULT_DS``.  ``vectorized=False`` recovers the paper's exact per-row
+    rules (CPU engine semantics).
+    """
+    eng = _Infer(sigma, delta, gamma_dict or {}, vectorized=vectorized)
+    eng.infer(expr, {}, calls=1.0, site="root")
+    return eng.res

@@ -1,0 +1,12 @@
+from .profiler import ProfileRow, ProfileTable, profile, profile_quick  # noqa: F401
+from .regression import MODEL_ZOO, make, with_log_features  # noqa: F401
+from .store import (  # noqa: F401
+    AllInOneCostModel,
+    LearnedCostModel,
+    install,
+    load_model,
+    load_profile,
+    save_model,
+    train,
+    train_all_in_one,
+)

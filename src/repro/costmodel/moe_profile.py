@@ -1,0 +1,96 @@
+"""Learned MoE-dispatch cost model — the paper's installation stage applied
+to the LM-side dictionary choice (DESIGN.md §5).
+
+Profiles ``positions_sort`` vs ``positions_scatter`` over (n_tokens,
+n_experts) on the current machine, fits one regressor per strategy, and
+persists them.  ``auto_dispatch`` then consults :func:`load_dispatch_model`
+— the dispatch decision is *learned per machine*, exactly like the paper's
+dictionary choice, instead of the analytic crossover fallback.
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import regression
+from .store import DEFAULT_DIR
+
+_PATH = "moe_dispatch.npz"
+
+
+@dataclass
+class DispatchModel:
+    models: Dict[str, regression.Regressor]
+
+    def choose(self, n_tokens: int, n_experts: int) -> str:
+        X = regression.with_log_features(
+            np.array([[float(n_tokens), float(n_experts)]])
+        )
+        t_sort = float(self.models["sort"].predict(X)[0])
+        t_scatter = float(self.models["scatter"].predict(X)[0])
+        return "sort" if t_sort <= t_scatter else "scatter"
+
+
+def profile_dispatch(
+    token_counts=(1024, 8192, 65536),
+    expert_counts=(8, 32, 128),
+    repeats: int = 3,
+    seed: int = 0,
+):
+    from repro.models import moe as M
+
+    rng = np.random.default_rng(seed)
+    rows = []  # (strategy, n_tokens, n_experts, seconds)
+    for n in token_counts:
+        for e in expert_counts:
+            eid = jnp.asarray(rng.integers(0, e, n).astype(np.int32))
+            for name, fn in (
+                ("sort", jax.jit(lambda x, _e=e: M.positions_sort(x, _e))),
+                ("scatter", jax.jit(lambda x, _e=e: M.positions_scatter(x, _e))),
+            ):
+                out = fn(eid)
+                jax.block_until_ready(out)
+                ts = []
+                for _ in range(repeats):
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(fn(eid))
+                    ts.append(time.perf_counter() - t0)
+                rows.append((name, n, e, float(np.median(ts))))
+    return rows
+
+
+def install_dispatch(directory: str = DEFAULT_DIR, **kw) -> DispatchModel:
+    rows = profile_dispatch(**kw)
+    models = {}
+    blob = {}
+    for strat in ("sort", "scatter"):
+        sub = [(n, e, s) for name, n, e, s in rows if name == strat]
+        X = regression.with_log_features(np.array([[n, e] for n, e, _ in sub], float))
+        y = np.array([s for _, _, s in sub])
+        m = regression.make("knn4").fit(X, y)
+        models[strat] = m
+        for k, v in m.to_state().items():
+            blob[f"{strat}::{k}"] = np.asarray(v)
+    os.makedirs(directory, exist_ok=True)
+    np.savez(os.path.join(directory, _PATH), **blob)
+    return DispatchModel(models)
+
+
+def load_dispatch_model(directory: str = DEFAULT_DIR) -> Optional[DispatchModel]:
+    path = os.path.join(directory, _PATH)
+    if not os.path.exists(path):
+        return None
+    blob = np.load(path)
+    states: Dict[str, Dict[str, np.ndarray]] = {}
+    for full in blob.files:
+        strat, k = full.split("::")
+        states.setdefault(strat, {})[k] = blob[full]
+    return DispatchModel(
+        {s: regression.KNNRegressor.from_state(st) for s, st in states.items()}
+    )

@@ -1,0 +1,209 @@
+"""Installation-stage profiler (paper §4.1 / Fig. 3 "Installation Stage").
+
+Generates the synthetic profiling workload, times every registered
+dictionary backend's operations **on the current machine**, and returns a
+training table:
+
+    features: dictionary size, number of accessed tuples, orderedness
+    label   : wall seconds for the whole operation batch
+
+ops: ``insert`` (build of n elements), ``lookup_hit`` (n present keys),
+``lookup_miss`` (n absent keys); each × ordered/unordered key sequences.
+Hash backends are profiled under both orderings too — the paper notes their
+order-insensitivity, and the learned model should *discover* that, not
+assume it.
+
+Timing protocol: jit-compiled op, one warm-up call (compile), then the
+median of ``repeats`` timed calls with ``block_until_ready``.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dicts import base as dbase
+from repro.dicts import registry
+
+DEFAULT_SIZES = (2**4, 2**6) + tuple(2**p for p in range(8, 18))  # 16 .. 128k
+QUICK_SIZES = (2**8, 2**11, 2**14)
+OPS = ("insert", "lookup_hit", "lookup_miss")
+
+
+@dataclass
+class ProfileRow:
+    ds: str
+    op: str
+    ordered: bool
+    size: int  # dictionary cardinality
+    n: int  # accessed/inserted tuples
+    seconds: float  # total batch seconds
+
+    @property
+    def per_op_ns(self) -> float:
+        return self.seconds / max(self.n, 1) * 1e9
+
+
+@dataclass
+class ProfileTable:
+    rows: List[ProfileRow] = field(default_factory=list)
+
+    def filter(self, ds=None, op=None, ordered=None) -> "ProfileTable":
+        out = [
+            r
+            for r in self.rows
+            if (ds is None or r.ds == ds)
+            and (op is None or r.op == op)
+            and (ordered is None or r.ordered == ordered)
+        ]
+        return ProfileTable(out)
+
+    def features_labels(self) -> Tuple[np.ndarray, np.ndarray]:
+        X = np.array([[r.size, r.n] for r in self.rows], float)
+        y = np.array([r.seconds for r in self.rows], float)
+        return X, y
+
+    def onehot_features_labels(self) -> Tuple[np.ndarray, np.ndarray]:
+        """'All in One Model' featurization: size, n, ordered + one-hot
+        (dictionary, op) — the paper's §6.2.1 first method."""
+        ds_names = sorted({r.ds for r in self.rows})
+        X = []
+        for r in self.rows:
+            row = [r.size, r.n, float(r.ordered)]
+            row += [1.0 if r.ds == d else 0.0 for d in ds_names]
+            row += [1.0 if r.op == o else 0.0 for o in OPS]
+            X.append(row)
+        y = np.array([r.seconds for r in self.rows], float)
+        return np.array(X, float), y
+
+    def save(self, path: str) -> None:
+        arr = np.array(
+            [
+                (r.ds, r.op, int(r.ordered), r.size, r.n, r.seconds)
+                for r in self.rows
+            ],
+            dtype=object,
+        )
+        np.save(path, arr, allow_pickle=True)
+
+    @classmethod
+    def load(cls, path: str) -> "ProfileTable":
+        arr = np.load(path, allow_pickle=True)
+        return cls(
+            [
+                ProfileRow(str(ds), str(op), bool(int(o)), int(s), int(n), float(sec))
+                for ds, op, o, s, n, sec in arr
+            ]
+        )
+
+
+# ---------------------------------------------------------------------------
+# timing helpers
+# ---------------------------------------------------------------------------
+
+
+def _time_fn(fn, *args, repeats: int = 3) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)  # warm-up + compile
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def _capacity_for(ds: str, size: int) -> int:
+    cap = dbase.next_pow2(max(2 * size, 256))
+    return cap
+
+
+# ---------------------------------------------------------------------------
+# the profiling sweep
+# ---------------------------------------------------------------------------
+
+
+def profile(
+    backends: Optional[Sequence[str]] = None,
+    sizes: Sequence[int] = DEFAULT_SIZES,
+    lookup_ratios: Sequence[float] = (0.25, 1.0, 4.0),
+    repeats: int = 3,
+    seed: int = 0,
+    verbose: bool = False,
+) -> ProfileTable:
+    backends = list(backends or registry.names())
+    rng = np.random.default_rng(seed)
+    table = ProfileTable()
+
+    for size in sizes:
+        cap = None
+        # distinct int keys for the dictionary, plus disjoint miss keys
+        universe = rng.choice(np.arange(1, 8 * size, dtype=np.int32), 2 * size, replace=False)
+        present, absent = universe[:size], universe[size:]
+        vals = rng.normal(size=(size, 1)).astype(np.float32)
+        for ds in backends:
+            mod = registry.get(ds)
+            cap = _capacity_for(ds, size)
+            for ordered in (False, True):
+                ks = np.sort(present) if ordered else present
+                vs = vals  # value order irrelevant for timing
+                jks, jvs = jnp.asarray(ks), jnp.asarray(vs)
+
+                # ---- insert: distinct batch AND duplicate-heavy batches
+                # (bag aggregation: n_ops rows collapsing into `size` keys —
+                # hash scatter conflicts degrade here, the model must see it)
+                build = jax.jit(
+                    lambda k, v, _m=mod, _c=cap, _o=ordered: _m.build(
+                        k, v, _c, assume_sorted=_o
+                    )
+                )
+                sec = _time_fn(build, jks, jvs, repeats=repeats)
+                table.rows.append(
+                    ProfileRow(ds, "insert", ordered, size, size, sec)
+                )
+                dups = (4, 16, 64) if size > 256 else (4, 16, 64, 1024, 8192)
+                for dup in dups:
+                    n_dup = min(size * dup, 2**18)
+                    dk = rng.choice(present, n_dup, replace=True)
+                    if ordered:
+                        dk = np.sort(dk)
+                    dv = rng.normal(size=(n_dup, 1)).astype(np.float32)
+                    sec_d = _time_fn(
+                        build, jnp.asarray(dk), jnp.asarray(dv), repeats=repeats
+                    )
+                    table.rows.append(
+                        ProfileRow(ds, "insert", ordered, size, n_dup, sec_d)
+                    )
+
+                # ---- lookups against the built table
+                t = build(jks, jvs)
+                for ratio in lookup_ratios:
+                    n = max(8, int(size * ratio))
+                    hit_q = rng.choice(present, n, replace=True)
+                    miss_q = rng.choice(absent, n, replace=True)
+                    if ordered:
+                        hit_q, miss_q = np.sort(hit_q), np.sort(miss_q)
+                    lookup = jax.jit(lambda tt, q, _m=mod: _m.lookup(tt, q))
+                    sec_hit = _time_fn(lookup, t, jnp.asarray(hit_q), repeats=repeats)
+                    sec_miss = _time_fn(lookup, t, jnp.asarray(miss_q), repeats=repeats)
+                    table.rows.append(
+                        ProfileRow(ds, "lookup_hit", ordered, size, n, sec_hit)
+                    )
+                    table.rows.append(
+                        ProfileRow(ds, "lookup_miss", ordered, size, n, sec_miss)
+                    )
+            if verbose:
+                print(f"profiled {ds} size={size}")
+    return table
+
+
+def profile_quick(**kw) -> ProfileTable:
+    kw.setdefault("sizes", QUICK_SIZES)
+    kw.setdefault("lookup_ratios", (1.0,))
+    kw.setdefault("repeats", 2)
+    return profile(**kw)

@@ -1,0 +1,156 @@
+"""Learned dictionary cost model Δ + its on-disk store.
+
+The paper's best method — **individual models with feature engineering** —
+is the default: one regressor per (backend, op, orderedness) trained on
+``[size, n, log2 size, log2 n]`` features.  The store persists both the raw
+profiling table and the fitted model states to ``var/costmodel/`` so the
+installation stage runs once per machine.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.cost import AnalyticCostModel
+from . import regression
+from .profiler import OPS, ProfileTable, profile, profile_quick
+
+DEFAULT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "var", "costmodel")
+
+Key = Tuple[str, str, bool]  # (ds, op, ordered)
+
+
+@dataclass
+class LearnedCostModel:
+    """Δ implementation backed by per-(ds, op, ordered) regressors."""
+
+    models: Dict[Key, regression.Regressor]
+    model_name: str = "knn4"
+    log_features: bool = True  # featurization used at fit time
+
+    def op_cost(self, ds: str, op: str, n: float, size: float, ordered: bool) -> float:
+        if n <= 0:
+            return 0.0
+        key = (ds, op, bool(ordered))
+        if key not in self.models:
+            # backend profiled only without ordering distinction, or unseen:
+            key = (ds, op, False)
+        if key not in self.models:
+            return AnalyticCostModel().op_cost(ds, op, n, size, ordered)
+        X = np.array([[max(size, 1.0), max(n, 1.0)]], float)
+        if self.log_features:
+            X = regression.with_log_features(X)
+        sec = float(self.models[key].predict(X)[0])
+        # profiling covers n in [size/4, 4·size]; extrapolate linearly in n
+        # beyond the profiled ratio range (costs are per-batch)
+        return max(sec, 0.0)
+
+
+def train(
+    table: ProfileTable, model_name: str = "knn4", log_features: bool = True
+) -> LearnedCostModel:
+    models: Dict[Key, regression.Regressor] = {}
+    combos = {(r.ds, r.op, r.ordered) for r in table.rows}
+    for ds, op, ordered in sorted(combos):
+        sub = table.filter(ds=ds, op=op, ordered=ordered)
+        X, y = sub.features_labels()
+        if log_features:
+            X = regression.with_log_features(X)
+        m = regression.make(model_name)
+        m.fit(X, y)
+        models[(ds, op, ordered)] = m
+    return LearnedCostModel(models, model_name, log_features)
+
+
+def train_all_in_one(
+    table: ProfileTable, model_name: str = "knn4"
+) -> "AllInOneCostModel":
+    X, y = table.onehot_features_labels()
+    Xl = np.concatenate([X[:, :2], np.log2(np.maximum(X[:, :2], 1.0)), X[:, 2:]], axis=1)
+    m = regression.make(model_name)
+    m.fit(Xl, y)
+    ds_names = sorted({r.ds for r in table.rows})
+    return AllInOneCostModel(m, ds_names)
+
+
+@dataclass
+class AllInOneCostModel:
+    """The paper's §6.2.1 'All in One Model' baseline featurization."""
+
+    model: regression.Regressor
+    ds_names: Sequence[str]
+
+    def op_cost(self, ds: str, op: str, n: float, size: float, ordered: bool) -> float:
+        if n <= 0:
+            return 0.0
+        row = [max(size, 1.0), max(n, 1.0)]
+        row += [np.log2(row[0]), np.log2(row[1]), float(ordered)]
+        row += [1.0 if ds == d else 0.0 for d in self.ds_names]
+        row += [1.0 if op == o else 0.0 for o in OPS]
+        return max(float(self.model.predict(np.array([row]))[0]), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# persistence
+# ---------------------------------------------------------------------------
+
+
+def _key_str(key: Key) -> str:
+    return f"{key[0]}|{key[1]}|{int(key[2])}"
+
+
+def save_model(model: LearnedCostModel, directory: str = DEFAULT_DIR) -> None:
+    os.makedirs(directory, exist_ok=True)
+    blob: Dict[str, np.ndarray] = {"__model_name__": np.array(model.model_name)}
+    for key, reg in model.models.items():
+        for sname, arr in reg.to_state().items():
+            blob[f"{_key_str(key)}::{sname}"] = np.asarray(arr)
+    np.savez(os.path.join(directory, "delta.npz"), **blob)
+
+
+def load_model(directory: str = DEFAULT_DIR) -> Optional[LearnedCostModel]:
+    path = os.path.join(directory, "delta.npz")
+    if not os.path.exists(path):
+        return None
+    blob = np.load(path, allow_pickle=False)
+    model_name = str(blob["__model_name__"])
+    states: Dict[Key, Dict[str, np.ndarray]] = {}
+    for full in blob.files:
+        if full == "__model_name__":
+            continue
+        keypart, sname = full.split("::")
+        ds, op, o = keypart.split("|")
+        key = (ds, op, bool(int(o)))
+        states.setdefault(key, {})[sname] = blob[full]
+    cls = regression.MODEL_ZOO[model_name]
+    models = {k: cls.from_state(s) for k, s in states.items()}
+    return LearnedCostModel(models, model_name)
+
+
+def install(
+    directory: str = DEFAULT_DIR,
+    quick: bool = False,
+    model_name: str = "knn4",
+    verbose: bool = False,
+) -> LearnedCostModel:
+    """The full installation stage: profile + train + persist.  Reuses an
+    existing installation unless absent."""
+    existing = load_model(directory)
+    if existing is not None:
+        return existing
+    table = profile_quick(verbose=verbose) if quick else profile(verbose=verbose)
+    os.makedirs(directory, exist_ok=True)
+    table.save(os.path.join(directory, "profile.npy"))
+    model = train(table, model_name=model_name)
+    save_model(model, directory)
+    return model
+
+
+def load_profile(directory: str = DEFAULT_DIR) -> Optional[ProfileTable]:
+    path = os.path.join(directory, "profile.npy")
+    if not os.path.exists(path):
+        return None
+    return ProfileTable.load(path)

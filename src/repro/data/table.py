@@ -1,0 +1,126 @@
+"""Column-store tables + statistics collection.
+
+A ``Table`` is a dict of equal-length jnp columns plus an optional selection
+mask (static-shape filtering: rows are never compacted, only masked — the
+vectorized-engine discipline).  String columns are dictionary-encoded to
+int32 at load time.  ``collect_stats`` builds the Σ statistics the cost
+model consumes (row counts, per-column distinct/min/max, physical sort
+order) from the actual data — exact stats, so cost-model experiments isolate
+Δ quality from cardinality-estimation error, like the paper's setup.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Dict, Iterable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cardinality import CardModel, ColumnStats, RelStats
+from repro.dicts import base as dbase
+
+
+@dataclass
+class Table:
+    columns: Dict[str, jax.Array]
+    nrows: int
+    mask: Optional[jax.Array] = None  # bool [nrows]; None = all live
+    sorted_on: Tuple[str, ...] = ()
+
+    def col(self, name: str) -> jax.Array:
+        return self.columns[name]
+
+    def names(self) -> Tuple[str, ...]:
+        return tuple(self.columns)
+
+    def live_mask(self) -> jax.Array:
+        if self.mask is None:
+            return jnp.ones((self.nrows,), bool)
+        return self.mask
+
+    def with_mask(self, mask: jax.Array) -> "Table":
+        new = mask if self.mask is None else (self.mask & mask)
+        return replace(self, mask=new)
+
+    def multiplicity(self) -> jax.Array:
+        """Bag multiplicity column (1.0 for live rows, 0.0 for masked)."""
+        return self.live_mask().astype(jnp.float32)
+
+
+def from_numpy(cols: Dict[str, np.ndarray], sorted_on: Sequence[str] = ()) -> Table:
+    n = len(next(iter(cols.values())))
+    out = {}
+    for k, v in cols.items():
+        v = np.asarray(v)
+        if v.dtype.kind in "iu":
+            out[k] = jnp.asarray(v.astype(np.int32))
+        elif v.dtype.kind == "f":
+            out[k] = jnp.asarray(v.astype(np.float32))
+        elif v.dtype.kind in "US O":  # strings -> dictionary-encode
+            _, codes = np.unique(v, return_inverse=True)
+            out[k] = jnp.asarray(codes.astype(np.int32))
+        else:  # pragma: no cover
+            raise TypeError(f"unsupported column dtype {v.dtype} for {k}")
+        assert len(v) == n, f"ragged column {k}"
+    return Table(out, n, sorted_on=tuple(sorted_on))
+
+
+# ---------------------------------------------------------------------------
+# key packing: compound keys -> single int32
+# ---------------------------------------------------------------------------
+
+
+def pack_keys(table: Table, cols: Sequence[str], domains: Optional[Dict[str, int]] = None) -> jax.Array:
+    """Pack the named columns into one int32 key.  Uses exact arithmetic
+    packing when the product of domains fits 31 bits (collision-free),
+    otherwise falls back to hash mixing (collision probability ~ n²/2³¹ —
+    acceptable for grouping, documented for joins)."""
+    if len(cols) == 1:
+        return table.col(cols[0]).astype(jnp.int32)
+    doms = []
+    for c in cols:
+        d = (domains or {}).get(c)
+        if d is None:
+            d = int(np.asarray(jnp.max(table.col(c)))) + 1
+        doms.append(max(d, 1))
+    total = 1
+    for d in doms:
+        total *= d
+    if total < 2**31:
+        key = jnp.zeros((table.nrows,), jnp.int32)
+        for c, d in zip(cols, doms):
+            key = key * jnp.int32(d) + table.col(c).astype(jnp.int32)
+        return key
+    # hash mixing fallback
+    key = jnp.zeros((table.nrows,), jnp.uint32)
+    for c in cols:
+        key = dbase._mix(key.astype(jnp.int32) ^ table.col(c).astype(jnp.int32), dbase._H1)
+    return (key & jnp.uint32(0x7FFFFFFF)).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Σ statistics from real data
+# ---------------------------------------------------------------------------
+
+
+def table_stats(t: Table) -> RelStats:
+    cols = {}
+    for name, arr in t.columns.items():
+        a = np.asarray(arr)
+        if t.mask is not None:
+            a = a[np.asarray(t.mask)]
+        if len(a) == 0:
+            cols[name] = ColumnStats(distinct=0, lo=0.0, hi=0.0)
+            continue
+        cols[name] = ColumnStats(
+            distinct=float(len(np.unique(a))),
+            lo=float(a.min()),
+            hi=float(a.max()),
+        )
+    rows = float(t.nrows if t.mask is None else int(np.asarray(t.mask).sum()))
+    return RelStats(rows=rows, columns=cols, sorted_on=t.sorted_on)
+
+
+def collect_stats(tables: Dict[str, Table]) -> CardModel:
+    return CardModel({name: table_stats(t) for name, t in tables.items()})

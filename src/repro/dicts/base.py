@@ -1,0 +1,323 @@
+"""Dictionary runtime — the paper's Fig. 4 API re-derived for TPU execution.
+
+CPU DBFlex plugs in pointer-based C++ containers; on a TPU every dictionary
+operation is a *whole-batch* vector operation over fixed-capacity
+struct-of-array state.  All backends implement:
+
+    build(keys, vals, capacity, **hints)      -> table (a pytree)
+    lookup(table, queries, **hints)           -> (vals[n, V], found[n])
+    update_add(table, keys, vals, **hints)    -> table'
+    items(table)                              -> (keys[C], vals[C, V], valid[C])
+    size(table)                               -> scalar int32
+
+Conventions
+-----------
+* keys are ``int32``; ``EMPTY`` (int32 min) and ``PAD`` (int32 max) are
+  reserved sentinels (compound keys are packed upstream, ``data.table``).
+* values are ``float32 [*, V]`` with static arity V ≥ 1; bag multiplicities
+  are just a V=1 value column, exactly the paper's ``row -> multiplicity``.
+* duplicate keys in a batch **aggregate** (sum), matching LLQL's ``+=``
+  semantics — an insert is the paper's find-then-emplace.
+* everything is jit-/vmap-/shard_map-compatible; capacities are static.
+
+The generic round-based insertion in this module is shared by both hash
+families: a probing scheme is just a function ``slot(keys, t)`` giving the
+t-th probe position — linear probing and two-choice bucketized probing are
+two instances (see ht_linear / ht_twochoice).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# Plain Python ints: safe to close over inside Pallas kernels (no captured
+# tracers), and weak-typed in jnp expressions.
+EMPTY = -(2**31)  # hash-table empty slot
+PAD = 2**31 - 1  # sorted-array tail padding
+
+# Knuth multiplicative hashing constants (distinct streams).
+_H1 = 2654435761
+_H2 = 2246822519
+
+
+def _mix(x: jax.Array, mult: int) -> jax.Array:
+    h = x.astype(jnp.uint32) * jnp.uint32(mult)
+    h ^= h >> 15
+    h *= jnp.uint32(2654435769)
+    h ^= h >> 13
+    return h
+
+
+def hash1(keys: jax.Array, capacity: int) -> jax.Array:
+    return (_mix(keys, _H1) & jnp.uint32(capacity - 1)).astype(jnp.int32)
+
+
+def hash2(keys: jax.Array, capacity: int) -> jax.Array:
+    return (_mix(keys, _H2) & jnp.uint32(capacity - 1)).astype(jnp.int32)
+
+
+class HashTable(NamedTuple):
+    """Open-addressing hash table (both probing families)."""
+
+    keys: jax.Array  # [C] int32, EMPTY where unoccupied
+    vals: jax.Array  # [C, V] float32
+    max_t: jax.Array  # scalar int32: longest probe distance used at build
+
+    @property
+    def capacity(self) -> int:
+        return self.keys.shape[0]
+
+
+ProbeFn = Callable[[jax.Array, jax.Array], jax.Array]
+# (keys[n], t scalar) -> slot[n]
+
+
+# ---------------------------------------------------------------------------
+# Generic round-based vectorized insertion
+# ---------------------------------------------------------------------------
+
+
+def generic_insert(
+    table: HashTable,
+    ks: jax.Array,
+    vs: jax.Array,
+    probe: ProbeFn,
+    max_probes: int,
+    valid: Optional[jax.Array] = None,
+) -> HashTable:
+    """Insert/aggregate a batch.  Each round is one full-width vector step:
+
+      1. gather the current slot's key for every pending element;
+      2. elements whose key is already there scatter-add their value;
+      3. elements facing EMPTY race to claim it (deterministic scatter-max
+         arbitration); winners write key + value;
+      4. after winners are written, losers re-check the slot (this catches
+         duplicate keys that raced for the same empty slot);
+      5. survivors advance to their next probe position.
+
+    Rounds ≈ longest probe chain; every step is gather/scatter over the whole
+    batch — the TPU-shaped replacement for per-element pointer chasing.
+    """
+    n = ks.shape[0]
+    C = table.capacity
+    if vs.ndim == 1:
+        vs = vs[:, None]
+    ids = jnp.arange(n, dtype=jnp.int32)
+
+    def round_body(state):
+        tk, tv, t, pending, max_t = state
+        slot = probe(ks, t)
+        cur = tk[slot]
+        # (2) aggregate into existing key
+        hit = pending & (cur == ks)
+        # (3) claim empty slots — scatter-max arbitration on element id
+        want = pending & (cur == EMPTY)
+        claim = jnp.full((C,), -1, jnp.int32).at[
+            jnp.where(want, slot, C)
+        ].max(ids, mode="drop")
+        won = want & (claim[slot] == ids)
+        tk = tk.at[jnp.where(won, slot, C)].set(ks, mode="drop")
+        # (4) losers re-check after winners wrote (duplicate-key race)
+        cur2 = tk[slot]
+        hit2 = pending & ~hit & ~won & (cur2 == ks)
+        write = hit | won | hit2
+        tv = tv.at[jnp.where(write, slot, C)].add(vs, mode="drop")
+        new_pending = pending & ~write
+        max_t = jnp.where(jnp.any(write), jnp.maximum(max_t, t), max_t)
+        return tk, tv, t + 1, new_pending, max_t
+
+    def cond(state):
+        _, _, t, pending, _ = state
+        return jnp.any(pending) & (t < max_probes)
+
+    pending0 = jnp.ones((n,), bool) if valid is None else valid.astype(bool)
+    tk, tv, _, pending, max_t = lax.while_loop(
+        cond,
+        round_body,
+        (table.keys, table.vals, jnp.int32(0), pending0, table.max_t),
+    )
+    # Overflow (load factor too high / max_probes exceeded) is a sizing bug in
+    # the lowering; callers can assert via `hash_size(t) == n_distinct`.
+    del pending
+    return HashTable(tk, tv, max_t)
+
+
+def generic_lookup(
+    table: HashTable,
+    qs: jax.Array,
+    probe: ProbeFn,
+    max_probes: int,
+    valid: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Batch lookup: probe until key found or EMPTY reached (miss).  The probe
+    bound is ``min(max_probes, build max_t + 1)`` — two-choice tables thus get
+    their fast-miss property automatically."""
+    n = qs.shape[0]
+
+    def round_body(state):
+        t, active, found_slot = state
+        slot = probe(qs, t)
+        cur = table.keys[slot]
+        hit = active & (cur == qs)
+        miss = active & (cur == EMPTY)
+        found_slot = jnp.where(hit, slot, found_slot)
+        active = active & ~hit & ~miss
+        return t + 1, active, found_slot
+
+    def cond(state):
+        t, active, _ = state
+        return jnp.any(active) & (t <= table.max_t) & (t < max_probes)
+
+    _, _, found_slot = lax.while_loop(
+        cond,
+        round_body,
+        (jnp.int32(0), jnp.ones((n,), bool), jnp.full((n,), -1, jnp.int32)),
+    )
+    found = found_slot >= 0
+    if valid is not None:
+        found = found & valid.astype(bool)
+    vals = table.vals[jnp.where(found, found_slot, 0)]
+    vals = jnp.where(found[:, None], vals, 0.0)
+    return vals, found
+
+
+def hash_items(table: HashTable) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    valid = table.keys != EMPTY
+    return table.keys, table.vals, valid
+
+
+def hash_size(table: HashTable) -> jax.Array:
+    return jnp.sum(table.keys != EMPTY).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Sorted-array machinery shared by st_sorted / st_blocked
+# ---------------------------------------------------------------------------
+
+
+class SortedTable(NamedTuple):
+    keys: jax.Array  # [C] int32 ascending, PAD tail
+    vals: jax.Array  # [C, V] float32 (zeros on pad rows)
+    n: jax.Array  # scalar int32 — number of live (unique) keys
+    block_max: jax.Array  # [NB] int32 per-block max (st_blocked index); [0] dummy
+
+
+def dedupe_sorted(
+    ks: jax.Array, vs: jax.Array, capacity: int
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Aggregate duplicate (sorted) keys; returns padded unique arrays."""
+    n = ks.shape[0]
+    if vs.ndim == 1:
+        vs = vs[:, None]
+    V = vs.shape[1]
+    live = ks != PAD
+    head = jnp.concatenate([jnp.ones((1,), bool), ks[1:] != ks[:-1]]) & live
+    seg = jnp.cumsum(head.astype(jnp.int32)) - 1  # [n] segment id per element
+    seg = jnp.where(live, seg, capacity)  # route pads off-table
+    uk = jnp.full((capacity,), PAD, jnp.int32).at[seg].min(
+        jnp.where(live, ks, PAD), mode="drop"
+    )
+    uv = jnp.zeros((capacity, V), vs.dtype).at[seg].add(
+        jnp.where(live[:, None], vs, 0.0), mode="drop"
+    )
+    n_unique = jnp.sum(head).astype(jnp.int32)
+    return uk, uv, n_unique
+
+
+def build_sorted(
+    ks: jax.Array,
+    vs: jax.Array,
+    capacity: int,
+    *,
+    assume_sorted: bool = False,
+    block: int = 0,
+    valid: Optional[jax.Array] = None,
+) -> SortedTable:
+    """Sort (skipped when the input is known ordered — the paper's hinted
+    insert / O(n) build), aggregate duplicates, pad to capacity."""
+    if vs.ndim == 1:
+        vs = vs[:, None]
+    if valid is not None:
+        ks = jnp.where(valid.astype(bool), ks, PAD)  # pads drop in dedupe
+    if not assume_sorted or valid is not None:
+        perm = jnp.argsort(ks)
+        ks, vs = ks[perm], vs[perm]
+    uk, uv, n = dedupe_sorted(ks, vs, capacity)
+    bm = _block_index(uk, block)
+    return SortedTable(uk, uv, n, bm)
+
+
+def _block_index(keys: jax.Array, block: int) -> jax.Array:
+    if block <= 0:
+        return jnp.full((1,), PAD, jnp.int32)
+    C = keys.shape[0]
+    nb = max(1, C // block)
+    usable = nb * block
+    return jnp.max(keys[:usable].reshape(nb, block), axis=1)
+
+
+def sorted_lookup(
+    table: SortedTable, qs: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Vectorized binary search (PAD tail keeps searchsorted in-range)."""
+    idx = jnp.searchsorted(table.keys, qs, side="left")
+    idx = jnp.minimum(idx, table.keys.shape[0] - 1)
+    found = table.keys[idx] == qs
+    vals = jnp.where(found[:, None], table.vals[idx], 0.0)
+    return vals, found
+
+
+def blocked_lookup(
+    table: SortedTable, qs: jax.Array, block: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Two-level search: tiny block-max index first (VMEM-resident on TPU),
+    then a within-block search — the flattened B+-tree of DESIGN.md."""
+    nb = table.block_max.shape[0]
+    blk = jnp.searchsorted(table.block_max, qs, side="left")
+    blk = jnp.minimum(blk, nb - 1)
+    base = blk * block
+    # within-block: gather the block row per query and count keys < q
+    offs = jnp.arange(block, dtype=jnp.int32)
+    rows = table.keys[base[:, None] + offs[None, :]]  # [n, block]
+    lt = jnp.sum((rows < qs[:, None]).astype(jnp.int32), axis=1)
+    idx = jnp.minimum(base + lt, table.keys.shape[0] - 1)
+    found = table.keys[idx] == qs
+    vals = jnp.where(found[:, None], table.vals[idx], 0.0)
+    return vals, found
+
+
+def merge_update_sorted(
+    table: SortedTable,
+    ks: jax.Array,
+    vs: jax.Array,
+    *,
+    assume_sorted: bool = False,
+    block: int = 0,
+) -> SortedTable:
+    """``update_add`` for sorted dictionaries: merge batch into table.
+
+    Capacity is static; the lowering sizes tables so live + batch unique keys
+    always fit (overflow keys would land on the PAD tail and be dropped)."""
+    if vs.ndim == 1:
+        vs = vs[:, None]
+    cat_k = jnp.concatenate([table.keys, ks])
+    cat_v = jnp.concatenate([table.vals, jnp.broadcast_to(vs, (*vs.shape,))])
+    perm = jnp.argsort(cat_k)  # pads (PAD=max) sort to the tail
+    uk, uv, n = dedupe_sorted(cat_k[perm], cat_v[perm], table.keys.shape[0])
+    return SortedTable(uk, uv, n, _block_index(uk, block))
+
+
+def sorted_items(table: SortedTable) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    valid = table.keys != PAD
+    return table.keys, table.vals, valid
+
+
+def next_pow2(x: int) -> int:
+    c = 1
+    while c < x:
+        c <<= 1
+    return c

@@ -1,0 +1,70 @@
+"""``ht_linear`` — open-addressing hash dictionary with linear probing.
+
+The TPU stand-in for the paper's ``unordered_map``/robin-hood family: one
+multiplicative hash, probe sequence ``h(k), h(k)+1, ...`` (mod C).  Probing
+is whole-batch vectorized (see ``base.generic_insert``); no displacement
+heuristics (no pointer-level analogue on TPU — DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import base
+from .base import EMPTY, HashTable
+
+MAX_PROBES = 128
+
+
+def _probe(capacity: int):
+    def fn(ks: jax.Array, t: jax.Array) -> jax.Array:
+        return (base.hash1(ks, capacity) + t) & (capacity - 1)
+
+    return fn
+
+
+def empty(capacity: int, arity: int = 1) -> HashTable:
+    return HashTable(
+        keys=jnp.full((capacity,), EMPTY, jnp.int32),
+        vals=jnp.zeros((capacity, arity), jnp.float32),
+        max_t=jnp.int32(0),
+    )
+
+
+def build(
+    ks: jax.Array, vs: jax.Array, capacity: int, *, assume_sorted: bool = False,
+    valid=None,
+) -> HashTable:
+    del assume_sorted  # hash tables are order-insensitive (paper §4.1)
+    arity = 1 if vs.ndim == 1 else vs.shape[-1]
+    return base.generic_insert(
+        empty(capacity, arity), ks, vs, _probe(capacity), MAX_PROBES, valid=valid
+    )
+
+
+def update_add(
+    table: HashTable, ks: jax.Array, vs: jax.Array, *, assume_sorted: bool = False,
+    valid=None,
+) -> HashTable:
+    del assume_sorted
+    return base.generic_insert(
+        table, ks, vs, _probe(table.capacity), MAX_PROBES, valid=valid
+    )
+
+
+def lookup(
+    table: HashTable, qs: jax.Array, *, assume_sorted: bool = False, valid=None
+) -> Tuple[jax.Array, jax.Array]:
+    del assume_sorted
+    return base.generic_lookup(
+        table, qs, _probe(table.capacity), MAX_PROBES, valid=valid
+    )
+
+
+items = base.hash_items
+size = base.hash_size
+FAMILY = "hash"
+SUPPORTS_HINTS = False

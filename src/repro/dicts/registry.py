@@ -1,0 +1,44 @@
+"""Dictionary-implementation registry — the paper's §2.3 extension point.
+
+A backend is any module exposing ``build / lookup / update_add / items /
+size`` plus ``FAMILY`` and ``SUPPORTS_HINTS``.  Registering it here makes it
+(1) a synthesis candidate, (2) a profiling target at installation time, and
+(3) available to the lowering — no other code changes, exactly the paper's
+"provide an implementation and register it" workflow.
+"""
+from __future__ import annotations
+
+from types import ModuleType
+from typing import Dict, Tuple
+
+from . import ht_linear, ht_twochoice, st_blocked, st_sorted
+
+_REGISTRY: Dict[str, ModuleType] = {}
+
+
+def register(name: str, mod: ModuleType) -> None:
+    for attr in ("build", "lookup", "update_add", "items", "size", "FAMILY"):
+        assert hasattr(mod, attr), f"backend {name} lacks {attr}"
+    _REGISTRY[name] = mod
+
+
+def get(name: str) -> ModuleType:
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown dictionary implementation {name!r}; known: {sorted(_REGISTRY)}"
+        )
+    return _REGISTRY[name]
+
+
+def names() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def family(name: str) -> str:
+    return get(name).FAMILY
+
+
+register("ht_linear", ht_linear)
+register("ht_twochoice", ht_twochoice)
+register("st_sorted", st_sorted)
+register("st_blocked", st_blocked)

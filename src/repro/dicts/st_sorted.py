@@ -1,0 +1,56 @@
+"""``st_sorted`` — sorted-array dictionary (the paper's ``boost_flat_map``).
+
+Build = sort + duplicate aggregation; the sort is **skipped when the input is
+known ordered** (``assume_sorted=True``) — that is the paper's hinted-insert
+O(n·log n) → O(n) win, statically decided by the synthesizer from Σ's
+orderedness info.  Lookup = vectorized binary search; when the *probe*
+sequence is ordered the ops layer routes to the merge-lookup Pallas kernel
+(amortized O(1) per probe — the hinted-lookup analogue, DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+from . import base
+from .base import SortedTable
+
+
+def build(
+    ks: jax.Array, vs: jax.Array, capacity: int, *, assume_sorted: bool = False,
+    valid=None,
+) -> SortedTable:
+    return base.build_sorted(
+        ks, vs, capacity, assume_sorted=assume_sorted, block=0, valid=valid
+    )
+
+
+def update_add(
+    table: SortedTable, ks: jax.Array, vs: jax.Array, *, assume_sorted: bool = False
+) -> SortedTable:
+    del assume_sorted  # merge re-sorts the concatenation; pads go to the tail
+    return base.merge_update_sorted(table, ks, vs, block=0)
+
+
+def lookup(
+    table: SortedTable, qs: jax.Array, *, assume_sorted: bool = False, valid=None
+) -> Tuple[jax.Array, jax.Array]:
+    # assume_sorted enables the merge kernel in ops.py; semantics identical.
+    vals, found = base.sorted_lookup(table, qs)
+    if valid is not None:
+        import jax.numpy as jnp
+        found = found & valid.astype(bool)
+        vals = jnp.where(found[:, None], vals, 0.0)
+    return vals, found
+
+
+items = base.sorted_items
+
+
+def size(table: SortedTable) -> jax.Array:
+    return table.n
+
+
+FAMILY = "sort"
+SUPPORTS_HINTS = True

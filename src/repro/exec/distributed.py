@@ -1,0 +1,232 @@
+"""Distributed query execution — the paper's operators at pod scale.
+
+DBFlex is a single-core engine; this module is the scale-out adaptation
+(DESIGN.md §4).  Relations are sharded along a mesh axis; every dictionary
+becomes a *per-shard* dictionary plus an exchange:
+
+* ``dist_groupby``  — local pre-aggregation (dictionary choice per shard,
+  exactly the single-node cost-model decision) → hash-shuffle of the partial
+  aggregates → local final aggregation.  Pre-aggregation is the classic
+  combiner optimization: shuffle volume is O(groups/shard), not O(rows).
+* ``dist_fk_join``  — shuffle build rows (key + payload) to their hash
+  shard, build per-shard dictionaries, route probes, answer, route back.
+  One all-to-all each way with statically-shaped bucket buffers.
+
+The hash route uses the same multiplicative mix as the dictionaries, so the
+exchange is exactly "partition by hash prefix" — each shard's dictionary is
+VMEM-sizable, which is what makes the Pallas probe kernels applicable
+per-shard (the radix-partitioning story of DESIGN.md §2).
+
+All functions run inside ``shard_map`` over a named mesh axis (or axis
+tuple: pass ``("pod", "data")`` for hierarchical two-level meshes — XLA
+lowers the combined-axis all_to_all to the hierarchical schedule).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.dicts import base as dbase
+from repro.dicts import registry
+
+Axis = Union[str, Tuple[str, ...]]
+
+
+def _axis_size(axis: Axis) -> jax.Array:
+    if isinstance(axis, str):
+        return lax.axis_size(axis)
+    n = 1
+    for a in axis:
+        n = n * lax.axis_size(a)
+    return n
+
+
+def _axis_index(axis: Axis) -> jax.Array:
+    return lax.axis_index(axis)
+
+
+def _route(
+    keys: jax.Array, n_sh: int, *payloads: jax.Array
+) -> Tuple[jax.Array, ...]:
+    """Bucket rows by hash(key) % n_sh into a [n_sh, n_local] send buffer.
+    Returns (buf_keys, *buf_payloads, order, sorted_tgt, pos) — the order
+    metadata lets callers route responses back to original positions."""
+    n = keys.shape[0]
+    tgt = (dbase._mix(keys, dbase._H2) % jnp.uint32(n_sh)).astype(jnp.int32)
+    # dead rows (PAD keys) still get routed; they simply never match
+    order = jnp.argsort(tgt)
+    st = tgt[order]
+    start = jnp.searchsorted(st, jnp.arange(n_sh, dtype=jnp.int32), side="left")
+    pos = jnp.arange(n, dtype=jnp.int32) - start[st]
+    buf_k = jnp.full((n_sh, n), dbase.PAD, keys.dtype).at[st, pos].set(keys[order])
+    outs = [buf_k]
+    for p in payloads:
+        shape = (n_sh, n) + p.shape[1:]
+        buf = jnp.zeros(shape, p.dtype).at[st, pos].set(p[order])
+        outs.append(buf)
+    return (*outs, order, st, pos)
+
+
+def _a2a(x: jax.Array, axis: Axis) -> jax.Array:
+    return lax.all_to_all(x, axis, split_axis=0, concat_axis=0, tiled=False)
+
+
+# ---------------------------------------------------------------------------
+# distributed group-by
+# ---------------------------------------------------------------------------
+
+
+def dist_groupby_shard(
+    keys: jax.Array,  # [n_local] int32 (PAD = dead row)
+    vals: jax.Array,  # [n_local, V]
+    *,
+    axis: Axis,
+    ds: str,
+    local_capacity: int,
+    final_capacity: int,
+    assume_sorted: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-shard body (call inside shard_map).  Returns this shard's slice of
+    the result dictionary as dense arrays (keys, vals, valid)."""
+    mod = registry.get(ds)
+    n_sh = _axis_size(axis)
+    # 1. local pre-aggregation (the combiner) — the paper's dictionary choice
+    valid = keys != dbase.PAD
+    t = mod.build(keys, vals, local_capacity, valid=valid, assume_sorted=assume_sorted)
+    lk, lv, lvalid = mod.items(t)
+    lk = jnp.where(lvalid, lk, dbase.PAD)
+    # 2. shuffle partial aggregates to their hash-owner shard
+    buf_k, buf_v, *_ = _route(lk, n_sh, lv)
+    rk = _a2a(buf_k, axis).reshape(-1)
+    rv = _a2a(buf_v, axis).reshape(-1, lv.shape[-1])
+    # 3. local final aggregation
+    t2 = mod.build(rk, rv, final_capacity, valid=rk != dbase.PAD)
+    fk, fv, fvalid = mod.items(t2)
+    return fk, fv, fvalid
+
+
+def dist_groupby(
+    mesh: jax.sharding.Mesh,
+    axis: Axis,
+    keys: jax.Array,
+    vals: jax.Array,
+    ds: str,
+    local_capacity: int,
+    final_capacity: int,
+    assume_sorted: bool = False,
+):
+    """shard_map wrapper: global [N] keys / [N, V] vals sharded on ``axis`` →
+    per-shard result dictionary slices (concatenated dense arrays)."""
+    spec_in = P(axis)
+    spec_val = P(axis, None)
+    fn = functools.partial(
+        dist_groupby_shard,
+        axis=axis,
+        ds=ds,
+        local_capacity=local_capacity,
+        final_capacity=final_capacity,
+        assume_sorted=assume_sorted,
+    )
+    return jax.shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(spec_in, spec_val),
+        out_specs=(P(axis), P(axis, None), P(axis)),
+        check_vma=False,  # dict builds start from shard-invariant empties
+    )(keys, vals)
+
+
+# ---------------------------------------------------------------------------
+# distributed FK join (shuffle join)
+# ---------------------------------------------------------------------------
+
+
+def dist_fk_join_shard(
+    probe_keys: jax.Array,  # [n_local]
+    build_keys: jax.Array,  # [m_local] unique globally (PK side)
+    build_payload: jax.Array,  # [m_local, V]
+    *,
+    axis: Axis,
+    ds: str,
+    capacity: int,
+    sorted_probes: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Per-shard shuffle join body.  Returns (payload[n_local, V], found)."""
+    mod = registry.get(ds)
+    n_sh = _axis_size(axis)
+    V = build_payload.shape[-1]
+
+    # 1. route build rows to hash owners and build the per-shard dictionary
+    bk, bv, *_ = _route(build_keys, n_sh, build_payload)
+    rbk = _a2a(bk, axis).reshape(-1)
+    rbv = _a2a(bv, axis).reshape(-1, V)
+    t = mod.build(rbk, rbv, capacity, valid=rbk != dbase.PAD)
+
+    # 2. route probes to hash owners
+    pk, order, st, pos = _route(probe_keys, n_sh)
+    rpk = _a2a(pk, axis)  # [n_sh, n_local] probes received
+    flat = rpk.reshape(-1)
+    pvals, pfound = mod.lookup(t, flat, valid=flat != dbase.PAD)
+
+    # 3. route answers back (same buffer geometry, reversed)
+    resp_v = _a2a(pvals.reshape(rpk.shape + (V,)), axis)
+    resp_f = _a2a(pfound.reshape(rpk.shape).astype(jnp.int32), axis)
+    out_v = jnp.zeros((probe_keys.shape[0], V), build_payload.dtype)
+    out_f = jnp.zeros((probe_keys.shape[0],), jnp.int32)
+    out_v = out_v.at[order].set(resp_v[st, pos])
+    out_f = out_f.at[order].set(resp_f[st, pos])
+    return out_v, out_f.astype(bool)
+
+
+def dist_fk_join(
+    mesh: jax.sharding.Mesh,
+    axis: Axis,
+    probe_keys: jax.Array,
+    build_keys: jax.Array,
+    build_payload: jax.Array,
+    ds: str,
+    capacity: int,
+):
+    fn = functools.partial(
+        dist_fk_join_shard, axis=axis, ds=ds, capacity=capacity
+    )
+    return jax.shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis, None)),
+        out_specs=(P(axis, None), P(axis)),
+        check_vma=False,  # dict builds start from shard-invariant empties
+    )(probe_keys, build_keys, build_payload)
+
+
+# ---------------------------------------------------------------------------
+# low-cardinality aggregate: all-reduce instead of shuffle
+# ---------------------------------------------------------------------------
+
+
+def dist_groupby_lowcard_shard(
+    keys: jax.Array,  # [n_local] dense group ids in [0, n_groups), PAD = dead
+    vals: jax.Array,  # [n_local, V]
+    *,
+    axis: Axis,
+    n_groups: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """When the group count is tiny (Q1: 6 groups), shuffling is silly: each
+    shard scatter-adds into a dense [n_groups, V] accumulator and one
+    all-reduce(+) finishes the job.  Group alignment is by dense id, so
+    shards with missing groups stay consistent.  The cost model's collective
+    term picks between this and the shuffle form (DESIGN.md §4)."""
+    valid = keys != dbase.PAD
+    safe = jnp.where(valid, keys, n_groups)
+    acc = jnp.zeros((n_groups, vals.shape[-1]), vals.dtype).at[safe].add(
+        jnp.where(valid[:, None], vals, 0.0), mode="drop"
+    )
+    cnt = jnp.zeros((n_groups,), jnp.int32).at[safe].add(
+        valid.astype(jnp.int32), mode="drop"
+    )
+    return lax.psum(acc, axis), lax.psum(cnt, axis)

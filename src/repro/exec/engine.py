@@ -1,0 +1,320 @@
+"""Vectorized physical operators — the generated-engine runtime.
+
+DBFlex emits specialized C++ per query; here the "generated engine" is a
+composition of these jit-compatible operators, parameterized by the
+dictionary choices the synthesizer made.  Static shapes throughout:
+selection is masking (never compaction), joins are FK index-gathers with
+found-masks, group-bys are fixed-capacity dictionary builds.
+
+The ds-dispatch points (`build_dict`, `lookup_dict`) are where the paper's
+`@ht`/`@st` annotations become machine behaviour:
+
+* ``ht_*``     — scatter/probe hash aggregation (TPU: hash_probe kernel);
+* ``st_*``     — sort + segment reduction       (TPU: segment_reduce kernel);
+* ``assume_sorted`` build — skips the sort (the paper's hinted insert);
+* ``sorted_probes`` lookup — merge windows      (TPU: merge_lookup kernel).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dicts import base as dbase
+from repro.dicts import registry
+from repro.kernels import ops as kops
+from repro.data.table import Table
+
+
+@dataclass
+class DictResult:
+    """A materialized LLQL dictionary: backend table + its annotation."""
+
+    ds: str
+    table: object  # HashTable | SortedTable
+
+    def items_np(self) -> Dict[int, np.ndarray]:
+        mod = registry.get(self.ds)
+        ks, vs, valid = mod.items(self.table)
+        ks, vs, valid = np.asarray(ks), np.asarray(vs), np.asarray(valid)
+        return {int(k): vs[i] for i, k in enumerate(ks) if valid[i]}
+
+    def arrays(self) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        return registry.get(self.ds).items(self.table)
+
+    def size(self) -> int:
+        return int(registry.get(self.ds).size(self.table))
+
+
+def capacity_for(ds: str, n_distinct: int) -> int:
+    """Static capacity: 2× slack for hash load factor / merge headroom."""
+    c = dbase.next_pow2(max(2 * int(n_distinct), 256))
+    return c
+
+
+# ---------------------------------------------------------------------------
+# dictionary build / probe with ds dispatch
+# ---------------------------------------------------------------------------
+
+
+import functools
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_build(ds: str, capacity: int, assume_sorted: bool, has_valid: bool):
+    mod = registry.get(ds)
+    if has_valid:
+        fn = lambda k, v, m: mod.build(
+            k, v, capacity, assume_sorted=assume_sorted, valid=m
+        )
+    else:
+        fn = lambda k, v: mod.build(k, v, capacity, assume_sorted=assume_sorted)
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_lookup(ds: str, has_valid: bool):
+    mod = registry.get(ds)
+    if has_valid:
+        return jax.jit(lambda t, q, m: mod.lookup(t, q, valid=m))
+    return jax.jit(lambda t, q: mod.lookup(t, q))
+
+
+def build_dict(
+    ds: str,
+    keys: jax.Array,
+    vals: jax.Array,
+    capacity: int,
+    valid: Optional[jax.Array] = None,
+    assume_sorted: bool = False,
+) -> DictResult:
+    if valid is not None:
+        assume_sorted = False  # masked rows force a re-sort (see dicts.base)
+        t = _jit_build(ds, capacity, assume_sorted, True)(keys, vals, valid)
+    else:
+        t = _jit_build(ds, capacity, assume_sorted, False)(keys, vals)
+    return DictResult(ds, t)
+
+
+def lookup_dict(
+    d: DictResult,
+    queries: jax.Array,
+    valid: Optional[jax.Array] = None,
+    sorted_probes: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """(vals[n, V], found[n]).  ``sorted_probes`` routes sort-family lookups
+    through the merge path (the paper's hinted lookup)."""
+    if d.ds.startswith("st") and sorted_probes:
+        vals, found = kops.merge_lookup(d.table.keys, d.table.vals, queries)
+        if valid is not None:
+            found = found & valid.astype(bool)
+            vals = jnp.where(found[:, None], vals, 0.0)
+        return vals, found
+    if valid is not None:
+        return _jit_lookup(d.ds, True)(d.table, queries, valid)
+    return _jit_lookup(d.ds, False)(d.table, queries)
+
+
+# ---------------------------------------------------------------------------
+# relational operators
+# ---------------------------------------------------------------------------
+
+
+def groupby(
+    table: Table,
+    keys: jax.Array,
+    vals: jax.Array,
+    ds: str,
+    capacity: int,
+    assume_sorted: bool = False,
+) -> DictResult:
+    """Group-by aggregate (Fig. 6c/6d): dict[key] += val."""
+    if vals.ndim == 1:
+        vals = vals[:, None]
+    vals = vals * table.multiplicity()[:, None]
+    return build_dict(
+        ds, keys, vals, capacity, valid=table.mask, assume_sorted=assume_sorted
+    )
+
+
+def scalar_aggregate(table: Table, vals: jax.Array) -> jax.Array:
+    """Σ over live rows; vals [n, V] -> [V]."""
+    if vals.ndim == 1:
+        vals = vals[:, None]
+    return jnp.sum(vals * table.multiplicity()[:, None], axis=0)
+
+
+def build_index(
+    ds: str,
+    keys: jax.Array,
+    capacity: int,
+    valid: Optional[jax.Array] = None,
+    assume_sorted: bool = False,
+) -> DictResult:
+    """Key -> row-index dictionary for FK joins.  Row indices ride in the
+    float32 value lane (exact to 2^24 rows; asserted)."""
+    n = keys.shape[0]
+    assert n < (1 << 24), "index payload exceeds f32 exactness"
+    idx = jnp.arange(n, dtype=jnp.float32)[:, None]
+    return build_dict(ds, keys, idx, capacity, valid=valid, assume_sorted=assume_sorted)
+
+
+def fk_join(
+    left: Table,
+    left_keys: jax.Array,
+    right: Table,
+    index: DictResult,
+    take: Sequence[str],
+    sorted_probes: bool = False,
+    prefix: str = "",
+) -> Table:
+    """Key/foreign-key join: probe ``index`` (built on the unique side) with
+    ``left_keys``; gather ``take`` columns from ``right``.  Output keeps the
+    left table's static shape; non-matching rows are masked out."""
+    vals, found = lookup_dict(
+        index, left_keys, valid=left.mask, sorted_probes=sorted_probes
+    )
+    ridx = vals[:, 0].astype(jnp.int32)
+    ridx = jnp.where(found, ridx, 0)
+    cols = dict(left.columns)
+    for c in take:
+        cols[prefix + c] = jnp.where(
+            found, right.col(c)[ridx], jnp.zeros((), right.col(c).dtype)
+        )
+    return Table(cols, left.nrows, mask=found, sorted_on=left.sorted_on)
+
+
+def semijoin(
+    left: Table, left_keys: jax.Array, index: DictResult, sorted_probes: bool = False
+) -> Table:
+    _, found = lookup_dict(index, left_keys, valid=left.mask, sorted_probes=sorted_probes)
+    return left.with_mask(found)
+
+
+def groupjoin(
+    r_table: Table,
+    r_keys: jax.Array,
+    f_vals: jax.Array,  # [n, V] partial aggregate from R rows
+    s_dict: DictResult,  # key -> partial aggregate of S (g)
+    out_ds: str,
+    out_capacity: int,
+    combine: str = "mul",  # how f and g combine per Fig. 6e: f(r) * g_sum
+    sorted_probes: bool = False,
+    assume_sorted: bool = False,
+) -> DictResult:
+    """Fig. 6e/6f compound groupjoin: Agg[k] += f(r) * Sd(k)."""
+    g_vals, found = lookup_dict(
+        s_dict, r_keys, valid=r_table.mask, sorted_probes=sorted_probes
+    )
+    if f_vals.ndim == 1:
+        f_vals = f_vals[:, None]
+    if combine == "mul":
+        v = f_vals * g_vals
+    else:  # pragma: no cover
+        raise ValueError(combine)
+    tbl = r_table.with_mask(found)
+    return groupby(tbl, r_keys, v, out_ds, out_capacity, assume_sorted=assume_sorted)
+
+
+# ---------------------------------------------------------------------------
+# sort-based aggregation via the segment_reduce kernel (direct form)
+# ---------------------------------------------------------------------------
+
+
+def sort_groupby_arrays(
+    keys: jax.Array, vals: jax.Array, valid: Optional[jax.Array] = None,
+    assume_sorted: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (keys[n], sums[n, V], end_mask[n]) — run totals at run ends.
+    The raw sort-aggregate pipeline (sort → segment reduce), used by the
+    distributed path and the in-DB ML operator where the dictionary object
+    itself is not needed downstream."""
+    if vals.ndim == 1:
+        vals = vals[:, None]
+    if valid is not None:
+        keys = jnp.where(valid.astype(bool), keys, dbase.PAD)
+        vals = jnp.where(valid.astype(bool)[:, None], vals, 0.0)
+        assume_sorted = False
+    if not assume_sorted:
+        perm = jnp.argsort(keys)
+        keys, vals = keys[perm], vals[perm]
+    sums, ends = kops.segment_reduce(keys, vals)
+    return keys, sums, ends
+
+
+# ---------------------------------------------------------------------------
+# in-DB ML: factorized covariance (paper Fig. 7d)
+# ---------------------------------------------------------------------------
+
+
+def covar_factorized(
+    s_table: Table,
+    r_table: Table,
+    join_col: str = "s",
+    i_col: str = "i",
+    c_col: str = "c",
+    ragg_ds: str = "st_sorted",
+    sorted_probes: bool = True,
+    ragg_capacity: Optional[int] = None,
+) -> Dict[str, jax.Array]:
+    """Covariance terms over S ⋈ R without materializing the join.
+
+    S is assumed physically ordered on the join column (the paper's trie
+    index): the inner partial aggregates (i·i, i, 1 per group — Fig. 7d's
+    ``sagg``) come straight from one segment_reduce pass; R's partial
+    aggregates (m, c, c·c — ``Ragg``) are one group-by; the final combine is
+    three fused multiplies over the group stream.
+    """
+    s = s_table.col(join_col)
+    i = s_table.col(i_col)
+    ones = jnp.ones_like(i)
+    sagg_in = jnp.stack([i * i, i, ones], axis=1)  # [n, 3]
+    skeys, ssums, sends = sort_groupby_arrays(
+        s, sagg_in, valid=s_table.mask,
+        assume_sorted=s_table.sorted_on[:1] == (join_col,),
+    )
+
+    c = r_table.col(c_col)
+    ragg_in = jnp.stack([jnp.ones_like(c), c, c * c], axis=1)  # m, c, c_c
+    cap = ragg_capacity or capacity_for(ragg_ds, r_table.nrows)
+    ragg = groupby(
+        r_table,
+        r_table.col(join_col),
+        ragg_in,
+        ragg_ds,
+        cap,
+        assume_sorted=r_table.sorted_on[:1] == (join_col,),
+    )
+
+    # combine: for each S-group (emitted at run ends, keys sorted) look up
+    # Ragg — the probe stream is sorted, so this is the hinted/merge path.
+    rvals, found = lookup_dict(ragg, skeys, valid=sends, sorted_probes=sorted_probes)
+    m_r, c_r, cc_r = rvals[:, 0], rvals[:, 1], rvals[:, 2]
+    i_i = jnp.sum(jnp.where(found, ssums[:, 0] * m_r, 0.0))
+    i_c = jnp.sum(jnp.where(found, ssums[:, 1] * c_r, 0.0))
+    c_c = jnp.sum(jnp.where(found, ssums[:, 2] * cc_r, 0.0))
+    return {"i_i": i_i, "i_c": i_c, "c_c": c_c}
+
+
+def covar_naive(
+    s_table: Table,
+    r_table: Table,
+    join_col: str = "s",
+    i_col: str = "i",
+    c_col: str = "c",
+    index_ds: str = "ht_linear",
+) -> Dict[str, jax.Array]:
+    """Fig. 7a baseline: materialize the join (FK gather), then aggregate."""
+    cap = capacity_for(index_ds, r_table.nrows)
+    idx = build_index(index_ds, r_table.col(join_col), cap, valid=r_table.mask)
+    joined = fk_join(
+        s_table, s_table.col(join_col), r_table, idx, take=[c_col], prefix="r_"
+    )
+    i = joined.col(i_col)
+    c = joined.col("r_" + c_col)
+    vals = jnp.stack([i * i, i * c, c * c], axis=1)
+    out = scalar_aggregate(joined, vals)
+    return {"i_i": out[0], "i_c": out[1], "c_c": out[2]}

@@ -1,0 +1,406 @@
+"""The paper's TPC-H evaluation queries (§6.3): Q1, Q3, Q5, Q9, Q18.
+
+Each query exposes:
+
+* ``llql()``   — the LLQL program (with open ``@ds`` annotations) used for
+  cost inference and synthesis — this is what the paper's optimizer sees;
+* ``run(db, choices)`` — the lowered physical plan, parameterized by the
+  synthesized per-dictionary choices (``{"symbol": DictChoice(...)}``);
+* ``reference(db)`` — a numpy oracle for correctness tests.
+
+The queries are structurally faithful simplifications (same joins, same
+group-bys, same selectivity knobs); text/date predicates act on the encoded
+columns of the synthetic generator (``repro.data.tpch``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import llql as L
+from repro.core import operators as O
+from repro.core.cost import DictChoice, GammaDict
+from repro.data.table import Table, collect_stats
+from . import engine as E
+
+
+def _c(x: float) -> L.Const:
+    return L.Const(x, L.DOUBLE)
+
+
+def _ch(choices: GammaDict, sym: str) -> DictChoice:
+    return choices.get(sym, DictChoice())
+
+
+@dataclass
+class Query:
+    name: str
+    llql: Callable[[], L.Expr]
+    run: Callable[[Dict[str, Table], GammaDict], Dict[int, np.ndarray]]
+    reference: Callable[[Dict[str, Table]], Dict[int, np.ndarray]]
+
+
+# ---------------------------------------------------------------------------
+# Q1 — scan-heavy multi-aggregate group-by on lineitem (tiny group count)
+# ---------------------------------------------------------------------------
+
+
+def q1_llql(date: float = 0.9) -> L.Expr:
+    r = L.Var("r")
+    key = r.key.get("returnflag") * L.Const(2, L.INT) + r.key.get("linestatus")
+    val = L.record(
+        qty=r.key.get("quantity"),
+        price=r.key.get("extendedprice"),
+        disc_price=r.key.get("extendedprice") * (_c(1.0) - r.key.get("discount")),
+        charge=r.key.get("extendedprice")
+        * (_c(1.0) - r.key.get("discount"))
+        * (_c(1.0) + r.key.get("tax")),
+        cnt=_c(1.0),
+    )
+    return O.groupby(
+        "lineitem",
+        grp=lambda rr: key,
+        aggfn=lambda rr: val,
+        pred=lambda rr: rr.key.get("shipdate") <= _c(date),
+        out="Agg",
+    )
+
+
+def q1_run(db, choices, date: float = 0.9):
+    li = db["lineitem"]
+    mask = li.col("shipdate") <= date
+    t = li.with_mask(mask)
+    keys = li.col("returnflag") * 2 + li.col("linestatus")
+    one = jnp.ones((li.nrows,), jnp.float32)
+    ep, dc, tx = li.col("extendedprice"), li.col("discount"), li.col("tax")
+    vals = jnp.stack(
+        [li.col("quantity"), ep, ep * (1 - dc), ep * (1 - dc) * (1 + tx), one],
+        axis=1,
+    )
+    ch = _ch(choices, "Agg")
+    g = E.groupby(t, keys, vals, ch.ds, 256, assume_sorted=False)
+    return g.items_np()
+
+
+def q1_reference(db, date: float = 0.9):
+    li = db["lineitem"]
+    m = np.asarray(li.col("shipdate")) <= date
+    k = np.asarray(li.col("returnflag")) * 2 + np.asarray(li.col("linestatus"))
+    ep = np.asarray(li.col("extendedprice"))
+    dc = np.asarray(li.col("discount"))
+    tx = np.asarray(li.col("tax"))
+    q = np.asarray(li.col("quantity"))
+    out = {}
+    for key in np.unique(k[m]):
+        s = m & (k == key)
+        out[int(key)] = np.array(
+            [
+                q[s].sum(),
+                ep[s].sum(),
+                (ep[s] * (1 - dc[s])).sum(),
+                (ep[s] * (1 - dc[s]) * (1 + tx[s])).sum(),
+                s.sum(),
+            ],
+            np.float32,
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Q3 — the running example: orders(date<δ) groupjoin lineitem on orderkey
+# ---------------------------------------------------------------------------
+
+
+def q3_llql(date: float = 0.05) -> L.Expr:
+    return O.groupjoin(
+        "lineitem",
+        "orders",
+        key_r=lambda r: r.key.get("orderkey"),
+        key_s=lambda s: s.key.get("orderkey"),
+        g=lambda s: _c(1.0),
+        f=lambda r: r.key.get("extendedprice") * (_c(1.0) - r.key.get("discount")),
+        pred_s=lambda s: s.key.get("orderdate") < _c(date),
+        build="OD",
+        out="Agg",
+    )
+
+
+def q3_run(db, choices, date: float = 0.05):
+    li, od = db["lineitem"], db["orders"]
+    odf = od.with_mask(od.col("orderdate") < date)
+    bch, ach = _ch(choices, "OD"), _ch(choices, "Agg")
+    cap = E.capacity_for(bch.ds, od.nrows)
+    sd = E.groupby(
+        odf, odf.col("orderkey"), jnp.ones((od.nrows,), jnp.float32), bch.ds, cap
+    )
+    vals = li.col("extendedprice") * (1.0 - li.col("discount"))
+    li_sorted = li.sorted_on[:1] == ("orderkey",)
+    return E.groupjoin(
+        li,
+        li.col("orderkey"),
+        vals[:, None],
+        sd,
+        ach.ds,
+        E.capacity_for(ach.ds, od.nrows),
+        sorted_probes=li_sorted and bch.hinted,
+        assume_sorted=li_sorted and ach.hinted,
+    ).items_np()
+
+
+def q3_reference(db, date: float = 0.05):
+    li, od = db["lineitem"], db["orders"]
+    sel = np.asarray(od.col("orderdate")) < date
+    ok = set(np.asarray(od.col("orderkey"))[sel].tolist())
+    k = np.asarray(li.col("orderkey"))
+    v = np.asarray(li.col("extendedprice")) * (1 - np.asarray(li.col("discount")))
+    out = {}
+    for kk, vv in zip(k, v):
+        if int(kk) in ok:
+            out[int(kk)] = out.get(int(kk), 0.0) + float(vv)
+    return {k2: np.array([v2], np.float32) for k2, v2 in out.items()}
+
+
+# ---------------------------------------------------------------------------
+# Q5 — 4-way join: revenue per nation for one region
+# ---------------------------------------------------------------------------
+
+
+def q5_llql(region: int = 0) -> L.Expr:
+    """For synthesis: the two dominant dictionaries (customer-nation index CN,
+    supplier index SN) + the order index OD + final aggregate per nation."""
+    # Expressed as a chain of partitioned joins + group-by; synthesis sees
+    # every dictionary with its cardinalities.
+    cust = O.partitioned_join(
+        "orders",
+        "customer",
+        part_r=lambda r: r.key.get("custkey"),
+        part_s=lambda s: s.key.get("custkey"),
+        out_key=lambda r, s: r.key.get("orderkey"),
+        build="CN",
+        out="OC",
+        pred_s=lambda s: (s.key.get("nationkey") % L.Const(5, L.INT)).eq(
+            L.Const(region, L.INT)
+        ),
+    )
+    return cust  # the chain's remaining dicts (SN, Agg) share CN's stats shape
+
+
+def q5_run(db, choices, region: int = 0):
+    li, od, cu, su = db["lineitem"], db["orders"], db["customer"], db["supplier"]
+    na = db["nation"]
+    # customers in region
+    region_of = na.col("regionkey")[cu.col("nationkey")]
+    cuf = cu.with_mask(region_of == region)
+    cch = _ch(choices, "CN")
+    cidx = E.build_index(
+        cch.ds, cuf.col("custkey"), E.capacity_for(cch.ds, cu.nrows), valid=cuf.mask
+    )
+    oc = E.fk_join(od, od.col("custkey"), cu, cidx, take=["nationkey"], prefix="c_")
+    och = _ch(choices, "OD")
+    oidx = E.build_index(
+        och.ds, oc.col("orderkey"), E.capacity_for(och.ds, od.nrows), valid=oc.mask
+    )
+    li_sorted = li.sorted_on[:1] == ("orderkey",)
+    lo = E.fk_join(
+        li, li.col("orderkey"), oc, oidx, take=["c_nationkey"],
+        sorted_probes=li_sorted and och.hinted, prefix="o_",
+    )
+    sch = _ch(choices, "SN")
+    sidx = E.build_index(
+        sch.ds, su.col("suppkey"), E.capacity_for(sch.ds, su.nrows)
+    )
+    los = E.fk_join(lo, lo.col("suppkey"), su, sidx, take=["nationkey"], prefix="s_")
+    # nation of supplier must equal nation of customer
+    same = los.col("s_nationkey") == los.col("o_c_nationkey")
+    final = los.with_mask(same)
+    rev = final.col("extendedprice") * (1.0 - final.col("discount"))
+    ach = _ch(choices, "Agg")
+    g = E.groupby(final, final.col("s_nationkey"), rev, ach.ds, 256)
+    return g.items_np()
+
+
+def q5_reference(db, region: int = 0):
+    li, od, cu, su, na = (
+        db["lineitem"], db["orders"], db["customer"], db["supplier"], db["nation"]
+    )
+    reg = np.asarray(na.col("regionkey"))
+    cn = np.asarray(cu.col("nationkey"))
+    cust_ok = reg[cn] == region
+    ord_nat = {}
+    ok_arr = np.asarray(od.col("orderkey"))
+    ock = np.asarray(od.col("custkey"))
+    for okey, ck in zip(ok_arr, ock):
+        if cust_ok[ck]:
+            ord_nat[int(okey)] = int(cn[ck])
+    sn = np.asarray(su.col("nationkey"))
+    out = {}
+    lk = np.asarray(li.col("orderkey"))
+    ls = np.asarray(li.col("suppkey"))
+    rv = np.asarray(li.col("extendedprice")) * (1 - np.asarray(li.col("discount")))
+    for okey, sk, r in zip(lk, ls, rv):
+        nat = ord_nat.get(int(okey))
+        if nat is not None and sn[sk] == nat:
+            out[nat] = out.get(nat, 0.0) + float(r)
+    return {k: np.array([v], np.float32) for k, v in out.items()}
+
+
+# ---------------------------------------------------------------------------
+# Q9 — profit per (nation, year-bucket) over part-filtered lineitems
+# ---------------------------------------------------------------------------
+
+_YEARS = 7
+
+
+def q9_llql(color: int = 3) -> L.Expr:
+    return O.partitioned_join(
+        "lineitem",
+        "part",
+        part_r=lambda r: r.key.get("partkey"),
+        part_s=lambda s: s.key.get("partkey"),
+        out_key=lambda r, s: r.key.get("suppkey"),
+        build="PX",
+        out="LP",
+        pred_s=lambda s: s.key.get("color").eq(L.Const(color, L.INT)),
+    )
+
+
+def q9_run(db, choices, color: int = 3):
+    li, pa, su, od = db["lineitem"], db["part"], db["supplier"], db["orders"]
+    paf = pa.with_mask(pa.col("color") == color)
+    pch = _ch(choices, "PX")
+    pidx = E.build_index(
+        pch.ds, paf.col("partkey"), E.capacity_for(pch.ds, pa.nrows), valid=paf.mask
+    )
+    lp = E.fk_join(li, li.col("partkey"), pa, pidx, take=["retailprice"], prefix="p_")
+    sch = _ch(choices, "SN")
+    sidx = E.build_index(sch.ds, su.col("suppkey"), E.capacity_for(sch.ds, su.nrows))
+    lps = E.fk_join(lp, lp.col("suppkey"), su, sidx, take=["nationkey"], prefix="s_")
+    och = _ch(choices, "OD")
+    oidx = E.build_index(och.ds, od.col("orderkey"), E.capacity_for(och.ds, od.nrows))
+    li_sorted = li.sorted_on[:1] == ("orderkey",)
+    full = E.fk_join(
+        lps, lps.col("orderkey"), od, oidx, take=["orderdate"],
+        sorted_probes=li_sorted and och.hinted, prefix="o_",
+    )
+    year = jnp.floor(full.col("o_orderdate") * _YEARS).astype(jnp.int32)
+    profit = full.col("extendedprice") * (1.0 - full.col("discount")) - full.col(
+        "quantity"
+    ) * full.col("p_retailprice") * 0.01
+    key = full.col("s_nationkey") * _YEARS + year
+    ach = _ch(choices, "Agg")
+    g = E.groupby(full, key, profit, ach.ds, 512)
+    return g.items_np()
+
+
+def q9_reference(db, color: int = 3):
+    li, pa, su, od = db["lineitem"], db["part"], db["supplier"], db["orders"]
+    pcol = np.asarray(pa.col("color"))
+    pprice = np.asarray(pa.col("retailprice"))
+    sn = np.asarray(su.col("nationkey"))
+    odate = np.asarray(od.col("orderdate"))
+    out = {}
+    lk = np.asarray(li.col("partkey"))
+    lsk = np.asarray(li.col("suppkey"))
+    lok = np.asarray(li.col("orderkey"))
+    ep = np.asarray(li.col("extendedprice"))
+    dc = np.asarray(li.col("discount"))
+    qt = np.asarray(li.col("quantity"))
+    for i in range(len(lk)):
+        if pcol[lk[i]] != color:
+            continue
+        year = int(odate[lok[i]] * _YEARS)
+        key = int(sn[lsk[i]]) * _YEARS + year
+        profit = ep[i] * (1 - dc[i]) - qt[i] * pprice[lk[i]] * 0.01
+        out[key] = out.get(key, 0.0) + float(profit)
+    return {k: np.array([v], np.float32) for k, v in out.items()}
+
+
+# ---------------------------------------------------------------------------
+# Q18 — high-cardinality aggregation (the paper's sort-based winner)
+# ---------------------------------------------------------------------------
+
+
+def q18_llql() -> L.Expr:
+    return O.groupby(
+        "lineitem",
+        grp=lambda r: r.key.get("orderkey"),
+        aggfn=lambda r: r.key.get("quantity"),
+        out="QtyAgg",
+    )
+
+
+def q18_run(db, choices, threshold: float = 150.0):
+    li, od = db["lineitem"], db["orders"]
+    ach = _ch(choices, "QtyAgg")
+    li_sorted = li.sorted_on[:1] == ("orderkey",)
+    cap = E.capacity_for(ach.ds, od.nrows)
+    g = E.groupby(
+        li, li.col("orderkey"), li.col("quantity"), ach.ds, cap,
+        assume_sorted=li_sorted and ach.hinted,
+    )
+    ks, vs, valid = g.arrays()
+    big = valid & (vs[:, 0] > threshold)
+    # join back to orders for totalprice (probe orders index with big keys)
+    och = _ch(choices, "OD")
+    oidx = E.build_index(och.ds, od.col("orderkey"), E.capacity_for(och.ds, od.nrows))
+    srt = g.ds.startswith("st")  # iterating an @st dict yields sorted keys
+    ovals, ofound = E.lookup_dict(oidx, ks, valid=big, sorted_probes=srt and och.hinted)
+    oid = ovals[:, 0].astype(jnp.int32)
+    tp = jnp.where(ofound, od.col("totalprice")[jnp.where(ofound, oid, 0)], 0.0)
+    out = {}
+    ksn, vsn, bign, tpn = map(np.asarray, (ks, vs, big & ofound, tp))
+    for i in range(len(ksn)):
+        if bign[i]:
+            out[int(ksn[i])] = np.array([vsn[i, 0], tpn[i]], np.float32)
+    return out
+
+
+def q18_reference(db, threshold: float = 150.0):
+    li, od = db["lineitem"], db["orders"]
+    k = np.asarray(li.col("orderkey"))
+    q = np.asarray(li.col("quantity"))
+    tp = np.asarray(od.col("totalprice"))
+    agg = {}
+    for kk, qq in zip(k, q):
+        agg[int(kk)] = agg.get(int(kk), 0.0) + float(qq)
+    return {
+        kk: np.array([vv, tp[kk]], np.float32)
+        for kk, vv in agg.items()
+        if vv > threshold
+    }
+
+
+QUERIES: Dict[str, Query] = {
+    "q1": Query("q1", q1_llql, q1_run, q1_reference),
+    "q3": Query("q3", q3_llql, q3_run, q3_reference),
+    "q5": Query("q5", q5_llql, q5_run, q5_reference),
+    "q9": Query("q9", q9_llql, q9_run, q9_reference),
+    "q18": Query("q18", q18_llql, q18_run, q18_reference),
+}
+
+
+def synthesize_choices(
+    qname: str, db: Dict[str, Table], delta, extra_syms: Tuple[str, ...] = ()
+) -> GammaDict:
+    """Run Algorithm 1 on the query's LLQL against real-data statistics and
+    return per-symbol choices; symbols the LLQL form doesn't cover (chain
+    continuation indices) inherit the choice of the structurally matching
+    symbol (same key distribution), mirroring how DBFlex reuses dictionary
+    decisions across a pipeline."""
+    from repro.core.synthesis import synthesize
+
+    q = QUERIES[qname]
+    sigma = collect_stats(db)
+    res = synthesize(q.llql(), sigma, delta)
+    choices = dict(res.choices)
+    if choices:
+        default = max(choices.values(), key=lambda c: 0).__class__
+    for sym in extra_syms:
+        if sym not in choices:
+            # reuse the build-side decision for sibling index dictionaries
+            first = next(iter(choices.values()))
+            choices[sym] = first
+    return choices

@@ -1,0 +1,152 @@
+"""Pallas TPU kernel: blocked flash attention (GQA-aware, causal/windowed).
+
+Online-softmax attention with the canonical TPU schedule: grid =
+(batch·q_heads, q_tiles, kv_tiles), kv innermost so the VMEM scratch
+(acc, m, l) accumulates across sequential grid steps; fully-masked kv tiles
+are skipped via ``pl.when`` (causal lower-triangle and sliding-window
+diagonal band).  GQA is handled in the BlockSpec index maps — kv tiles are
+fetched once per kv-head and shared by the q-heads of the group, no
+materialized repeat_kv.
+
+Used by: dense/GQA archs (train + prefill), jamba's windowed attention
+layers at 500k context, and whisper cross-attention (causal=False).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Q_BLOCK = 128
+KV_BLOCK = 128
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, bq, bk, q_off, kv_len, causal, window, scale, n_kv_tiles,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # tile coordinates (rows aligned to sequence ends for decode)
+    row0 = qi * bq + q_off
+    col0 = ki * bk
+    # skip tiles that are entirely masked
+    diag_ok = (not causal) or (col0 <= row0 + bq - 1)
+    win_ok = (window <= 0) or (col0 + bk - 1 > row0 - window)
+
+    @pl.when(diag_ok & win_ok)
+    def _compute():
+        q = q_ref[0]  # [bq, D]
+        k = k_ref[0]  # [bk, D]
+        v = v_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # [bq, bk]
+        rows = row0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = col0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = cols < kv_len
+        if causal:
+            mask &= cols <= rows
+        if window > 0:
+            mask &= cols > rows - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(m_new[:, None] <= NEG_INF / 2, 0.0, p)
+        alpha = jnp.exp(m_prev - m_new)
+        alpha = jnp.where(m_new <= NEG_INF / 2, 0.0, alpha)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv_tiles - 1)
+    def _finish():
+        l = l_ref[...]
+        denom = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "bq", "bk", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # [B, H, Tq, D]
+    k: jax.Array,  # [B, Hkv, Tk, D]
+    v: jax.Array,  # [B, Hkv, Tk, D]
+    *,
+    causal: bool = True,
+    window: int = 0,
+    bq: int = Q_BLOCK,
+    bk: int = KV_BLOCK,
+    interpret: bool = True,
+) -> jax.Array:
+    B, H, Tq, D = q.shape
+    _, Hkv, Tk, _ = k.shape
+    assert H % Hkv == 0, (H, Hkv)
+    group = H // Hkv
+    scale = 1.0 / math.sqrt(D)
+
+    bq = min(bq, max(8, 1 << (Tq - 1).bit_length()))
+    bk = min(bk, max(8, 1 << (Tk - 1).bit_length()))
+    pq = -Tq % bq
+    pk = -Tk % bk
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    qf = qp.reshape(B * H, Tq + pq, D)
+    kf = kp.reshape(B * Hkv, Tk + pk, D)
+    vf = vp.reshape(B * Hkv, Tk + pk, D)
+    n_q = (Tq + pq) // bq
+    n_kv = (Tk + pk) // bk
+
+    def kv_head(b):  # flat q-head index -> flat kv-head index
+        return (b // H) * Hkv + (b % H) // group
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel,
+            bq=bq,
+            bk=bk,
+            q_off=Tk - Tq,  # align sequence ends (decode-friendly)
+            kv_len=Tk,
+            causal=causal,
+            window=window,
+            scale=scale,
+            n_kv_tiles=n_kv,
+        ),
+        grid=(B * H, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (kv_head(b), j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (kv_head(b), j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Tq + pq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out[:, :Tq].reshape(B, H, Tq, D)

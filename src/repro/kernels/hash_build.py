@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: batched hash-table build (insert + aggregate).
+
+The ``@ht`` build hot loop as a kernel: the table (keys + values) lives in
+**VMEM scratch carried across sequential grid steps**; each step consumes
+one tile of input rows and runs the bounded probe-round insertion entirely
+in VMEM — the input streams from HBM once, and the table is written back to
+the output only by the final step.  This is the kernel-level counterpart of
+``dicts.base.generic_insert`` (the pure-jnp oracle used by tests), and the
+partition-local build phase of the distributed shuffle join (DESIGN.md §4):
+radix partitioning upstream guarantees the table tile fits VMEM.
+
+Conflict arbitration inside a tile reuses the scatter-max trick: claimants
+write their row id, winners write key+value, losers re-check (catching
+same-key duplicates) and advance their probe position.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.dicts import base as dbase
+
+ROW_BLOCK = 1024
+MAX_PROBES = 32
+
+
+def _kernel(
+    ks_ref, vs_ref, valid_ref, out_keys_ref, out_vals_ref,
+    tk_scr, tv_scr, *, capacity, max_probes, n_tiles,
+):
+    g = pl.program_id(0)
+
+    @pl.when(g == 0)
+    def _init():
+        tk_scr[...] = jnp.full_like(tk_scr, dbase.EMPTY)
+        tv_scr[...] = jnp.zeros_like(tv_scr)
+
+    ks = ks_ref[...]  # [B]
+    vs = vs_ref[...]  # [B, V]
+    valid = valid_ref[...] != 0
+    B = ks.shape[0]
+    ids = lax.broadcasted_iota(jnp.int32, (B,), 0)
+    h0 = dbase.hash1(ks, capacity)
+
+    def round_body(t, carry):
+        tk, tv, pending = carry
+        slot = (h0 + t) & (capacity - 1)
+        cur = jnp.take(tk, slot, axis=0)
+        hit = pending & (cur == ks)
+        want = pending & (cur == dbase.EMPTY)
+        claim = jnp.full((capacity,), -1, jnp.int32).at[
+            jnp.where(want, slot, capacity)
+        ].max(ids, mode="drop")
+        won = want & (jnp.take(claim, slot, axis=0) == ids)
+        tk = tk.at[jnp.where(won, slot, capacity)].set(ks, mode="drop")
+        cur2 = jnp.take(tk, slot, axis=0)
+        hit2 = pending & ~hit & ~won & (cur2 == ks)
+        write = hit | won | hit2
+        tv = tv.at[jnp.where(write, slot, capacity)].add(vs, mode="drop")
+        return tk, tv, pending & ~write
+
+    tk, tv, _ = lax.fori_loop(
+        0, max_probes, round_body, (tk_scr[...], tv_scr[...], valid)
+    )
+    tk_scr[...] = tk
+    tv_scr[...] = tv
+
+    @pl.when(g == n_tiles - 1)
+    def _finish():
+        out_keys_ref[...] = tk_scr[...]
+        out_vals_ref[...] = tv_scr[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("capacity", "block", "max_probes", "interpret")
+)
+def hash_build(
+    keys: jax.Array,  # [N] int32
+    vals: jax.Array,  # [N, V] float32
+    *,
+    capacity: int,
+    block: int = ROW_BLOCK,
+    max_probes: int = MAX_PROBES,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (table_keys[C], table_vals[C, V]); duplicate keys aggregate."""
+    assert capacity & (capacity - 1) == 0, "capacity must be a power of two"
+    n = keys.shape[0]
+    V = vals.shape[1]
+    pad = -n % block
+    ks = jnp.pad(keys, (0, pad), constant_values=dbase.PAD)
+    vs = jnp.pad(vals, ((0, pad), (0, 0)))
+    valid = (jnp.arange(n + pad) < n).astype(jnp.int32)
+    n_tiles = (n + pad) // block
+    out_keys, out_vals = pl.pallas_call(
+        functools.partial(
+            _kernel, capacity=capacity, max_probes=max_probes, n_tiles=n_tiles
+        ),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block, V), lambda i: (i, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((capacity,), lambda i: (0,)),
+            pl.BlockSpec((capacity, V), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((capacity,), jnp.int32),
+            jax.ShapeDtypeStruct((capacity, V), vals.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((capacity,), jnp.int32),
+            pltpu.VMEM((capacity, V), jnp.float32),
+        ],
+        interpret=interpret,
+    )(ks, vs, valid)
+    return out_keys, out_vals

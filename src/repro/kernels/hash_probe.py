@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: batched linear-probe hash lookup.
+
+TPU adaptation (DESIGN.md §2): DBFlex probes are pointer-chases; here the
+*partitioned* table (keys+vals) is pinned in VMEM and a tile of queries is
+probed per grid step, each probe round being one full-width vector gather +
+compare.  The partitioning upstream (radix partition by hash prefix in
+``exec``) is what guarantees the table tile fits VMEM — the TPU replacement
+for cache-conscious hashing.
+
+Grid: one dimension over query tiles.  The table BlockSpecs use a constant
+index map, so Pallas keeps the table resident across grid steps (no HBM
+re-fetch per tile).
+
+VMEM budget at defaults: keys 4·C + vals 4·C·V + queries/out ≈
+(C=16384, V=4) → ~0.4 MiB, far under the ~16 MiB/core budget; the exec layer
+asserts C ≤ 64k.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.dicts import base as dbase
+
+QUERY_BLOCK = 512
+MAX_PROBES = 32
+
+
+def _kernel(keys_ref, vals_ref, q_ref, out_vals_ref, out_found_ref, *, max_probes):
+    tk = keys_ref[...]  # [C] int32 — VMEM resident
+    tv = vals_ref[...]  # [C, V]
+    q = q_ref[...]  # [B]
+    C = tk.shape[0]
+    B = q.shape[0]
+
+    h0 = dbase.hash1(q, C)
+
+    def body(t, carry):
+        active, slot_found = carry
+        slot = (h0 + t) & (C - 1)
+        cur = jnp.take(tk, slot, axis=0)  # vector gather within VMEM
+        hit = active & (cur == q)
+        miss = active & (cur == dbase.EMPTY)
+        slot_found = jnp.where(hit, slot, slot_found)
+        active = active & ~hit & ~miss
+        return active, slot_found
+
+    active0 = jnp.ones((B,), bool)
+    slot0 = jnp.full((B,), -1, jnp.int32)
+    _, slot_found = jax.lax.fori_loop(0, max_probes, body, (active0, slot0))
+    found = slot_found >= 0
+    vals = jnp.take(tv, jnp.where(found, slot_found, 0), axis=0)
+    out_vals_ref[...] = jnp.where(found[:, None], vals, 0.0)
+    out_found_ref[...] = found.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("max_probes", "block", "interpret"))
+def hash_probe(
+    table_keys: jax.Array,
+    table_vals: jax.Array,
+    queries: jax.Array,
+    *,
+    max_probes: int = MAX_PROBES,
+    block: int = QUERY_BLOCK,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    n = queries.shape[0]
+    C = table_keys.shape[0]
+    V = table_vals.shape[1]
+    assert C & (C - 1) == 0, "capacity must be a power of two"
+    n_pad = -n % block
+    qs = jnp.pad(queries, (0, n_pad), constant_values=dbase.PAD)
+    grid = (qs.shape[0] // block,)
+    out_vals, out_found = pl.pallas_call(
+        functools.partial(_kernel, max_probes=max_probes),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((C,), lambda i: (0,)),  # table resident
+            pl.BlockSpec((C, V), lambda i: (0, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block, V), lambda i: (i, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qs.shape[0], V), table_vals.dtype),
+            jax.ShapeDtypeStruct((qs.shape[0],), jnp.int32),
+        ],
+        interpret=interpret,
+    )(table_keys, table_vals, qs)
+    return out_vals[:n], out_found[:n].astype(bool)

@@ -1,0 +1,92 @@
+"""Jit'd kernel dispatch — the single entry point the rest of the system uses.
+
+Selects between the Pallas kernels (TPU target; ``interpret=True`` emulation
+on CPU) and the pure-jnp oracles in ``ref.py``.  Policy:
+
+* on TPU: Pallas kernels, compiled;
+* on CPU: the **ref** path by default (XLA-CPU is faster than interpret-mode
+  emulation; interpret mode is for validation, which the tests do), unless
+  ``REPRO_FORCE_PALLAS=1`` forces emulation.
+
+All functions keep the (vals, found)-style contracts of ``ref.py``.
+"""
+from __future__ import annotations
+
+import os
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import hash_probe as _hp
+from . import merge_lookup as _ml
+from . import ref
+from . import segment_reduce as _sr
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _use_pallas() -> bool:
+    return _on_tpu() or os.environ.get("REPRO_FORCE_PALLAS") == "1"
+
+
+def _interpret() -> bool:
+    return not _on_tpu()
+
+
+def hash_probe(table_keys, table_vals, queries) -> Tuple[jax.Array, jax.Array]:
+    if _use_pallas():
+        return _hp.hash_probe(
+            table_keys, table_vals, queries, interpret=_interpret()
+        )
+    return ref.hash_probe(table_keys, table_vals, queries)
+
+
+def sorted_lookup(table_keys, table_vals, queries) -> Tuple[jax.Array, jax.Array]:
+    if _use_pallas():
+        from . import sorted_lookup as _sl
+
+        return _sl.sorted_lookup(
+            table_keys, table_vals, queries, interpret=_interpret()
+        )
+    return ref.sorted_lookup(table_keys, table_vals, queries)
+
+
+def merge_lookup(table_keys, table_vals, queries) -> Tuple[jax.Array, jax.Array]:
+    """Probes MUST be non-decreasing (the hinted-lookup contract)."""
+    if _use_pallas() and table_keys.shape[0] >= 2 * _ml.WINDOW:
+        return _ml.merge_lookup(
+            table_keys, table_vals, queries, interpret=_interpret()
+        )
+    return ref.merge_lookup(table_keys, table_vals, queries)
+
+
+def segment_reduce(keys, vals) -> Tuple[jax.Array, jax.Array]:
+    if _use_pallas():
+        return _sr.segment_reduce(keys, vals, interpret=_interpret())
+    return ref.segment_reduce(keys, vals)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, kv_valid=None) -> jax.Array:
+    if _use_pallas() and kv_valid is None:
+        # dynamic kv_valid masks take the XLA path (kernel support: TODO via
+        # scalar prefetch; only the serve path uses it)
+        return _fa.flash_attention(
+            q, k, v, causal=causal, window=window, interpret=_interpret()
+        )
+    if k.shape[2] > 2048:
+        # bounded-memory XLA flash formulation (dry-run / long-context path);
+        # GQA-native — K/V are never materialized at H heads
+        return ref.flash_attention_chunked(
+            q, k, v, causal=causal, window=window, kv_valid=kv_valid
+        )
+    g = q.shape[1] // k.shape[1]
+    if g > 1:
+        k = jnp.repeat(k, g, axis=1)
+        v = jnp.repeat(v, g, axis=1)
+    return ref.flash_attention(
+        q, k, v, causal=causal, window=window, kv_valid=kv_valid
+    )

@@ -1,0 +1,177 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the *semantic* definition its kernel must match
+(``tests/test_kernels.py`` sweeps shapes/dtypes and asserts allclose).
+They are also the production fallback path on backends without Pallas.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dicts import base as dbase
+
+
+# ---------------------------------------------------------------------------
+# hash_probe — linear-probe lookup against a built table
+# ---------------------------------------------------------------------------
+def hash_probe(
+    table_keys: jax.Array,  # [C] int32, EMPTY sentinel
+    table_vals: jax.Array,  # [C, V] float32
+    queries: jax.Array,  # [N] int32
+    max_probes: int = 32,
+) -> Tuple[jax.Array, jax.Array]:
+    C = table_keys.shape[0]
+    t = dbase.HashTable(table_keys, table_vals, jnp.int32(max_probes))
+
+    def probe(ks, step):
+        return (dbase.hash1(ks, C) + step) & (C - 1)
+
+    return dbase.generic_lookup(t, queries, probe, max_probes)
+
+
+# ---------------------------------------------------------------------------
+# sorted_lookup — binary search over a sorted, PAD-tailed key array
+# ---------------------------------------------------------------------------
+def sorted_lookup(
+    table_keys: jax.Array,  # [C] int32 ascending with PAD tail
+    table_vals: jax.Array,  # [C, V]
+    queries: jax.Array,  # [N] int32 (any order)
+) -> Tuple[jax.Array, jax.Array]:
+    idx = jnp.searchsorted(table_keys, queries, side="left")
+    idx = jnp.minimum(idx, table_keys.shape[0] - 1)
+    found = table_keys[idx] == queries
+    vals = jnp.where(found[:, None], table_vals[idx], 0.0)
+    return vals, found
+
+
+# ---------------------------------------------------------------------------
+# merge_lookup — sorted probes into a sorted table (hinted-lookup analogue)
+# ---------------------------------------------------------------------------
+def merge_lookup(
+    table_keys: jax.Array,
+    table_vals: jax.Array,
+    queries: jax.Array,  # [N] int32 — MUST be non-decreasing
+) -> Tuple[jax.Array, jax.Array]:
+    # Semantics are identical to sorted_lookup; sortedness only changes cost.
+    return sorted_lookup(table_keys, table_vals, queries)
+
+
+# ---------------------------------------------------------------------------
+# segment_reduce — sums over runs of equal (sorted) keys, emitted at run ends
+# ---------------------------------------------------------------------------
+def segment_reduce(
+    keys: jax.Array,  # [N] int32 sorted ascending (PAD tail allowed)
+    vals: jax.Array,  # [N, V] float32
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (sums[N, V], end_mask[N]): ``sums[i]`` holds the total of the
+    run ending at i where ``end_mask[i]``; other rows are zero.  PAD rows are
+    never run ends."""
+    n = keys.shape[0]
+    live = keys != dbase.PAD
+    is_end = jnp.concatenate([keys[:-1] != keys[1:], jnp.ones((1,), bool)]) & live
+    # run ids then segment-sum
+    is_head = jnp.concatenate([jnp.ones((1,), bool), keys[1:] != keys[:-1]]) & live
+    seg = jnp.cumsum(is_head.astype(jnp.int32)) - 1
+    seg = jnp.where(live, seg, n)
+    totals = jnp.zeros((n, vals.shape[1]), vals.dtype).at[seg].add(
+        jnp.where(live[:, None], vals, 0.0), mode="drop"
+    )  # totals[j] = sum of run j
+    out = jnp.where(is_end[:, None], totals[jnp.minimum(seg, n - 1)], 0.0)
+    return out, is_end
+
+
+# ---------------------------------------------------------------------------
+# flash_attention — softmax attention oracle (optionally causal / windowed)
+# ---------------------------------------------------------------------------
+def flash_attention(
+    q: jax.Array,  # [B, H, Tq, D]
+    k: jax.Array,  # [B, H, Tk, D]
+    v: jax.Array,  # [B, H, Tk, D]
+    causal: bool = True,
+    window: int = 0,  # >0: local attention window (jamba long-context)
+    kv_valid=None,  # dynamic scalar: only kv slots < kv_valid attend
+) -> jax.Array:
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    Tq, Tk = q.shape[2], k.shape[2]
+    qi = jnp.arange(Tq)[:, None] + (Tk - Tq)  # align ends (decode-friendly)
+    ki = jnp.arange(Tk)[None, :]
+    mask = jnp.ones((Tq, Tk), bool)
+    if causal:
+        mask &= ki <= qi
+    if window > 0:
+        mask &= ki > qi - window
+    if kv_valid is not None:
+        mask = mask & (ki < kv_valid)
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v).astype(q.dtype)
+
+
+def flash_attention_chunked(
+    q: jax.Array,  # [B, H, Tq, D]
+    k: jax.Array,  # [B, Hkv, Tk, D] — Hkv may divide H (GQA-native)
+    v: jax.Array,  # [B, Hkv, Tk, D]
+    causal: bool = True,
+    window: int = 0,
+    chunk: int = 1024,
+    kv_valid=None,
+) -> jax.Array:
+    """Online-softmax attention scanned over KV chunks: identical math to
+    ``flash_attention`` with O(Tq·chunk) temporaries instead of O(Tq·Tk) —
+    the XLA-level flash formulation used when the Pallas kernel is not the
+    execution path (CPU runs, and the dry-run lowering at 32k/500k context,
+    where materialized logits would dominate ``memory_analysis``).
+
+    GQA-native: K/V keep their Hkv heads; q is viewed as [B, Hkv, g, Tq, D]
+    and the einsums broadcast over the group dim — no ``jnp.repeat``
+    materialization, so the sharded K/V stream stays Hkv-sized on the wire
+    (EXPERIMENTS.md §Perf, llama4 iteration)."""
+    B, H, Tq, D = q.shape
+    Hkv, Tk = k.shape[1], k.shape[2]
+    g = H // Hkv
+    qg = q.reshape(B, Hkv, g, Tq, D)
+    scale = D**-0.5
+    pk = -Tk % chunk
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    n_chunks = (Tk + pk) // chunk
+    kc = jnp.moveaxis(kp.reshape(B, Hkv, n_chunks, chunk, D), 2, 0)
+    vc = jnp.moveaxis(vp.reshape(B, Hkv, n_chunks, chunk, D), 2, 0)
+    qi = jnp.arange(Tq)[:, None] + (Tk - Tq)
+
+    @jax.checkpoint  # recompute chunk logits in bwd: O(Tq·chunk) residuals,
+    def step(carry, xs):  # not O(Tq·Tk) — the flash trade, XLA-level
+        m, l, acc, ci = carry
+        kb, vb = xs
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kb) * scale
+        ki = ci * chunk + jnp.arange(chunk)[None, :]
+        msk = ki < Tk
+        if causal:
+            msk &= ki <= qi
+        if window > 0:
+            msk &= ki > qi - window
+        if kv_valid is not None:
+            msk = msk & (ki < kv_valid)
+        s = jnp.where(msk[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(m_new[..., None] <= -5e29, 0.0, p)
+        alpha = jnp.exp(m - m_new)
+        alpha = jnp.where(m_new <= -5e29, 0.0, alpha)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p, vb
+        )
+        return (m_new, l, acc, ci + 1), None
+
+    m0 = jnp.full((B, Hkv, g, Tq), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, g, Tq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, g, Tq, D), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(step, (m0, l0, a0, jnp.int32(0)), (kc, vc))
+    denom = jnp.where(l == 0.0, 1.0, l)
+    return (acc / denom[..., None]).reshape(B, H, Tq, D).astype(q.dtype)

@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: segment reduce over sorted keys (sort-based group-by).
+
+The ``@st`` aggregation hot loop: input rows are sorted by group key (or
+arrive sorted — the paper's hinted-insert case, where the sort is skipped);
+the kernel emits each run's total at the run's *last* row.  TPU grid steps
+execute sequentially on a core, so a run spanning tile boundaries is handled
+with a carry scratch (last partial key + partial sum), exactly like flash-
+attention accumulates across KV tiles.
+
+Per tile everything is branchless vector work: one cumsum, one cummax (to
+find each row's previous run end), one gather.  This replaces DBFlex's
+per-row ``find-then-+=`` on a tree/flat_map — the TPU-shaped dual of
+scatter-add hash aggregation (see exec.groupby for the cost-model-driven
+choice between the two).
+
+Run-end detection needs the *global* successor key, so the wrapper passes a
+shifted copy of the key stream (``nxt``) alongside it — a tile never marks
+its last row as a run end unless the first key of the next tile differs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.dicts import base as dbase
+
+ROW_BLOCK = 1024
+
+
+def _kernel(keys_ref, nxt_ref, vals_ref, out_sums_ref, out_end_ref, carry_key, carry_sum):
+    g = pl.program_id(0)
+    ks = keys_ref[...]  # [B] globally sorted
+    nx = nxt_ref[...]  # [B] global successor of each row
+    vs = vals_ref[...]  # [B, V]
+    B = ks.shape[0]
+
+    @pl.when(g == 0)
+    def _init():
+        carry_key[0] = jnp.int32(dbase.EMPTY)
+        carry_sum[...] = jnp.zeros_like(carry_sum)
+
+    ck = carry_key[0]
+    cs = carry_sum[...]  # [1, V]
+
+    live = ks != dbase.PAD
+    vsl = jnp.where(live[:, None], vs, 0.0)
+    is_end = (ks != nx) & live  # true run ends (global successor differs)
+
+    csum = jnp.cumsum(vsl, axis=0)  # [B, V]
+    idx = lax.broadcasted_iota(jnp.int32, (B,), 0)
+    # index of the previous run end strictly before each row (-1 if none)
+    end_pos = jnp.where(is_end, idx, -1)
+    pe_incl = lax.cummax(end_pos, axis=0)
+    pe = jnp.concatenate([jnp.full((1,), -1, jnp.int32), pe_incl[:-1]])
+    base = jnp.where(
+        (pe >= 0)[:, None], jnp.take(csum, jnp.maximum(pe, 0), axis=0), 0.0
+    )
+    totals = csum - base  # run-so-far total at each row
+    # rows whose run began before this tile get the carried partial sum
+    carry_joins = (ks[0] == ck) & live[0]
+    totals = totals + jnp.where((carry_joins & (pe < 0))[:, None], cs, 0.0)
+
+    out_sums_ref[...] = jnp.where(is_end[:, None], totals, 0.0)
+    out_end_ref[...] = is_end.astype(jnp.int32)
+
+    # carry out: partial sum of the trailing unfinished run (zero if the
+    # tile's last live row closed its run)
+    last_end = jnp.max(jnp.where(is_end, idx, -1))
+    tail = csum[B - 1] - jnp.where(last_end >= 0, csum[jnp.maximum(last_end, 0)], 0.0)
+    tail = tail + jnp.where(carry_joins & (last_end < 0), cs[0], 0.0)
+    tail_open = live[B - 1] & ~is_end[B - 1]
+    carry_key[0] = jnp.where(tail_open, ks[B - 1], jnp.int32(dbase.EMPTY))
+    carry_sum[...] = jnp.where(tail_open, tail[None, :], 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def segment_reduce(
+    keys: jax.Array,  # [N] int32 sorted ascending (PAD tail allowed)
+    vals: jax.Array,  # [N, V] float32
+    *,
+    block: int = ROW_BLOCK,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    n = keys.shape[0]
+    V = vals.shape[1]
+    n_pad = -n % block
+    ks = jnp.pad(keys, (0, n_pad), constant_values=dbase.PAD)
+    vs = jnp.pad(vals, ((0, n_pad), (0, 0)))
+    nxt = jnp.concatenate([ks[1:], jnp.full((1,), dbase.PAD, jnp.int32)])
+    grid = (ks.shape[0] // block,)
+    out_sums, out_end = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block, V), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block, V), lambda i: (i, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((ks.shape[0], V), vals.dtype),
+            jax.ShapeDtypeStruct((ks.shape[0],), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.SMEM((1,), jnp.int32),
+            pltpu.VMEM((1, V), jnp.float32),
+        ],
+        interpret=interpret,
+    )(ks, nxt, vs)
+    return out_sums[:n], out_end[:n].astype(bool)

@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: blocked binary search over a sorted dictionary.
+
+The sorted key array stays VMEM-resident across grid steps; each grid step
+binary-searches one tile of queries with a branchless log₂(C) loop of vector
+gathers.  This is the ``st_*`` lookup hot path when the probe sequence is
+*unordered* (ordered probes take the merge_lookup kernel instead — the
+hinted-lookup analogue).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.dicts import base as dbase
+
+QUERY_BLOCK = 512
+
+
+def _kernel(keys_ref, vals_ref, q_ref, out_vals_ref, out_found_ref, *, log2c):
+    tk = keys_ref[...]  # [C] sorted, PAD tail
+    tv = vals_ref[...]
+    q = q_ref[...]
+    C = tk.shape[0]
+    B = q.shape[0]
+
+    lo = jnp.zeros((B,), jnp.int32)
+    hi = jnp.full((B,), C, jnp.int32)
+
+    def step(_, carry):
+        lo, hi = carry
+        mid = (lo + hi) >> 1
+        km = jnp.take(tk, jnp.minimum(mid, C - 1), axis=0)
+        go_right = km < q
+        lo = jnp.where(go_right, mid + 1, lo)
+        hi = jnp.where(go_right, hi, mid)
+        return lo, hi
+
+    lo, _ = jax.lax.fori_loop(0, log2c, step, (lo, hi))
+    idx = jnp.minimum(lo, C - 1)
+    found = jnp.take(tk, idx, axis=0) == q
+    vals = jnp.take(tv, idx, axis=0)
+    out_vals_ref[...] = jnp.where(found[:, None], vals, 0.0)
+    out_found_ref[...] = found.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def sorted_lookup(
+    table_keys: jax.Array,
+    table_vals: jax.Array,
+    queries: jax.Array,
+    *,
+    block: int = QUERY_BLOCK,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    n = queries.shape[0]
+    C = table_keys.shape[0]
+    V = table_vals.shape[1]
+    log2c = max(1, (C - 1).bit_length())
+    n_pad = -n % block
+    # PAD queries always miss (PAD slots hold zero values).
+    qs = jnp.pad(queries, (0, n_pad), constant_values=dbase.EMPTY)
+    grid = (qs.shape[0] // block,)
+    out_vals, out_found = pl.pallas_call(
+        functools.partial(_kernel, log2c=log2c),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((C,), lambda i: (0,)),
+            pl.BlockSpec((C, V), lambda i: (0, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block, V), lambda i: (i, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qs.shape[0], V), table_vals.dtype),
+            jax.ShapeDtypeStruct((qs.shape[0],), jnp.int32),
+        ],
+        interpret=interpret,
+    )(table_keys, table_vals, qs)
+    return out_vals[:n], out_found[:n].astype(bool)

@@ -1,0 +1,136 @@
+"""Post-SPMD HLO analysis: collective traffic + helpers for the roofline.
+
+Parses ``compiled.as_text()`` (optimized, partitioned HLO) and sums the
+result-shape bytes of every collective op.  Notes:
+
+* collective bytes are *per participating device* (result shape is already
+  the per-device shard) — matching the roofline's "bytes crossing this
+  chip's links" denominator;
+* ops inside a ``while`` body (scan over layers) appear ONCE in the text;
+  the roofline layer applies trip-count corrections (see launch.roofline);
+* ``replica_groups`` cardinality is captured so traffic can be attributed
+  to mesh axes (|group| 2 → "pod", 16 → "data"/"model").
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([^}]*)\}")
+# iota form: replica_groups=[n_groups,group_size]<=[N]
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of an HLO shape string like ``f32[8,128]`` or a tuple
+    ``(f32[8], f32[8])``."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    counts: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    bytes_by_kind: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    bytes_by_group_size: Dict[int, int] = field(default_factory=lambda: defaultdict(int))
+    total_bytes: int = 0
+
+    def merge_scaled(self, other: "CollectiveStats", scale: float) -> None:
+        for k, v in other.counts.items():
+            self.counts[k] += int(v * scale)
+        for k, v in other.bytes_by_kind.items():
+            self.bytes_by_kind[k] += int(v * scale)
+        for k, v in other.bytes_by_group_size.items():
+            self.bytes_by_group_size[k] += int(v * scale)
+        self.total_bytes += int(other.total_bytes * scale)
+
+    def summary(self) -> Dict[str, object]:
+        return {
+            "total_bytes": self.total_bytes,
+            "by_kind": dict(self.bytes_by_kind),
+            "counts": dict(self.counts),
+            "by_group_size": {str(k): v for k, v in self.bytes_by_group_size.items()},
+        }
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    out = CollectiveStats()
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # result-shape = lhs of " = kind(", e.g. `%x = f32[8]{0} all-reduce(...)`
+        for kind in _COLLECTIVES:
+            token = f" {kind}("
+            if token in s or s.startswith(kind + "("):
+                lhs = s.split("=", 1)[0] if "=" in s else ""
+                shape_part = s.split("=", 1)[1] if "=" in s else s
+                shape_str = shape_part.split(kind + "(")[0]
+                b = shape_bytes(shape_str)
+                out.counts[kind] += 1
+                out.bytes_by_kind[kind] += b
+                out.total_bytes += b
+                gi = _GROUPS_IOTA_RE.search(s)
+                if gi:
+                    out.bytes_by_group_size[int(gi.group(2))] += b
+                else:
+                    g = _GROUPS_RE.search(s)
+                    if g:
+                        gsize = len(
+                            [x for x in g.group(1).split(",") if x.strip() != ""]
+                        )
+                        out.bytes_by_group_size[gsize] += b
+                break
+    return out
+
+
+def flops_bytes(compiled) -> Tuple[float, float]:
+    ca = compiled.cost_analysis()
+    ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    return flops, byts
+
+
+def memory_summary(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    if isinstance(ma, (list, tuple)):  # pragma: no cover
+        ma = ma[0]
+    return {
+        "argument_bytes": float(ma.argument_size_in_bytes),
+        "output_bytes": float(ma.output_size_in_bytes),
+        "temp_bytes": float(ma.temp_size_in_bytes),
+        "alias_bytes": float(ma.alias_size_in_bytes),
+        "code_bytes": float(ma.generated_code_size_in_bytes),
+        "peak_per_device_gib": (
+            float(ma.argument_size_in_bytes)
+            + float(ma.output_size_in_bytes)
+            + float(ma.temp_size_in_bytes)
+            - float(ma.alias_size_in_bytes)
+        )
+        / 2**30,
+    }

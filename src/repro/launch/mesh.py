@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module never touches jax device state.  The single-pod mesh
+is 16×16 = 256 chips (data × model); the multi-pod mesh prepends a 2-wide
+"pod" axis (2 × 256 = 512 chips) — data parallelism across pods, with the
+gradient all-reduce over "pod" being the inter-pod traffic the dry-run
+must prove out.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh() -> jax.sharding.Mesh:
+    """Whatever this process actually has (tests / examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",), axis_types=(AxisType.Auto,))

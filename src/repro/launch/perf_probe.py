@@ -1,0 +1,132 @@
+import os
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf-iteration probe: per-layer collective breakdown for one cell.
+
+Lowers the unrolled 1-block vs 2-block steps (same method as the roofline's
+delta) and prints the per-block collective ops by kind/shape — the profile
+that drives the §Perf hypothesis loop.
+
+    PYTHONPATH=src python -m repro.launch.perf_probe --arch granite-20b --shape train_4k
+"""
+import argparse
+import collections
+import re
+from typing import Dict, Tuple
+
+from repro.models.config import shape as shape_by_name
+from . import hlo_analysis, roofline
+
+_SHAPE = re.compile(r"(\w+\[[\d,]*\])")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    profile_cell(args.arch, args.shape, args.multi_pod)
+
+
+def profile_cell(arch: str, shape_name: str, multi_pod: bool = False):
+    import jax
+    import jax.numpy as jnp
+
+    from repro import configs
+
+    spec = shape_by_name(shape_name)
+    cfg = configs.get(arch)
+    hists = {}
+    for n in (1, 2):
+        cfg_n, _ = roofline._blocks_cfg(cfg, n)
+        compiled = _compile(cfg_n, spec, multi_pod)
+        hist = collections.Counter()
+        byts = collections.Counter()
+        for line in compiled.as_text().splitlines():
+            s = line.strip()
+            for kind in ("all-reduce", "all-gather", "reduce-scatter",
+                         "all-to-all", "collective-permute"):
+                if f" {kind}(" in s or s.startswith(kind + "("):
+                    shape_str = s.split("=", 1)[1].split(kind + "(")[0] if "=" in s else s
+                    m = _SHAPE.search(shape_str)
+                    key = (kind, m.group(1) if m else "?")
+                    hist[key] += 1
+                    byts[key] += hlo_analysis.shape_bytes(shape_str)
+                    break
+        hists[n] = (hist, byts)
+    h1, b1 = hists[1]
+    h2, b2 = hists[2]
+    print(f"== per-block collective delta for {arch} × {shape_name}"
+          f" ({'2x16x16' if multi_pod else '16x16'}):")
+    rows = []
+    for key in set(h2) | set(h1):
+        dc = h2.get(key, 0) - h1.get(key, 0)
+        db = b2.get(key, 0) - b1.get(key, 0)
+        if dc or db:
+            rows.append((db, dc, key))
+    total = 0
+    for db, dc, (kind, shp) in sorted(rows, reverse=True):
+        print(f"  {dc:+3d}x {kind:<20} {shp:<28} {db/2**20:+9.1f} MiB")
+        total += db
+    print(f"  == per-block delta total: {total/2**20:.1f} MiB/device")
+    print("== per-step base (1-block program):")
+    for key, b in sorted(b1.items(), key=lambda kv: -kv[1])[:10]:
+        print(f"  {h1[key]:3d}x {key[0]:<20} {key[1]:<28} {b/2**20:9.1f} MiB")
+
+
+def _compile(cfg_n, spec, multi_pod):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.registry import get_model
+    from repro.sharding import partition
+    from repro.sharding.params import (
+        batch_shardings, cache_shardings, layout_overrides,
+        opt_state_shardings, param_shardings,
+    )
+    from repro.train.optimizer import OptConfig, init_state
+    from . import dryrun as dr
+    from .mesh import make_production_mesh
+
+    model = get_model(cfg_n)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    opt_cfg = OptConfig(moments_dtype="bfloat16")
+    with partition.use_mesh(
+        mesh, overrides=layout_overrides(model.cfg, spec.global_batch, mesh)
+    ):
+        param_shapes = model.init_shapes()
+        if spec.kind != "train":
+            param_shapes = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(
+                    s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype
+                ),
+                param_shapes,
+            )
+        p_sh = param_shardings(mesh, param_shapes)
+        inputs = model.input_specs(spec)
+        if spec.kind == "train":
+            opt_shapes = jax.eval_shape(lambda: init_state(param_shapes, opt_cfg))
+            o_sh = opt_state_shardings(mesh, opt_shapes)
+            b_sh = batch_shardings(mesh, inputs)
+            return jax.jit(
+                dr.make_train_step(model, opt_cfg),
+                in_shardings=(p_sh, o_sh, b_sh),
+                out_shardings=(p_sh, o_sh, None), donate_argnums=(0, 1),
+            ).lower(param_shapes, opt_shapes, inputs).compile()
+        if spec.kind == "prefill":
+            b_sh = batch_shardings(mesh, inputs)
+            return jax.jit(
+                dr.make_prefill_step(model), in_shardings=(p_sh, b_sh)
+            ).lower(param_shapes, inputs).compile()
+        c_sh = cache_shardings(mesh, inputs["cache"])
+        t_sh = batch_shardings(mesh, inputs["token"])
+        return jax.jit(
+            dr.make_serve_step(model), in_shardings=(p_sh, c_sh, t_sh),
+            out_shardings=(None, c_sh), donate_argnums=(1,),
+        ).lower(param_shapes, inputs["cache"], inputs["token"]).compile()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,474 @@
+import os
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Roofline analysis per (arch × shape × mesh) — EXPERIMENTS.md §Roofline.
+
+Three terms per cell, all in seconds/step on the v5e target:
+
+    compute    = FLOPs_per_device / PEAK_FLOPS
+    memory     = HBM_bytes_per_device / HBM_BW
+    collective = collective_bytes_per_device / ICI_BW
+
+Two estimates are reported side by side and cross-checked:
+
+* ``hlo``      — from the compiled dry-run artifact.  XLA's cost_analysis
+  counts a ``scan`` body ONCE, so the per-layer-block step is lowered
+  separately (grad-of-block for train, block-apply for serve) and scaled by
+  the trip count; inner time-chunk scans (chunked attention / SSM) are
+  corrected with their analytic per-chunk flops (the residual undercount is
+  measured and reported as ``hlo_coverage``).
+* ``analytic`` — closed-form flops/bytes from the architecture equations
+  (matmul-exact; the headline numbers).
+
+MODEL_FLOPS = 6·N_active·D is reported with MODEL_FLOPS/HLO_FLOPs — the
+"useful fraction" that exposes remat recompute and dispatch overheads.
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link.
+"""
+import argparse
+import dataclasses
+import functools
+import json
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models.config import SHAPES, ArchConfig, ShapeSpec, shape as shape_by_name
+from repro.models.registry import Model, get_model
+from repro.sharding import partition
+from repro.sharding.params import (
+    batch_shardings,
+    cache_shardings,
+    layout_overrides,
+    opt_state_shardings,
+    param_shardings,
+)
+from repro.train.optimizer import OptConfig, init_state
+from . import dryrun as dr
+from . import hlo_analysis
+from .mesh import make_production_mesh
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link
+
+ATTN_CHUNK = 1024  # kernels.ref.flash_attention_chunked default
+
+
+# ---------------------------------------------------------------------------
+# analytic FLOPs (forward, per device, whole step)
+# ---------------------------------------------------------------------------
+
+
+def _attn_tkv(kind: str, T: int, causal: bool = True) -> float:
+    if kind == "decode":
+        return float(T)
+    return T / 2 if causal else float(T)
+
+
+def analytic_flops(cfg: ArchConfig, spec: ShapeSpec, n_devices: int) -> Dict[str, float]:
+    """Closed-form FLOPs per device for one step (train: fwd+bwd+remat-fwd)."""
+    d, ff, V = cfg.d_model, cfg.d_ff, cfg.padded_vocab
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    B, T = spec.global_batch, spec.seq_len
+    kind = spec.kind
+    tokens = B * (1 if kind == "decode" else T)
+
+    def attn_flops_tok(Tkv):
+        proj = 2 * d * hd * (2 * H + 2 * Hkv)
+        core = 4 * H * hd * Tkv
+        return proj + core
+
+    def dense_mlp_tok():
+        return 6 * d * ff if cfg.mlp == "swiglu" else 4 * d * ff
+
+    def moe_tok():
+        active = cfg.moe_top_k + (1 if cfg.moe_shared_expert else 0)
+        return active * 6 * d * ff + 2 * d * cfg.moe_experts
+
+    def mamba_tok():
+        di = cfg.mamba_expand * d
+        s = cfg.mamba_d_state
+        rank = max(1, d // 16)
+        return (
+            2 * d * 2 * di + 2 * cfg.mamba_conv * di + 2 * di * (rank + 2 * s)
+            + 2 * rank * di + 6 * di * s + 2 * di * d
+        )
+
+    def rwkv_tok():
+        hs = cfg.rwkv_head_size
+        c = cfg.scan_chunk
+        tmix = 12 * d * d + d * (4 * c + 4 * hs)
+        cmix = 4 * d * ff + 2 * d * d
+        return tmix + cmix
+
+    Tkv = _attn_tkv(kind, T)
+    per_tok = 0.0
+    parts: Dict[str, float] = {}
+    if cfg.model_kind == "decoder":
+        ffn = moe_tok() if (cfg.moe_experts and cfg.moe_every == 1) else dense_mlp_tok()
+        per_tok = cfg.n_layers * (attn_flops_tok(Tkv) + ffn)
+        parts["attn_core"] = cfg.n_layers * 4 * H * hd * Tkv * tokens
+    elif cfg.model_kind == "encdec":
+        enc_tok = cfg.enc_layers * (attn_flops_tok(cfg.enc_seq / 2) + dense_mlp_tok())
+        dec_tok = cfg.n_layers * (
+            attn_flops_tok(Tkv) + attn_flops_tok(cfg.enc_seq) + dense_mlp_tok()
+        )
+        enc_tokens = B * cfg.enc_seq if kind != "decode" else 0
+        parts["encoder"] = enc_tok * enc_tokens
+        per_tok = dec_tok
+    elif cfg.model_kind == "rwkv":
+        per_tok = cfg.n_layers * rwkv_tok()
+    elif cfg.model_kind == "jamba":
+        n_attn = cfg.n_layers // cfg.attn_period
+        n_mamba = cfg.n_layers - n_attn
+        n_moe = cfg.n_layers // 2
+        n_dense = cfg.n_layers - n_moe
+        Tkv_j = min(Tkv, cfg.long_window) if T > 32768 else Tkv
+        per_tok = (
+            n_attn * attn_flops_tok(Tkv_j)
+            + n_mamba * mamba_tok()
+            + n_moe * (cfg.moe_top_k * 6 * d * ff + 2 * d * cfg.moe_experts)
+            + n_dense * dense_mlp_tok()
+        )
+    head = 2 * d * V
+    fwd = (per_tok + head) * tokens + parts.get("encoder", 0.0)
+    mult = 4.0 if kind == "train" else 1.0  # bwd ×2 + remat re-forward ×1
+    total = fwd * mult
+    return {
+        "fwd_flops_global": fwd,
+        "total_flops_global": total,
+        "total_flops_per_device": total / n_devices,
+        "model_flops_6nd": 6.0 * _active_params(cfg) * tokens,
+    }
+
+
+def _active_params(cfg: ArchConfig) -> float:
+    """Parameters touched per token (dense count; MoE counts active experts
+    + router + shared)."""
+    d, ff = cfg.d_model, cfg.d_ff
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    attn = d * hd * (2 * H + 2 * Hkv)
+    if cfg.moe_experts and cfg.moe_every == 1:
+        ffn = (cfg.moe_top_k + (1 if cfg.moe_shared_expert else 0)) * 3 * d * ff
+        ffn += d * cfg.moe_experts
+    else:
+        ffn = (3 if cfg.mlp == "swiglu" else 2) * d * ff
+    per_layer = attn + ffn
+    if cfg.model_kind == "jamba":
+        di = cfg.mamba_expand * d
+        s = cfg.mamba_d_state
+        rank = max(1, d // 16)
+        mamba = 2 * d * 2 * di / 2 + di * (rank + 2 * s) + rank * di + di * d
+        n_attn = cfg.n_layers // cfg.attn_period
+        n_moe = cfg.n_layers // 2
+        per = (
+            n_attn * attn
+            + (cfg.n_layers - n_attn) * mamba
+            + n_moe * cfg.moe_top_k * 3 * d * ff
+            + (cfg.n_layers - n_moe) * 3 * d * ff
+        )
+        return per + cfg.padded_vocab * d
+    if cfg.model_kind == "rwkv":
+        per_layer = 6 * d * d + (2 * d * ff + d * d)
+    total = cfg.n_layers * per_layer + cfg.padded_vocab * d
+    if cfg.model_kind == "encdec":
+        total += cfg.enc_layers * (attn + 2 * d * ff)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# analytic HBM bytes (per device, per step)
+# ---------------------------------------------------------------------------
+
+
+def analytic_bytes(
+    cfg: ArchConfig, spec: ShapeSpec, mesh, n_params: int
+) -> Dict[str, float]:
+    n_dev = mesh.devices.size
+    n_model = mesh.shape.get("model", 1)
+    dp = n_dev // n_model
+    # params are sharded over every axis (TP × fsdp)
+    p_dev = n_params / n_dev
+    B, T = spec.global_batch, spec.seq_len
+    b_loc = max(B // dp, 1)
+    if spec.kind == "train":
+        # bf16 reads ×3 (fwd, bwd, remat re-fwd), f32 grad write, Adam m/v r+w
+        param_traffic = p_dev * (3 * 2 + 4 + 4 * 4)
+        act = 6 * cfg.n_layers * b_loc * (T / max(n_model, 1)) * cfg.d_model * 2
+        cache = 0.0
+    elif spec.kind == "prefill":
+        param_traffic = p_dev * 2
+        act = 4 * cfg.n_layers * b_loc * T * cfg.d_model * 2 / max(n_model, 1)
+        cache = 0.0
+    else:  # decode: read the whole resident cache every step
+        param_traffic = p_dev * 2
+        act = 0.0
+        cache = _cache_bytes_per_device(cfg, spec, mesh)
+    total = param_traffic + act + cache
+    return {
+        "param_traffic": param_traffic,
+        "activation_traffic": act,
+        "cache_traffic": cache,
+        "total_bytes_per_device": total,
+    }
+
+
+def _cache_bytes_per_device(cfg: ArchConfig, spec: ShapeSpec, mesh) -> float:
+    model = get_model(cfg)
+    shapes = jax.eval_shape(
+        lambda: model.mod.init_cache(cfg, spec.global_batch, spec.seq_len)
+    )
+    total = sum(
+        int(jnp.dtype(x.dtype).itemsize) * int(functools.reduce(lambda a, b: a * b, x.shape, 1))
+        for x in jax.tree.leaves(shapes)
+    )
+    return total / mesh.devices.size
+
+
+# ---------------------------------------------------------------------------
+# per-block HLO artifact (scan-once correction)
+# ---------------------------------------------------------------------------
+
+
+def _blocks_cfg(cfg: ArchConfig, n: int) -> Tuple[ArchConfig, int]:
+    """A config with exactly ``n`` *unrolled* scan blocks; returns
+    (cfg_n, n_blocks_full)."""
+    if cfg.model_kind == "jamba":
+        return (
+            dataclasses.replace(
+                cfg, n_layers=n * cfg.attn_period, scan_unroll=True
+            ),
+            cfg.n_layers // cfg.attn_period,
+        )
+    if cfg.model_kind == "encdec":
+        return (
+            dataclasses.replace(cfg, n_layers=n, enc_layers=n, scan_unroll=True),
+            cfg.n_layers,  # enc+dec blocks paired per unit
+        )
+    return dataclasses.replace(cfg, n_layers=n, scan_unroll=True), cfg.n_layers
+
+
+def _lower_cfg_step(cfg_n: ArchConfig, spec: ShapeSpec, multi_pod: bool):
+    model = get_model(cfg_n)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    opt_cfg = OptConfig(moments_dtype="bfloat16")  # match dryrun
+    with partition.use_mesh(
+        mesh, overrides=layout_overrides(model.cfg, spec.global_batch, mesh)
+    ):
+        param_shapes = model.init_shapes()
+        if spec.kind != "train":
+            param_shapes = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(
+                    s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype
+                ),
+                param_shapes,
+            )
+        p_sh = param_shardings(mesh, param_shapes)
+        inputs = model.input_specs(spec)
+        if spec.kind == "train":
+            opt_shapes = jax.eval_shape(lambda: init_state(param_shapes, opt_cfg))
+            o_sh = opt_state_shardings(mesh, opt_shapes)
+            b_sh = batch_shardings(mesh, inputs)
+            step = dr.make_train_step(model, opt_cfg)
+            compiled = jax.jit(
+                step, in_shardings=(p_sh, o_sh, b_sh),
+                out_shardings=(p_sh, o_sh, None), donate_argnums=(0, 1),
+            ).lower(param_shapes, opt_shapes, inputs).compile()
+        elif spec.kind == "prefill":
+            b_sh = batch_shardings(mesh, inputs)
+            compiled = jax.jit(
+                dr.make_prefill_step(model), in_shardings=(p_sh, b_sh)
+            ).lower(param_shapes, inputs).compile()
+        else:
+            c_sh = cache_shardings(mesh, inputs["cache"])
+            t_sh = batch_shardings(mesh, inputs["token"])
+            compiled = jax.jit(
+                dr.make_serve_step(model), in_shardings=(p_sh, c_sh, t_sh),
+                out_shardings=(None, c_sh), donate_argnums=(1,),
+            ).lower(param_shapes, inputs["cache"], inputs["token"]).compile()
+    flops, byts = hlo_analysis.flops_bytes(compiled)
+    coll = hlo_analysis.collective_stats(compiled.as_text())
+    return {
+        "flops": flops,
+        "bytes": byts,
+        "collective_bytes": float(coll.total_bytes),
+    }
+
+
+def block_artifact(
+    arch: str, spec: ShapeSpec, multi_pod: bool = False
+) -> Dict[str, float]:
+    """Per-block costs via the unrolled-delta method: lower 2-block and
+    1-block models with layers UNROLLED (no scan — every op counted), take
+    the difference.  Per-step costs (embed, head, loss, optimizer, gradient
+    exchange of non-layer params) cancel exactly; what remains is one
+    block's fwd(+bwd+remat) flops/bytes/collectives under the production
+    sharding."""
+    cfg = configs.get(arch)
+    cfg1, n_blocks = _blocks_cfg(cfg, 1)
+    cfg2, _ = _blocks_cfg(cfg, 2)
+    a1 = _lower_cfg_step(cfg1, spec, multi_pod)
+    a2 = _lower_cfg_step(cfg2, spec, multi_pod)
+    return {
+        "n_blocks": n_blocks,
+        "flops": a2["flops"] - a1["flops"],
+        "bytes": a2["bytes"] - a1["bytes"],
+        "collective_bytes": a2["collective_bytes"] - a1["collective_bytes"],
+        "per_step_overhead_flops": 2 * a1["flops"] - a2["flops"],
+    }
+
+
+# ---------------------------------------------------------------------------
+# the roofline report for one cell
+# ---------------------------------------------------------------------------
+
+ADVICE = {
+    "compute": "raise arithmetic efficiency: larger per-chip batch/seq tiles, "
+    "fuse attention (Pallas kernel on real TPU), drop remat recompute where "
+    "memory allows",
+    "memory": "cut HBM traffic: bf16/int8 weights & cache, larger fused "
+    "blocks so activations stay in VMEM, quantized KV cache for decode",
+    "collective": "overlap/shrink collectives: int8 gradient exchange, "
+    "ring-overlapped all-gather matmuls, hierarchical (intra-pod-first) "
+    "reductions, rebalance TP vs DP axes",
+}
+
+
+def roofline_cell(
+    arch: str,
+    shape_name: str,
+    dry_result: Optional[Dict[str, Any]] = None,
+    multi_pod: bool = False,
+    with_block_correction: bool = True,
+) -> Dict[str, Any]:
+    cfg = configs.get(arch)
+    spec = shape_by_name(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    model = get_model(cfg)
+    ok, why = model.supports(spec)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped", "reason": why}
+
+    af = analytic_flops(cfg, spec, n_dev)
+    n_params = sum(
+        int(functools.reduce(lambda a, b: a * b, x.shape, 1))
+        for x in jax.tree.leaves(model.init_shapes())
+    )
+    ab = analytic_bytes(cfg, spec, mesh, n_params)
+
+    out: Dict[str, Any] = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "status": "ok",
+        "n_params": n_params,
+        "analytic": {
+            "compute_s": af["total_flops_per_device"] / PEAK_FLOPS,
+            "memory_s": ab["total_bytes_per_device"] / HBM_BW,
+            "flops_per_device": af["total_flops_per_device"],
+            "bytes_per_device": ab["total_bytes_per_device"],
+            "model_flops_6nd": af["model_flops_6nd"],
+        },
+    }
+
+    # ---- HLO terms (scan-corrected)
+    if dry_result is not None and dry_result.get("status") == "ok":
+        hlo_f = dry_result["hlo_flops_per_device"]
+        hlo_b = dry_result["hlo_bytes_per_device"]
+        hlo_c = dry_result["collectives"]["total_bytes"]
+        corr = None
+        if with_block_correction:
+            try:
+                blk = block_artifact(arch, spec, multi_pod=multi_pod)
+                nb = blk["n_blocks"]
+                corr = {
+                    # deltas clamp at 0: XLA occasionally optimizes the
+                    # 2-block lowering below the 1-block one
+                    "flops": hlo_f + (nb - 1) * max(blk["flops"], 0.0),
+                    "bytes": hlo_b + (nb - 1) * max(blk["bytes"], 0.0),
+                    "collective_bytes": hlo_c
+                    + (nb - 1) * max(blk["collective_bytes"], 0.0),
+                    "n_blocks": nb,
+                }
+            except Exception as e:  # noqa: BLE001
+                corr = {"error": repr(e)[:200]}
+        hf = corr["flops"] if corr and "flops" in corr else hlo_f
+        hb = corr["bytes"] if corr and "bytes" in corr else hlo_b
+        hc = corr["collective_bytes"] if corr and "flops" in corr else hlo_c
+        out["hlo"] = {
+            "compute_s": hf / PEAK_FLOPS,
+            "memory_s": hb / HBM_BW,
+            "collective_s": hc / ICI_BW,
+            "flops_per_device": hf,
+            "bytes_per_device": hb,
+            "collective_bytes_per_device": hc,
+            "scan_correction": corr,
+            "useful_fraction": (
+                af["model_flops_6nd"] / (hf * n_dev) if hf else None
+            ),
+            "hlo_coverage": hf * n_dev / max(af["total_flops_global"], 1.0),
+        }
+        coll_s = hc / ICI_BW
+    else:
+        coll_s = 0.0
+        out["hlo"] = None
+
+    terms = {
+        "compute": out["analytic"]["compute_s"],
+        "memory": out["analytic"]["memory_s"],
+        "collective": coll_s,
+    }
+    dominant = max(terms, key=terms.get)
+    step_s = max(terms.values())
+    out["terms_s"] = terms
+    out["dominant"] = dominant
+    out["roofline_fraction"] = (
+        out["analytic"]["compute_s"] / step_s if step_s > 0 else None
+    )
+    out["mfu_upper_bound"] = (
+        af["model_flops_6nd"] / n_dev / PEAK_FLOPS / step_s if step_s > 0 else None
+    )
+    out["advice"] = ADVICE[dominant]
+    return out
+
+
+def run_all(dryrun_path: str = "var/dryrun.json", out_path: str = "var/roofline.json"):
+    with open(dryrun_path) as f:
+        dres = json.load(f)
+    index = {(r["arch"], r["shape"], r["mesh"]): r for r in dres}
+    rows = []
+    for arch in configs.ARCH_IDS:
+        for spec in SHAPES:
+            key = (arch, spec.name, "16x16")
+            rows.append(
+                roofline_cell(arch, spec.name, dry_result=index.get(key))
+            )
+            with open(out_path, "w") as f:
+                json.dump(rows, f, indent=1)
+    n_ok = sum(r["status"] == "ok" for r in rows)
+    print(f"roofline: {n_ok} cells -> {out_path}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--dryrun", default="var/dryrun.json")
+    ap.add_argument("--out", default="var/roofline.json")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+    if args.all:
+        run_all(args.dryrun, args.out)
+    else:
+        res = roofline_cell(args.arch, args.shape)
+        print(json.dumps(res, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b \
+        --steps 1000 --ckpt-dir /ckpts/run1 [--multi-pod] [--compress]
+
+On the pod fleet this process runs per host (jax.distributed.initialize is
+called when JAX_COORDINATOR is set); in this container it runs the same code
+on the host mesh.  Fault tolerance: the Trainer resumes from the newest
+committed checkpoint; the data stream position rides in checkpoint meta, so
+a restarted run is bit-identical to an uninterrupted one.
+"""
+import argparse
+import os
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=1000)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
+    ap.add_argument("--reduced", action="store_true", help="CPU-sized config")
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    if os.environ.get("JAX_COORDINATOR"):  # pragma: no cover - fleet only
+        import jax
+
+        jax.distributed.initialize()
+
+    from repro.models.registry import get_model_by_name
+    from repro.data.lm_data import StreamConfig
+    from repro.train.optimizer import OptConfig
+    from repro.train.train_loop import Trainer, TrainConfig
+
+    model = get_model_by_name(args.arch, reduced=args.reduced)
+    scfg = StreamConfig(
+        vocab=model.cfg.vocab, global_batch=args.global_batch,
+        seq_len=args.seq_len, seed=0,
+    )
+    tcfg = TrainConfig(
+        steps=args.steps, ckpt_every=100, ckpt_dir=args.ckpt_dir, log_every=10,
+        opt=OptConfig(
+            lr=args.lr, warmup_steps=max(args.steps // 50, 10),
+            total_steps=args.steps, compress=args.compress,
+        ),
+    )
+    t = Trainer(model, tcfg, scfg)
+    start = t.restore_or_init()
+    print(f"[launch.train] {args.arch} from step {start}")
+    t.run()
+
+
+if __name__ == "__main__":
+    main()

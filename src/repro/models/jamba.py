@@ -1,0 +1,224 @@
+"""Jamba — hybrid Mamba + attention + MoE LM (arXiv:2403.19887).
+
+Layer pattern per period of ``attn_period`` (= 8): seven Mamba layers and
+one attention layer (position period//2), with the FFN alternating
+dense ↔ MoE every other layer (16 experts, top-2 for Jamba-1.5-Large).
+
+Scanning with heterogeneous layers: the model scans over *periods* — each
+scan step applies one full period (8 sub-layers, unrolled inside the body),
+so every scan step has identical structure and the dry-run compiles one
+period regardless of total depth.  72 layers = 9 periods.
+
+Long-context (500k) attention layers use a sliding window
+(``cfg.long_window``), which keeps the decode cache bounded — that is why
+jamba runs the ``long_500k`` cell while pure full-attention archs skip it.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.partition import current_mesh, shard_hint
+from . import common, mamba, moe as moe_mod
+from .common import Params
+from .config import ArchConfig
+
+
+def _period_init(cfg: ArchConfig, key) -> Params:
+    """One period: attn_period sub-layers."""
+    n = cfg.attn_period
+    keys = jax.random.split(key, n * 2)
+    subs = []
+    for i in range(n):
+        is_attn = i == n // 2
+        is_moe = (i % 2 == 1) and cfg.moe_experts > 0
+        kp, kf = keys[2 * i], keys[2 * i + 1]
+        sub: Params = {
+            "pre_norm": common.rmsnorm_init(cfg.d_model),
+            "ffn_norm": common.rmsnorm_init(cfg.d_model),
+        }
+        if is_attn:
+            sub["attn"] = common.attention_init(
+                kp, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+            )
+        else:
+            sub["mamba"] = mamba.layer_init(cfg, kp)
+        if is_moe:
+            sub["moe"] = moe_mod.moe_init(
+                kf, cfg.d_model, cfg.d_ff, cfg.moe_experts, False
+            )
+        else:
+            sub["mlp"] = common.swiglu_init(kf, cfg.d_model, cfg.d_ff)
+        subs.append(sub)
+    return {f"sub{i}": s for i, s in enumerate(subs)}
+
+
+def n_periods(cfg: ArchConfig) -> int:
+    assert cfg.n_layers % cfg.attn_period == 0, (cfg.n_layers, cfg.attn_period)
+    return cfg.n_layers // cfg.attn_period
+
+
+def init(cfg: ArchConfig, key) -> Params:
+    ke, kl = jax.random.split(key)
+    period_keys = jax.random.split(kl, n_periods(cfg))
+    periods = jax.vmap(lambda k: _period_init(cfg, k))(period_keys)
+    return {
+        "embed": common.embed_init(ke, cfg.padded_vocab, cfg.d_model),
+        "periods": periods,
+        "final_norm": common.rmsnorm_init(cfg.d_model),
+    }
+
+
+def _sub_apply(
+    cfg: ArchConfig,
+    sub: Params,
+    x: jax.Array,
+    window: int,
+    state: Optional[Params] = None,
+    positions: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[Params]]:
+    h_in = common.rmsnorm(sub["pre_norm"], x)
+    new_state: Optional[Params] = None
+    if "attn" in sub:
+        cache = (state["k"], state["v"]) if state is not None else None
+        kv_valid = None
+        if cache is not None:
+            # the ring cache's size IS the window; mask unfilled slots only
+            kv_valid = jnp.minimum(
+                (positions[0] if positions is not None else 0) + 1,
+                cache[0].shape[2],
+            )
+        h, new_kv = common.attention(
+            sub["attn"],
+            h_in,
+            n_heads=cfg.n_heads,
+            n_kv=cfg.n_kv_heads,
+            head_dim=cfg.hd,
+            positions=positions,
+            causal=True,
+            window=0 if cache is not None else window,
+            rope_theta=cfg.rope_theta,
+            cache=cache,
+            kv_valid=kv_valid,
+        )
+        if state is not None:
+            new_state = {"k": new_kv[0], "v": new_kv[1]}
+    else:
+        h, new_m = mamba.apply(sub["mamba"], h_in, cfg, state=state)
+        new_state = new_m
+    x = x + h
+    x = shard_hint(x, "batch", "sp" if cfg.use_sp else "none", "none")
+    f_in = common.rmsnorm(sub["ffn_norm"], x)
+    if "moe" in sub:
+        f, _aux = moe_mod.moe_dispatch_auto(
+            sub["moe"], f_in, cfg, mesh=current_mesh()
+        )
+    else:
+        f = common.swiglu(sub["mlp"], f_in)
+    x = x + f
+    return shard_hint(x, "batch", "sp" if cfg.use_sp else "none", "none"), new_state
+
+
+def forward(
+    cfg: ArchConfig,
+    params: Params,
+    tokens: jax.Array,
+    window: int = 0,
+    remat: bool = True,
+):
+    adt = jnp.dtype(cfg.act_dtype)
+    x = common.embed(params["embed"], tokens).astype(adt)
+    x = shard_hint(x, "batch", "sp" if cfg.use_sp else "none", "none")
+    positions = jnp.arange(tokens.shape[1])
+
+    def period(pp, y):
+        pp = common.cast_tree(pp, adt)
+        for i in range(cfg.attn_period):
+            y, _ = _sub_apply(cfg, pp[f"sub{i}"], y, window, positions=positions)
+        return y
+
+    def scan_body(carry, pp):
+        fn = jax.checkpoint(period) if remat else period
+        return fn(pp, carry), None
+
+    x, _ = jax.lax.scan(scan_body, x, params["periods"], unroll=cfg.scan_unroll)
+    x = shard_hint(x, "batch", None, "none")
+    x = common.rmsnorm(common.cast_tree(params["final_norm"], adt), x)
+    return common.unembed(common.cast_tree(params["embed"], adt), x), jnp.zeros(
+        (3,), jnp.float32
+    )
+
+
+def loss_fn(cfg: ArchConfig, params: Params, batch: Dict[str, jax.Array]):
+    window = cfg.long_window if batch["tokens"].shape[1] > 32768 else 0
+    logits, _ = forward(cfg, params, batch["tokens"], window=window)
+    if cfg.padded_vocab != cfg.vocab:
+        pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab
+        logits = jnp.where(pad_mask, logits, -1e30)
+    return common.cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+
+
+# ---------------------------------------------------------------------------
+# decode: mamba states + windowed attention caches
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int) -> Params:
+    """Attention layers cache min(cache_len, long_window) tokens; mamba
+    layers carry O(1) state — the hybrid's long-context advantage."""
+    np_ = n_periods(cfg)
+    attn_len = min(cache_len, cfg.long_window) if cache_len > 32768 else cache_len
+    d_in = cfg.mamba_expand * cfg.d_model
+    adt = jnp.dtype(cfg.act_dtype)
+    return {
+        "k": jnp.zeros((np_, batch, cfg.n_kv_heads, attn_len, cfg.hd), adt),
+        "v": jnp.zeros((np_, batch, cfg.n_kv_heads, attn_len, cfg.hd), adt),
+        "conv": jnp.zeros((np_, cfg.attn_period - 1, batch, cfg.mamba_conv - 1, d_in)),
+        "h": jnp.zeros((np_, cfg.attn_period - 1, batch, d_in, cfg.mamba_d_state)),
+        "len": jnp.zeros((), jnp.int32) + cache_len,
+    }
+
+
+def decode_step(cfg: ArchConfig, params: Params, cache: Params, token: jax.Array):
+    adt = jnp.dtype(cfg.act_dtype)
+    x = common.embed(params["embed"], token[:, None]).astype(adt)
+    pos = cache["len"][None]
+    window = 0  # ring cache size enforces the window during decode
+
+    def body(carry, xs):
+        y = carry
+        pp, ck, cv, conv, h = xs
+        pp = common.cast_tree(pp, adt)
+        mi = 0
+        new_conv, new_h = [], []
+        nk = nv = None
+        for i in range(cfg.attn_period):
+            sub = pp[f"sub{i}"]
+            if "attn" in sub:
+                y, st = _sub_apply(
+                    cfg, sub, y, window, state={"k": ck, "v": cv}, positions=pos
+                )
+                nk, nv = st["k"], st["v"]
+            else:
+                y, st = _sub_apply(
+                    cfg, sub, y, window,
+                    state={"conv": conv[mi], "h": h[mi]}, positions=pos,
+                )
+                new_conv.append(st["conv"])
+                new_h.append(st["h"])
+                mi += 1
+        return y, (nk, nv, jnp.stack(new_conv), jnp.stack(new_h))
+
+    x, (nk, nv, nconv, nh) = jax.lax.scan(
+        body, x, (params["periods"], cache["k"], cache["v"], cache["conv"], cache["h"]),
+        unroll=cfg.scan_unroll,
+    )
+    x = common.rmsnorm(common.cast_tree(params["final_norm"], adt), x)
+    logits = common.unembed(common.cast_tree(params["embed"], adt), x)
+    new_cache = {
+        "k": nk, "v": nv, "conv": nconv, "h": nh, "len": cache["len"] + 1
+    }
+    return logits[:, 0], new_cache

@@ -1,0 +1,128 @@
+"""Mamba (selective SSM) layer — the state-space component of Jamba.
+
+Standard Mamba-1 block: in-proj → causal depthwise conv → selective scan
+(data-dependent Δ, B, C) → gate → out-proj.  The scan carries
+``h: [B, d_inner, d_state]`` across time via ``lax.scan``; per-step tensors
+(Δ, B_t, C_t) are computed inside the step from pre-projected streams, so
+no [B, T, d_inner, d_state] temporary is ever materialized.
+
+TP sharding: ``d_inner`` is channel-independent end-to-end (conv is
+depthwise, the scan is per-channel), so the whole block shards on "model"
+along d_inner with zero collectives until out_proj's row-parallel reduce.
+
+Decode: single-step state update (O(1) in context length) with a conv tail
+buffer of ``d_conv-1`` columns.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.partition import shard_hint
+from . import common
+from .common import Params
+from .config import ArchConfig
+
+
+def layer_init(cfg: ArchConfig, key) -> Params:
+    d = cfg.d_model
+    d_in = cfg.mamba_expand * d
+    ds = cfg.mamba_d_state
+    dt_rank = max(1, d // 16)
+    ks = jax.random.split(key, 7)
+    return {
+        "in_proj": common.dense_init(ks[0], d, 2 * d_in),
+        "conv_w": jax.random.normal(ks[1], (cfg.mamba_conv, d_in)) * 0.2,
+        "conv_b": jnp.zeros((d_in,)),
+        "x_proj": common.dense_init(ks[2], d_in, dt_rank + 2 * ds),
+        "dt_proj": common.dense_init(ks[3], dt_rank, d_in, scale=dt_rank**-0.5),
+        "dt_bias": jnp.log(jnp.expm1(jnp.exp(jax.random.uniform(
+            ks[4], (d_in,), minval=jnp.log(1e-3), maxval=jnp.log(1e-1))))),
+        "A_log": jnp.log(jnp.arange(1, ds + 1, dtype=jnp.float32))[None, :]
+        * jnp.ones((d_in, 1)),
+        "D": jnp.ones((d_in,)),
+        "out_proj": common.dense_init(ks[5], d_in, d),
+    }
+
+
+def _conv_causal(
+    w: jax.Array, b: jax.Array, x: jax.Array, tail: Optional[jax.Array] = None
+) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv along time: x [B, T, d_in], kernel [K, d_in].
+    ``tail`` carries the last K-1 inputs for decode."""
+    K = w.shape[0]
+    if tail is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([tail, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(K)) + b
+    new_tail = xp[:, -(K - 1) :] if K > 1 else xp[:, :0]
+    return out, new_tail
+
+
+def _ssm_scan(
+    p: Params,
+    xc: jax.Array,  # [B, T, d_in] post-conv activations
+    ds: int,
+    h0: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    B, T, d_in = xc.shape
+    dt_rank = p["dt_proj"].shape[0]
+    proj = xc @ p["x_proj"]  # [B, T, dt_rank + 2*ds]
+    dt = jax.nn.softplus(
+        proj[..., :dt_rank] @ p["dt_proj"] + p["dt_bias"]
+    ).astype(xc.dtype)  # keep the scanned streams in the activation dtype
+    Bt = proj[..., dt_rank : dt_rank + ds].astype(xc.dtype)  # [B, T, ds]
+    Ct = proj[..., dt_rank + ds :].astype(xc.dtype)  # [B, T, ds]
+    A = -jnp.exp(p["A_log"])  # [d_in, ds]
+
+    def step(h, xs):
+        x_t, dt_t, b_t, c_t = xs  # [B,d_in], [B,d_in], [B,ds], [B,ds]
+        da = jnp.exp(dt_t[..., None] * A[None])  # [B, d_in, ds]
+        h = da * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y
+
+    h_init = h0 if h0 is not None else jnp.zeros((B, d_in, ds), jnp.float32)
+    xs = (
+        jnp.moveaxis(xc, 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(Bt, 1, 0),
+        jnp.moveaxis(Ct, 1, 0),
+    )
+    h_fin, ys = jax.lax.scan(step, h_init, xs)
+    y = jnp.moveaxis(ys, 0, 1) + xc * p["D"]  # [B, T, d_in]
+    return y, h_fin
+
+
+def apply(
+    p: Params,
+    x: jax.Array,  # [B, T, d]
+    cfg: ArchConfig,
+    state: Optional[Dict[str, jax.Array]] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    d_in = cfg.mamba_expand * cfg.d_model
+    xi = x @ p["in_proj"]
+    xz, z = xi[..., :d_in], xi[..., d_in:]
+    xz = shard_hint(xz, "batch", None, "model")
+    tail = state["conv"] if state is not None else None
+    xc, new_tail = _conv_causal(p["conv_w"], p["conv_b"], xz, tail)
+    xc = jax.nn.silu(xc)
+    h0 = state["h"] if state is not None else None
+    y, h_fin = _ssm_scan(p, xc, cfg.mamba_d_state, h0)
+    y = y.astype(x.dtype)
+    out = ((y * jax.nn.silu(z)) @ p["out_proj"]).astype(x.dtype)
+    new_state = (
+        {"conv": new_tail, "h": h_fin} if state is not None else None
+    )
+    return out, new_state
+
+
+def init_state(cfg: ArchConfig, batch: int) -> Dict[str, jax.Array]:
+    d_in = cfg.mamba_expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.mamba_conv - 1, d_in), jnp.float32),
+        "h": jnp.zeros((batch, d_in, cfg.mamba_d_state), jnp.float32),
+    }

@@ -1,0 +1,290 @@
+"""Mixture-of-Experts FFN with *dictionary-selected* dispatch.
+
+This is where the paper's technique lands inside the LM stack (DESIGN.md §5):
+token→expert routing **is a group-by** — tokens grouped by expert id into
+capacity-bounded buckets.  Two dispatch implementations mirror the @ht/@st
+families:
+
+* ``scatter`` (hash-family analogue): position-in-expert computed by a
+  one-hot running count (O(N·E) vector work, no sort) and a direct
+  scatter — cheap for small E, memory-bound for large E;
+* ``sort``   (sort-family analogue): argsort tokens by expert id, ranks via
+  segment arithmetic (O(N log N), E-independent) — wins for large E
+  (maverick's 128) exactly like sort-based group-by wins at high
+  cardinality (paper §6.3, Q18).
+
+``dispatch="auto"`` consults the installed dispatch cost model
+(``repro.costmodel.moe_profile``) — learned, not hand-written, per the
+paper's design; before installation it falls back to the analytic crossover.
+Both implementations produce identical buffers; tests assert equivalence.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.partition import shard_hint
+from . import common
+from .common import Params
+
+
+def moe_init(key, d_model: int, d_ff: int, n_experts: int, shared: bool) -> Params:
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": common.dense_init(ks[0], d_model, n_experts, scale=0.02),
+        "wi": jax.random.normal(ks[1], (n_experts, d_model, d_ff)) * (d_model**-0.5),
+        "wg": jax.random.normal(ks[2], (n_experts, d_model, d_ff)) * (d_model**-0.5),
+        "wo": jax.random.normal(ks[3], (n_experts, d_ff, d_model)) * (d_ff**-0.5),
+    }
+    if shared:
+        p["shared"] = common.swiglu_init(ks[4], d_model, d_ff)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# dispatch position assignment: the group-by core
+# ---------------------------------------------------------------------------
+
+
+def positions_scatter(expert_id: jax.Array, n_experts: int) -> jax.Array:
+    """Hash-family analogue: per-token rank within its expert via a one-hot
+    cumulative count.  [N] -> [N] ranks."""
+    onehot = jax.nn.one_hot(expert_id, n_experts, dtype=jnp.int32)  # [N, E]
+    ranks = jnp.cumsum(onehot, axis=0) - onehot  # rank before me
+    return jnp.take_along_axis(ranks, expert_id[:, None], axis=1)[:, 0]
+
+
+def positions_sort(expert_id: jax.Array, n_experts: int) -> jax.Array:
+    """Sort-family analogue: stable argsort by expert, rank = index − group
+    start (segment arithmetic on the sorted stream)."""
+    n = expert_id.shape[0]
+    order = jnp.argsort(expert_id, stable=True)
+    sorted_e = expert_id[order]
+    start = jnp.searchsorted(sorted_e, jnp.arange(n_experts, dtype=expert_id.dtype))
+    rank_sorted = jnp.arange(n, dtype=jnp.int32) - start[sorted_e]
+    ranks = jnp.zeros((n,), jnp.int32).at[order].set(rank_sorted)
+    return ranks
+
+
+def auto_dispatch(n_tokens: int, n_experts: int) -> str:
+    """Learned dispatch choice if an installed model exists, else the
+    analytic crossover (sort's N·logN vs scatter's N·E)."""
+    try:  # pragma: no cover - depends on installation state
+        from repro.costmodel.moe_profile import load_dispatch_model
+
+        m = load_dispatch_model()
+        if m is not None:
+            return m.choose(n_tokens, n_experts)
+    except Exception:
+        pass
+    import math
+
+    return "sort" if n_experts > 4 * max(1.0, math.log2(n_tokens)) else "scatter"
+
+
+# ---------------------------------------------------------------------------
+# the MoE layer
+# ---------------------------------------------------------------------------
+
+
+def moe_apply(
+    p: Params,
+    x: jax.Array,  # [B, T, d]
+    *,
+    n_experts: int,
+    top_k: int = 1,
+    capacity_factor: float = 1.25,
+    dispatch: str = "auto",
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    B, T, d = x.shape
+    N = B * T
+    xt = x.reshape(N, d)
+    logits = xt @ p["router"]  # [N, E]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, experts = jax.lax.top_k(probs, top_k)  # [N, k]
+
+    if dispatch == "auto":
+        dispatch = auto_dispatch(N * top_k, n_experts)
+    pos_fn = positions_sort if dispatch == "sort" else positions_scatter
+
+    capacity = max(8, int(capacity_factor * N * top_k / n_experts))
+    flat_e = experts.reshape(-1)  # [N*k], token-major
+    ranks = pos_fn(flat_e, n_experts)
+    keep = ranks < capacity
+    slot = jnp.where(keep, flat_e * capacity + ranks, n_experts * capacity)
+
+    # gather tokens into [E, C, d] buckets (dropped tokens -> off-range slot)
+    tok_idx = jnp.repeat(jnp.arange(N), top_k)
+    buf = jnp.zeros((n_experts * capacity + 1, d), x.dtype).at[slot].set(xt[tok_idx])
+    # expert dim on "model" (EP) + capacity dim on the batch axes: the
+    # dispatch scatter/combine gather then stay shard-local in capacity and
+    # only cross the EP axis (the all-to-all pattern), never replicating the
+    # full [E, C, d] buffer.
+    buf = buf[:-1].reshape(n_experts, capacity, d)
+    buf = shard_hint(buf, "expert", "batch", "none")
+
+    # batched expert FFN (swiglu), experts dim sharded on "model" (EP)
+    h = jnp.einsum("ecd,edf->ecf", buf, p["wg"])
+    hi = jnp.einsum("ecd,edf->ecf", buf, p["wi"])
+    h = shard_hint(h, "expert", "batch", "none")
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * hi, p["wo"])
+    y = shard_hint(y, "expert", "batch", "none")
+
+    # combine back: token gathers its slot's output × gate
+    yf = y.reshape(n_experts * capacity, d)
+    out_flat = jnp.where(keep[:, None], yf[jnp.minimum(slot, n_experts * capacity - 1)], 0.0)
+    gates = gate_vals.reshape(-1)[:, None].astype(x.dtype)
+    contrib = out_flat * gates  # [N*k, d]
+    contrib = shard_hint(contrib, "batch", "none")
+    out = jnp.sum(contrib.reshape(N, top_k, d), axis=1)
+
+    if "shared" in p:
+        out = out + common.swiglu(p["shared"], xt)
+
+    # aux losses (load balance + router z) — standard, used in train loss
+    me = jnp.mean(jax.nn.one_hot(experts[:, 0], n_experts, dtype=jnp.float32), axis=0)
+    ce = jnp.mean(probs, axis=0)
+    aux = {
+        "load_balance": n_experts * jnp.sum(me * ce),
+        "router_z": jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2),
+        "drop_fraction": 1.0 - jnp.mean(keep.astype(jnp.float32)),
+    }
+    return out.reshape(B, T, d), aux
+
+
+# ---------------------------------------------------------------------------
+# expert-parallel MoE as an explicit shard_map region
+# ---------------------------------------------------------------------------
+#
+# Under jit auto-sharding, the dispatch scatter (token-sharded updates into an
+# expert-sharded buffer) makes the SPMD partitioner fall back to replicating
+# the full [N, d] token stream per device — fatal at 1M tokens.  The manual
+# region exploits the actual layout: activations are sharded over the DP axes
+# and *replicated over "model"*, expert weights are sharded over "model"
+# (EP=TP axis) and ZeRO-sharded over the DP axes.  Hence:
+#
+#   * dispatch  = shard-LOCAL gather (each model shard serves its own experts
+#                 for its replica of the local tokens) — zero communication;
+#   * weights   = one tiled all-gather over the DP axes (the ZeRO gather);
+#   * combine   = one psum over "model" (each shard contributes the outputs
+#                 of its experts, zeros elsewhere) — Megatron-shaped traffic.
+#
+# Per-layer comm: AG(experts_local · d · d_ff) + AR(N_local · d) — no [N, d]
+# replication anywhere.
+
+
+def moe_apply_sharded(
+    p: Params,
+    x: jax.Array,  # [B, T, d]
+    *,
+    mesh,
+    n_experts: int,
+    top_k: int = 1,
+    capacity_factor: float = 1.25,
+    dispatch: str = "auto",
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    from jax.sharding import PartitionSpec as P
+
+    B, T, d = x.shape
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n_model = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    n_dp = 1
+    for a in dp_axes:
+        n_dp *= mesh.shape[a]
+    if n_model == 1 or n_experts % n_model or B % n_dp:
+        return moe_apply(
+            p, x, n_experts=n_experts, top_k=top_k,
+            capacity_factor=capacity_factor, dispatch=dispatch,
+        )
+    e_loc = n_experts // n_model
+    n_local = (B // n_dp) * T
+    cap = max(8, int(capacity_factor * n_local * top_k / n_experts))
+    if dispatch == "auto":
+        dispatch = auto_dispatch(n_local * top_k, n_experts)
+    pos_fn = positions_sort if dispatch == "sort" else positions_scatter
+
+    def region(xt, router, wi, wg, wo):
+        # xt: [N_l, d] local tokens; wi/wg/wo: [e_loc, d/n_dp, f] ZeRO slices
+        if dp_axes:
+            wi = jax.lax.all_gather(wi, dp_axes, axis=1, tiled=True)
+            wg = jax.lax.all_gather(wg, dp_axes, axis=1, tiled=True)
+            wo = jax.lax.all_gather(wo, dp_axes, axis=2, tiled=True)
+        logits = xt @ router  # router replicated
+        probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        gate_vals, experts = jax.lax.top_k(probs, top_k)
+        flat_e = experts.reshape(-1)
+        ranks = pos_fn(flat_e, n_experts)
+        e0 = jax.lax.axis_index("model") * e_loc
+        mine = (flat_e >= e0) & (flat_e < e0 + e_loc) & (ranks < cap)
+        slot = jnp.where(mine, (flat_e - e0) * cap + ranks, e_loc * cap)
+        tok_idx = jnp.repeat(jnp.arange(xt.shape[0]), top_k)
+        buf = (
+            jnp.zeros((e_loc * cap + 1, d), xt.dtype)
+            .at[slot]
+            .set(xt[tok_idx])[:-1]
+            .reshape(e_loc, cap, d)
+        )
+        h = jnp.einsum("ecd,edf->ecf", buf, wg)
+        hi = jnp.einsum("ecd,edf->ecf", buf, wi)
+        y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * hi, wo)
+        yf = y.reshape(e_loc * cap, d)
+        outf = jnp.where(
+            mine[:, None], yf[jnp.minimum(slot, e_loc * cap - 1)], 0.0
+        )
+        contrib = outf * gate_vals.reshape(-1)[:, None].astype(xt.dtype)
+        out = jnp.sum(contrib.reshape(xt.shape[0], top_k, d), axis=1)
+        out = jax.lax.psum(out, "model")  # combine across expert shards
+        # aux stats (psum'd over model for keep-fraction; dp-mean outside)
+        kept = jax.lax.psum(jnp.sum(mine.astype(jnp.float32)), "model")
+        me = jnp.mean(
+            jax.nn.one_hot(experts[:, 0], n_experts, dtype=jnp.float32), axis=0
+        )
+        ce = jnp.mean(probs, axis=0)
+        aux = jnp.stack(
+            [
+                n_experts * jnp.sum(me * ce),
+                jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2),
+                1.0 - kept / (xt.shape[0] * top_k),
+            ]
+        )
+        if dp_axes:
+            aux = jax.lax.pmean(aux, dp_axes)
+        return out, aux
+
+    xt = x.reshape(B * T, d)
+    dp = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
+    out, aux = jax.shard_map(
+        region,
+        mesh=mesh,
+        in_specs=(
+            P(dp, None),
+            P(None, None),
+            P("model", dp, None),
+            P("model", dp, None),
+            P("model", None, dp),
+        ),
+        out_specs=(P(dp, None), P()),
+        check_vma=False,
+    )(xt, p["router"], p["wi"], p["wg"], p["wo"])
+    out = out.reshape(B, T, d)
+    if "shared" in p:
+        out = out + common.swiglu(p["shared"], xt).reshape(B, T, d)
+    auxd = {"load_balance": aux[0], "router_z": aux[1], "drop_fraction": aux[2]}
+    return out, auxd
+
+
+def moe_dispatch_auto(p, x, cfg, mesh=None):
+    """Entry point used by the models: manual EP region when a mesh is
+    active, dense auto-sharded path otherwise (smoke tests, host runs)."""
+    if mesh is not None and "model" in mesh.axis_names:
+        return moe_apply_sharded(
+            p, x, mesh=mesh, n_experts=cfg.moe_experts, top_k=cfg.moe_top_k,
+            capacity_factor=cfg.moe_capacity_factor,
+        )
+    return moe_apply(
+        p, x, n_experts=cfg.moe_experts, top_k=cfg.moe_top_k,
+        capacity_factor=cfg.moe_capacity_factor,
+    )

@@ -1,0 +1,140 @@
+"""Model registry: uniform API over the four model kinds.
+
+``get_model(cfg)`` returns a ``Model`` with:
+
+    init(key)                      -> params
+    loss_fn(params, batch)         -> scalar          (train shapes)
+    forward(params, batch)         -> logits          (prefill shapes)
+    init_cache(batch, cache_len)   -> cache pytree
+    decode_step(params, cache, tok)-> (logits, cache) (decode shapes)
+    input_specs(shape)             -> dict of ShapeDtypeStruct   (dry-run)
+    make_batch(shape, key)         -> real arrays                (smoke)
+    supports(shape)                -> bool (+ reason)  — e.g. long_500k is
+                                      skipped for pure full-attention archs
+
+``input_specs`` is the dry-run contract: weak-type-correct ShapeDtypeStructs
+for every input, no device allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import jamba as jamba_mod
+from . import lm as lm_mod
+from . import rwkv6 as rwkv6_mod
+from . import whisper as whisper_mod
+from .config import ArchConfig, ShapeSpec
+
+
+@dataclass
+class Model:
+    cfg: ArchConfig
+    mod: Any
+
+    # -- basic API ----------------------------------------------------------
+    def init(self, key):
+        return self.mod.init(self.cfg, key)
+
+    def init_shapes(self):
+        return jax.eval_shape(lambda: self.mod.init(self.cfg, jax.random.PRNGKey(0)))
+
+    def loss_fn(self, params, batch):
+        return self.mod.loss_fn(self.cfg, params, batch)
+
+    def init_cache(self, batch: int, cache_len: int):
+        return self.mod.init_cache(self.cfg, batch, cache_len)
+
+    def decode_step(self, params, cache, token):
+        window = 0
+        if self.cfg.model_kind in ("decoder", "jamba"):
+            # long contexts use the sliding window (jamba) / full cache
+            pass
+        return self.mod.decode_step(self.cfg, params, cache, token)
+
+    # -- shape support matrix -------------------------------------------------
+    def supports(self, shape: ShapeSpec) -> Tuple[bool, str]:
+        cfg = self.cfg
+        if shape.name == "long_500k":
+            if cfg.family in ("ssm", "hybrid"):
+                return True, "sub-quadratic (SSM/windowed-attention) path"
+            return False, "pure full attention is quadratic at 500k (DESIGN.md §5)"
+        return True, ""
+
+    # -- batches --------------------------------------------------------------
+    def _train_struct(self, shape: ShapeSpec) -> Dict[str, Any]:
+        B, T = shape.global_batch, shape.seq_len
+        cfg = self.cfg
+        i32 = jnp.int32
+        f32 = jnp.float32
+        specs: Dict[str, Any] = {}
+        if cfg.model_kind == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct((B, cfg.enc_seq, cfg.d_model), f32)
+            specs["tokens"] = jax.ShapeDtypeStruct((B, T), i32)
+            specs["labels"] = jax.ShapeDtypeStruct((B, T), i32)
+        elif cfg.vision_tokens:
+            nv = min(cfg.vision_tokens, T // 2)
+            specs["patches"] = jax.ShapeDtypeStruct((B, nv, cfg.d_model), f32)
+            specs["tokens"] = jax.ShapeDtypeStruct((B, T - nv), i32)
+            specs["labels"] = jax.ShapeDtypeStruct((B, T - nv), i32)
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((B, T), i32)
+            specs["labels"] = jax.ShapeDtypeStruct((B, T), i32)
+        return specs
+
+    def input_specs(self, shape: ShapeSpec) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every step input (dry-run)."""
+        if shape.kind in ("train", "prefill"):
+            return self._train_struct(shape)
+        # decode: cache + one token per sequence
+        B = shape.global_batch
+        cache = jax.eval_shape(
+            lambda: self.mod.init_cache(self.cfg, B, shape.seq_len)
+        )
+        return {
+            "cache": cache,
+            "token": jax.ShapeDtypeStruct((B,), jnp.int32),
+        }
+
+    def make_batch(self, shape: ShapeSpec, key) -> Dict[str, Any]:
+        """Concrete arrays matching input_specs (smoke tests, reduced cfgs)."""
+        if shape.kind == "decode":
+            return {
+                "cache": self.init_cache(shape.global_batch, shape.seq_len),
+                "token": jax.random.randint(
+                    key, (shape.global_batch,), 0, max(2, self.cfg.vocab - 1)
+                ),
+            }
+        specs = self.input_specs(shape)
+
+        def realize(s):
+            if s.dtype == jnp.int32:
+                return jax.random.randint(key, s.shape, 0, max(2, self.cfg.vocab - 1))
+            return jax.random.normal(key, s.shape, s.dtype) * 0.02
+
+        return jax.tree.map(realize, specs)
+
+
+_KIND_TO_MOD = {
+    "decoder": lm_mod,
+    "encdec": whisper_mod,
+    "rwkv": rwkv6_mod,
+    "jamba": jamba_mod,
+}
+
+
+def get_model(cfg: ArchConfig) -> Model:
+    return Model(cfg, _KIND_TO_MOD[cfg.model_kind])
+
+
+def get_model_by_name(name: str, reduced: bool = False) -> Model:
+    from repro import configs
+
+    cfg = configs.get(name)
+    if reduced:
+        cfg = cfg.reduce()
+    return get_model(cfg)

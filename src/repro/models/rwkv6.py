@@ -1,0 +1,311 @@
+"""RWKV-6 ("Finch") — attention-free LM with data-dependent decay.
+
+The wkv6 recurrence per head (head size ``hs``):
+
+    S_t   = diag(w_t) · S_{t-1} + k_tᵀ v_t          (state: [hs, hs])
+    out_t = r_t · (S_{t-1} + diag(u) · k_tᵀ v_t)
+
+with **data-dependent** per-channel decay ``w_t = exp(-exp(w0 + x̃_t W_w))``
+— the RWKV-6 distinguishing feature (arXiv:2404.05892) — plus token-shift
+input mixing and a squared-ReLU channel-mix FFN.
+
+TPU adaptation (DESIGN.md): the recurrence runs in **chunked block-parallel
+form** — a `lax.scan` over T/chunk steps whose body is three dense matmuls
+(intra-chunk decay-weighted attention, state read, state update).  This is
+the MXU-native formulation (per-timestep outer products would starve the
+systolic array); the sequential dependency is only across chunks.  Decay
+exponents are clamped so the factored ``exp(±cumsum log w)`` stays inside
+f32 range for the default chunk of 16.
+
+``wkv6_step`` is the per-timestep reference; tests assert the chunked form
+matches it.  Decode uses the O(1)-state step directly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.partition import shard_hint
+from . import common
+from .common import Params
+from .config import ArchConfig
+
+LOG_W_MIN = -4.5  # per-step decay clamp: chunk·|log w| stays < f32 exp range
+
+
+# ---------------------------------------------------------------------------
+# wkv6 core
+# ---------------------------------------------------------------------------
+
+
+def wkv6_chunked(
+    r: jax.Array,  # [B, H, T, hs]
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,  # decay in (0,1), same shape
+    u: jax.Array,  # [H, hs] bonus
+    s0: Optional[jax.Array] = None,  # [B, H, hs, hs]
+    chunk: int = 16,
+) -> Tuple[jax.Array, jax.Array]:
+    B, H, T, hs = r.shape
+    pad = -T % chunk
+    if pad:
+        # pad tail: w=1 (log 0), k=v=0 — padding never touches the state
+        zp = ((0, 0), (0, 0), (0, pad), (0, 0))
+        r = jnp.pad(r, zp)
+        k = jnp.pad(k, zp)
+        v = jnp.pad(v, zp)
+        w = jnp.pad(w, zp, constant_values=1.0)
+    Tp = T + pad
+    n_chunks = Tp // chunk
+    lw = jnp.maximum(jnp.log(w.astype(jnp.float32)), LOG_W_MIN)
+
+    def resh(x):
+        return jnp.moveaxis(
+            x.reshape(B, H, n_chunks, chunk, hs), 2, 0
+        )  # [n, B, H, c, hs]
+
+    del T  # use Tp below; unpadded length restored at return
+
+    rc, kc, vc, lwc = map(resh, (r, k, v, lw))
+    s_init = (
+        s0 if s0 is not None else jnp.zeros((B, H, hs, hs), jnp.float32)
+    )
+
+    def body(s, xs):
+        rb, kb, vb, lwb = xs  # [B, H, c, hs]
+        cum = jnp.cumsum(lwb, axis=2)  # inclusive
+        cum_ex = cum - lwb  # exclusive
+        # inter-chunk: r_i scaled by decay-to-chunk-start, read the state
+        r_in = rb * jnp.exp(cum_ex)
+        out_inter = jnp.einsum("bhck,bhkv->bhcv", r_in, s)
+        # intra-chunk: strict-lower decay-weighted attention
+        a = jnp.einsum(
+            "bhik,bhjk->bhij", r_in, kb * jnp.exp(-cum)
+        )  # exp(cum_ex_i - cum_j)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        a = jnp.where(mask[None, None], a, 0.0)
+        out_intra = jnp.einsum("bhij,bhjv->bhiv", a, vb)
+        # diagonal bonus term
+        bonus = jnp.einsum("bhck,bhck->bhc", rb, kb * u[None, :, None, :])
+        out = out_inter + out_intra + bonus[..., None] * vb
+        # state update
+        decay_all = jnp.exp(cum[:, :, -1, :])  # [B, H, hs]
+        k_scaled = kb * jnp.exp(cum[:, :, -1:, :] - cum)
+        s_new = decay_all[..., None] * s + jnp.einsum(
+            "bhck,bhcv->bhkv", k_scaled, vb
+        )
+        return s_new, out
+
+    s_final, outs = jax.lax.scan(body, s_init, (rc, kc, vc, lwc))
+    out = jnp.moveaxis(outs, 0, 2).reshape(B, H, Tp, hs)
+    if pad:
+        out = out[:, :, : Tp - pad]
+    return out.astype(r.dtype), s_final
+
+
+def wkv6_step(
+    r: jax.Array,  # [B, H, hs] single timestep
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array,  # [H, hs]
+    s: jax.Array,  # [B, H, hs, hs]
+) -> Tuple[jax.Array, jax.Array]:
+    """Reference / decode step."""
+    w = jnp.exp(jnp.maximum(jnp.log(w.astype(jnp.float32)), LOG_W_MIN))
+    kv = jnp.einsum("bhk,bhv->bhkv", k, v)
+    out = jnp.einsum("bhk,bhkv->bhv", r, s + u[None, :, :, None] * kv)
+    s_new = w[..., None] * s + kv
+    return out, s_new
+
+
+# ---------------------------------------------------------------------------
+# the RWKV-6 block
+# ---------------------------------------------------------------------------
+
+
+def _timemix_init(key, d: int, hs: int) -> Params:
+    ks = jax.random.split(key, 8)
+    H = d // hs
+    return {
+        "mu": jax.random.uniform(ks[0], (5, d)),  # shift-mix for r,k,v,w,g
+        "wr": common.dense_init(ks[1], d, d),
+        "wk": common.dense_init(ks[2], d, d),
+        "wv": common.dense_init(ks[3], d, d),
+        "wg": common.dense_init(ks[4], d, d),
+        "w0": jnp.zeros((d,), jnp.float32) + 0.5,
+        "ww": common.dense_init(ks[5], d, d, scale=0.01),  # data-dep decay
+        "u": jax.random.normal(ks[6], (H, hs)) * 0.1,
+        "wo": common.dense_init(ks[7], d, d),
+        "ln_x": common.layernorm_init(d),
+    }
+
+
+def _channelmix_init(key, d: int, d_ff: int) -> Params:
+    ks = jax.random.split(key, 4)
+    return {
+        "mu": jax.random.uniform(ks[0], (2, d)),
+        "wk": common.dense_init(ks[1], d, d_ff),
+        "wv": common.dense_init(ks[2], d_ff, d),
+        "wr": common.dense_init(ks[3], d, d),
+    }
+
+
+def layer_init(cfg: ArchConfig, key) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": common.layernorm_init(cfg.d_model),
+        "norm2": common.layernorm_init(cfg.d_model),
+        "tmix": _timemix_init(k1, cfg.d_model, cfg.rwkv_head_size),
+        "cmix": _channelmix_init(k2, cfg.d_model, cfg.d_ff),
+    }
+
+
+def _shift(x: jax.Array, last: Optional[jax.Array] = None) -> jax.Array:
+    """Token shift: previous timestep's activations ([B, T, d])."""
+    if last is None:
+        prev = jnp.zeros_like(x[:, :1])
+    else:
+        prev = last[:, None].astype(x.dtype)  # keep the activation dtype
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def timemix(
+    p: Params,
+    x: jax.Array,  # [B, T, d]
+    hs: int,
+    state: Optional[jax.Array] = None,
+    x_last: Optional[jax.Array] = None,
+    chunk: int = 16,
+) -> Tuple[jax.Array, jax.Array]:
+    B, T, d = x.shape
+    H = d // hs
+    xx = _shift(x, x_last)
+
+    def mix(i):
+        return x + (xx - x) * p["mu"][i]
+
+    r = (mix(0) @ p["wr"]).reshape(B, T, H, hs).transpose(0, 2, 1, 3)
+    k = (mix(1) @ p["wk"]).reshape(B, T, H, hs).transpose(0, 2, 1, 3)
+    v = (mix(2) @ p["wv"]).reshape(B, T, H, hs).transpose(0, 2, 1, 3)
+    w_log = p["w0"] + mix(3) @ p["ww"]
+    w = jnp.exp(-jnp.exp(w_log)).reshape(B, T, H, hs).transpose(0, 2, 1, 3)
+    g = jax.nn.silu(mix(4) @ p["wg"])
+
+    out, s_new = wkv6_chunked(r, k, v, w, p["u"], s0=state, chunk=chunk)
+    out = out.transpose(0, 2, 1, 3).reshape(B, T, d).astype(x.dtype)
+    out = common.layernorm(p["ln_x"], out) * g
+    return (out @ p["wo"]).astype(x.dtype), s_new
+
+
+def channelmix(
+    p: Params, x: jax.Array, x_last: Optional[jax.Array] = None
+) -> jax.Array:
+    """Squared-ReLU FFN with receptance gate (RWKV channel mix)."""
+    xx = _shift(x, x_last)
+    xk = x + (xx - x) * p["mu"][0]
+    xr = x + (xx - x) * p["mu"][1]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"])
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+
+def init(cfg: ArchConfig, key) -> Params:
+    ke, kl = jax.random.split(key)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    layers = jax.vmap(lambda k: layer_init(cfg, k))(layer_keys)
+    return {
+        "embed": common.embed_init(ke, cfg.padded_vocab, cfg.d_model),
+        "layers": layers,
+        "final_norm": common.layernorm_init(cfg.d_model),
+    }
+
+
+def forward(cfg: ArchConfig, params: Params, tokens: jax.Array, remat: bool = True):
+    adt = jnp.dtype(cfg.act_dtype)
+    x = common.embed(params["embed"], tokens).astype(adt)
+    x = shard_hint(x, "batch", "sp", "none")
+    hs = cfg.rwkv_head_size
+
+    def layer(lp, y):
+        lp = common.cast_tree(lp, adt)
+        t, _ = timemix(
+            lp["tmix"], common.layernorm(lp["norm1"], y), hs, chunk=cfg.scan_chunk
+        )
+        y = y + t
+        y = y + channelmix(lp["cmix"], common.layernorm(lp["norm2"], y))
+        return shard_hint(y, "batch", "sp", "none")
+
+    def scan_body(carry, lp):
+        fn = jax.checkpoint(layer) if remat else layer
+        return fn(lp, carry), None
+
+    x, _ = jax.lax.scan(scan_body, x, params["layers"], unroll=cfg.scan_unroll)
+    x = shard_hint(x, "batch", None, "none")
+    x = common.layernorm(common.cast_tree(params["final_norm"], adt), x)
+    return common.unembed(common.cast_tree(params["embed"], adt), x), jnp.zeros(
+        (3,), jnp.float32
+    )
+
+
+def loss_fn(cfg: ArchConfig, params: Params, batch: Dict[str, jax.Array]):
+    logits, _ = forward(cfg, params, batch["tokens"])
+    if cfg.padded_vocab != cfg.vocab:
+        pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab
+        logits = jnp.where(pad_mask, logits, -1e30)
+    return common.cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+
+
+# ---------------------------------------------------------------------------
+# decode: O(1) recurrent state (no KV cache — the long_500k winner)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int) -> Params:
+    """State per layer: wkv state [hs, hs] per head + token-shift carries.
+    Size is independent of cache_len — that's the point of an SSM."""
+    H = cfg.d_model // cfg.rwkv_head_size
+    adt = jnp.dtype(cfg.act_dtype)
+    return {
+        # wkv state stays f32 (recurrent precision); shift carries are acts
+        "s": jnp.zeros((cfg.n_layers, batch, H, cfg.rwkv_head_size, cfg.rwkv_head_size)),
+        "x_t": jnp.zeros((cfg.n_layers, batch, cfg.d_model), adt),
+        "x_c": jnp.zeros((cfg.n_layers, batch, cfg.d_model), adt),
+        "len": jnp.zeros((), jnp.int32) + cache_len,
+    }
+
+
+def decode_step(cfg: ArchConfig, params: Params, cache: Params, token: jax.Array):
+    adt = jnp.dtype(cfg.act_dtype)
+    x = common.embed(params["embed"], token[:, None]).astype(adt)  # [B, 1, d]
+    hs = cfg.rwkv_head_size
+
+    def body(carry, xs):
+        y = carry  # [B, 1, d]
+        lp, s, x_t, x_c = xs
+        lp = common.cast_tree(lp, adt)
+        yn = common.layernorm(lp["norm1"], y)
+        t, s_new = timemix(lp["tmix"], yn, hs, state=s, x_last=x_t, chunk=1)
+        y = y + t
+        yn2 = common.layernorm(lp["norm2"], y)
+        y = y + channelmix(lp["cmix"], yn2, x_last=x_c)
+        return y, (s_new, yn[:, 0], yn2[:, 0])
+
+    x, (s_new, xt_new, xc_new) = jax.lax.scan(
+        body, x, (params["layers"], cache["s"], cache["x_t"], cache["x_c"]),
+        unroll=cfg.scan_unroll,
+    )
+    x = common.layernorm(common.cast_tree(params["final_norm"], adt), x)
+    logits = common.unembed(common.cast_tree(params["embed"], adt), x)
+    new_cache = {
+        "s": s_new, "x_t": xt_new, "x_c": xc_new, "len": cache["len"] + 1
+    }
+    return logits[:, 0], new_cache

@@ -1,0 +1,129 @@
+"""Batched serving loop: fixed-slot continuous batching over decode steps.
+
+A ``Server`` owns B cache slots.  Requests (prompt token lists) queue up;
+free slots are filled by running the prompt through ``decode_step`` token by
+token (prefill-as-decode keeps one compiled step — the production variant
+would add a separate prefill graph), then generation proceeds for the whole
+batch in lock-step, retiring sequences on EOS/max-len and immediately
+recycling their slots.  Greedy or temperature sampling.
+
+The decode caches are per-model-kind pytrees (KV for transformers, O(1)
+recurrent state for rwkv/jamba) — the same ``init_cache`` contract the
+dry-run lowers at the assigned decode shapes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import Model
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int = 16
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class Server:
+    def __init__(
+        self,
+        model: Model,
+        params,
+        batch_slots: int = 4,
+        cache_len: int = 128,
+        eos: int = 0,
+        temperature: float = 0.0,
+        seed: int = 0,
+    ):
+        self.model = model
+        self.params = params
+        self.B = batch_slots
+        self.cache_len = cache_len
+        self.eos = eos
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self.slots: List[Optional[Request]] = [None] * batch_slots
+        self.remaining: List[int] = [0] * batch_slots
+        self.queue: List[Request] = []
+        self.finished: List[Request] = []
+        self.cache = model.init_cache(batch_slots, cache_len)
+        self._step = jax.jit(model.decode_step)
+        self.steps_run = 0
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _fill_slots(self) -> None:
+        for i in range(self.B):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[i] = req
+                self.remaining[i] = req.max_new
+                # prefill via stepwise decode into this slot (slot-batched:
+                # other slots advance with a pad token they ignore — their
+                # outputs for these steps are discarded)
+                for t in req.prompt[:-1]:
+                    self._advance(self._tokens_with(i, t), collect=False)
+                self._pending_first = getattr(self, "_pending_first", {})
+                self._pending_first[i] = req.prompt[-1]
+
+    def _tokens_with(self, slot: int, tok: int) -> jax.Array:
+        toks = np.zeros((self.B,), np.int32)
+        for j, r in enumerate(self.slots):
+            if r is not None and r.out:
+                toks[j] = r.out[-1]
+        toks[slot] = tok
+        return jnp.asarray(toks)
+
+    def _advance(self, tokens: jax.Array, collect: bool = True) -> np.ndarray:
+        logits, self.cache = self._step(self.params, self.cache, tokens)
+        self.steps_run += 1
+        if self.temperature > 0.0:
+            self.key, sub = jax.random.split(self.key)
+            nxt = jax.random.categorical(sub, logits / self.temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return np.asarray(nxt)
+
+    def step(self) -> bool:
+        """One lock-step decode for all active slots; returns True if any
+        work remains."""
+        self._fill_slots()
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return bool(self.queue)
+        toks = np.zeros((self.B,), np.int32)
+        pending = getattr(self, "_pending_first", {})
+        for i in active:
+            r = self.slots[i]
+            if i in pending:
+                toks[i] = pending.pop(i)
+            elif r.out:
+                toks[i] = r.out[-1]
+            else:
+                toks[i] = r.prompt[-1]
+        nxt = self._advance(jnp.asarray(toks))
+        for i in active:
+            r = self.slots[i]
+            tok = int(nxt[i]) % self.model.cfg.vocab
+            r.out.append(tok)
+            self.remaining[i] -= 1
+            if tok == self.eos or self.remaining[i] <= 0:
+                r.done = True
+                self.finished.append(r)
+                self.slots[i] = None  # recycle immediately
+        return any(s is not None for s in self.slots) or bool(self.queue)
+
+    def run_until_done(self, max_steps: int = 10_000) -> List[Request]:
+        for _ in range(max_steps):
+            if not self.step():
+                break
+        return self.finished

@@ -1,0 +1,185 @@
+"""Parameter / optimizer-state / batch sharding rules for the LM stack.
+
+Policy (MaxText-flavored, v5e-16GB-aware):
+
+* weights: tensor-parallel on "model" along the head/ffn/expert/vocab dim
+  **and** ZeRO/FSDP-sharded on ("pod","data") along the other large dim —
+  params and Adam moments never exceed total/(pod·data·model) per chip
+  (llama4-maverick's 400B f32 master + moments demand the pod axis too).
+  The gradient exchange over "pod" (reduce-scatter + all-gather) is the
+  inter-pod collective the dry-run must prove out.
+* stacked layer dims (leading axis under layers/periods/enc_layers/...)
+  stay unsharded (they are scanned).
+* every rule is divisibility-guarded: a dim that doesn't divide its axis
+  size is replicated instead (whisper's 20 heads on a 16-way model axis).
+* decode caches: batch on ("pod","data"); kv-heads on "model" when
+  divisible, else head_dim on "model".
+
+The table is path-pattern → logical dims; resolution happens in
+``spec_for`` (divisibility-aware).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .partition import spec_for
+
+# (path regex, logical dims for the *unstacked* trailing dims)
+_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    # embeddings / heads
+    (r"embed/table$", ("vocab", "fsdp")),  # [V, d]: V×model, d×(pod,data)
+    (r"head/w$", ("fsdp", "vocab")),
+    # attention
+    (r"attn/wq$", ("fsdp", "model")),
+    (r"attn/wk$", ("fsdp", "model")),
+    (r"attn/wv$", ("fsdp", "model")),
+    (r"attn/wo$", ("model", "fsdp")),
+    (r"(self_attn|cross_attn)/w[qkv]$", ("fsdp", "model")),
+    (r"(self_attn|cross_attn)/wo$", ("model", "fsdp")),
+    # dense mlp
+    (r"mlp/w[ig]$", ("fsdp", "model")),
+    (r"mlp/wo$", ("model", "fsdp")),
+    (r"mlp/wi$", ("fsdp", "model")),
+    # moe: expert dim on "expert" (=model), fsdp on the d dim
+    (r"moe/router$", ("fsdp", None)),
+    (r"moe/w[ig]$", ("expert", "fsdp", None)),
+    (r"moe/wo$", ("expert", None, "fsdp")),
+    (r"moe/shared/w[ig]$", ("fsdp", "model")),
+    (r"moe/shared/wo$", ("model", "fsdp")),
+    # mamba
+    (r"mamba/in_proj$", ("fsdp", "model")),
+    (r"mamba/out_proj$", ("model", "fsdp")),
+    (r"mamba/x_proj$", ("model", None)),
+    (r"mamba/dt_proj$", (None, "model")),
+    (r"mamba/conv_w$", (None, "model")),
+    (r"mamba/(conv_b|dt_bias|D)$", ("model",)),
+    (r"mamba/A_log$", ("model", None)),
+    # rwkv time/channel mix
+    (r"tmix/w[rkvg]$", ("fsdp", "model")),
+    (r"tmix/ww$", ("fsdp", "model")),
+    (r"tmix/wo$", ("model", "fsdp")),
+    (r"cmix/wk$", ("fsdp", "model")),
+    (r"cmix/wv$", ("model", "fsdp")),
+    (r"cmix/wr$", ("fsdp", "model")),
+)
+
+_STACKED = re.compile(r"(^|/)(layers|periods|enc_layers|dec_layers)(/|$)")
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def layout_overrides(cfg, global_batch: int = 0, mesh: Mesh = None) -> dict:
+    """Logical-axis remapping for a config's layout policy.
+
+    The pure-DP layout only applies when the global batch covers the whole
+    mesh (train_4k's 256 on 16×16) — serving shapes with small batches keep
+    the TP layout, where the model axis carries real work."""
+    if getattr(cfg, "layout", "tp") != "dp":
+        return {}
+    if mesh is not None and global_batch:
+        if global_batch % mesh.devices.size != 0:
+            return {}
+    axes = ("pod", "data", "model")
+    return {
+        "batch": axes,
+        "fsdp": axes,
+        "model": None,
+        "expert": None,
+        "vocab": None,
+        "sp": None,
+        "seq": None,
+    }
+
+
+def param_spec(mesh: Mesh, path_str: str, shape: Sequence[int]) -> P:
+    stacked = bool(_STACKED.search(path_str))
+    body_shape = shape[1:] if stacked and len(shape) >= 1 else shape
+    dims: Optional[Tuple[Optional[str], ...]] = None
+    for pat, d in _RULES:
+        if re.search(pat, path_str):
+            dims = d
+            break
+    if dims is None or len(dims) != len(body_shape):
+        dims = (None,) * len(body_shape)
+    if stacked:
+        dims = (None,) + tuple(dims)
+        body_shape = shape
+    return spec_for(mesh, dims, shape)
+
+
+def param_shardings(mesh: Mesh, params_shapes: Any) -> Any:
+    """Same-structure pytree of NamedSharding for a params (or opt-moment)
+    pytree of ShapeDtypeStructs/arrays."""
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        spec = param_spec(mesh, ps, leaf.shape)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+def opt_state_shardings(mesh: Mesh, opt_shapes: Any) -> Any:
+    """Adam moments mirror the param layout; scalars replicate."""
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        # strip the leading "m/" / "v/" / "ef/" prefix for rule matching
+        ps = re.sub(r"^(m|v|ef)/", "", ps)
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, param_spec(mesh, ps, leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(one, opt_shapes)
+
+
+def batch_shardings(mesh: Mesh, batch_shapes: Any) -> Any:
+    """tokens/labels [B, T]: batch over (pod, data); if B doesn't divide
+    (long_500k's B=1), shard the sequence dim over data instead."""
+
+    def one(path, leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        dims = ["batch"] + [None] * (leaf.ndim - 1)
+        spec = spec_for(mesh, dims, leaf.shape)
+        if spec[0] is None and leaf.ndim >= 2:
+            dims = [None, "seq"] + [None] * (leaf.ndim - 2)
+            spec = spec_for(mesh, dims, leaf.shape)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, batch_shapes)
+
+
+def cache_shardings(mesh: Mesh, cache_shapes: Any) -> Any:
+    """Decode caches: stacked [L, B, H, T, hd] (kv) or [L, B, ...] states.
+    Prefer batch on ("pod","data"); shard heads on model if divisible, else
+    head_dim; long sequence dims fall back to "data" when batch is 1."""
+
+    def one(path, leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        dims: list = [None] * leaf.ndim
+        if leaf.ndim >= 2:
+            dims[1] = "batch"
+        if leaf.ndim >= 3:
+            dims[2] = "model"  # heads / channel groups
+        if leaf.ndim >= 5:
+            dims[4] = None
+        spec = spec_for(mesh, dims, leaf.shape)
+        # head dim fallback for non-divisible head counts (kv=1 MQA etc.)
+        if leaf.ndim >= 5 and spec[2] is None:
+            dims[2], dims[4] = None, "model"
+            spec = spec_for(mesh, dims, leaf.shape)
+        # batch=1 long-context: shard the time axis over data
+        if leaf.ndim >= 4 and spec[1] is None:
+            dims[3] = "seq"
+            spec = spec_for(mesh, dims, leaf.shape)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)

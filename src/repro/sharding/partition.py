@@ -1,0 +1,116 @@
+"""Logical sharding rules + activation hints (MaxText-style, minimal).
+
+Logical axis names used across the model code:
+
+    "batch"    -> ("pod", "data")   (data parallel, hierarchical)
+    "seq"      -> "data"            (sequence parallel for long-context decode)
+    "model"    -> "model"           (tensor parallel: heads / d_ff / vocab / experts)
+    "expert"   -> "model"           (expert parallel shares the TP axis)
+
+``shard_hint(x, *logical_axes)`` applies a ``with_sharding_constraint`` when a
+mesh is active AND every constrained dim is divisible by its axis size —
+otherwise the axis is dropped (replicated) for that dim.  This keeps a single
+model implementation legal across all 10 archs × 3 mesh layouts without
+per-arch spec tables; XLA's SPMD partitioner propagates the rest.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+LOGICAL_RULES: Dict[str, Union[str, Tuple[str, ...], None]] = {
+    "batch": ("pod", "data"),
+    "batch_nopod": "data",
+    "seq": "data",
+    "fsdp": ("pod", "data"),  # ZeRO weight sharding axis
+    "sp": "model",  # Megatron-style sequence parallelism between blocks
+    "model": "model",
+    "expert": "model",
+    "vocab": "model",
+    "none": None,
+}
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def current_overrides() -> Dict[str, Union[str, Tuple[str, ...], None]]:
+    return getattr(_state, "overrides", {})
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], overrides=None):
+    """``overrides`` remaps logical axes per run — e.g. the pure-DP layout
+    for TP-unfriendly (small-d) archs: {"batch": ("pod","data","model"),
+    "model": None, ...}."""
+    prev = current_mesh()
+    prev_ov = current_overrides()
+    _state.mesh = mesh
+    _state.overrides = dict(overrides or {})
+    try:
+        yield
+    finally:
+        _state.mesh = prev
+        _state.overrides = prev_ov
+
+
+def _resolve(mesh: Mesh, logical: Optional[str]) -> Optional[Union[str, Tuple[str, ...]]]:
+    if logical is None or logical == "none":
+        return None
+    ov = current_overrides()
+    phys = ov[logical] if logical in ov else LOGICAL_RULES.get(logical, logical)
+    if phys is None:
+        return None
+    names = (phys,) if isinstance(phys, str) else tuple(phys)
+    present = tuple(n for n in names if n in mesh.axis_names)
+    if not present:
+        return None
+    return present if len(present) > 1 else present[0]
+
+
+def _axis_size(mesh: Mesh, phys: Union[str, Tuple[str, ...]]) -> int:
+    if isinstance(phys, str):
+        return mesh.shape[phys]
+    n = 1
+    for a in phys:
+        n *= mesh.shape[a]
+    return n
+
+
+def spec_for(mesh: Mesh, dims: Sequence[Optional[str]], shape: Sequence[int]) -> P:
+    """Resolve logical dims to a PartitionSpec, dropping non-divisible axes."""
+    out = []
+    for logical, size in zip(dims, shape):
+        phys = _resolve(mesh, logical)
+        if phys is not None and size % _axis_size(mesh, phys) == 0:
+            out.append(phys)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def shard_hint(x: jax.Array, *dims: Optional[str]) -> jax.Array:
+    """Constraint hint; silently a no-op outside a mesh context."""
+    mesh = current_mesh()
+    if mesh is None or not hasattr(x, "shape"):
+        return x
+    if len(dims) != x.ndim:
+        return x
+    spec = spec_for(mesh, dims, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(mesh: Mesh, *dims: Optional[str], shape=None) -> NamedSharding:
+    if shape is None:
+        # no divisibility check possible; resolve optimistically
+        spec = P(*[_resolve(mesh, d) for d in dims])
+    else:
+        spec = spec_for(mesh, dims, shape)
+    return NamedSharding(mesh, spec)

@@ -1,0 +1,93 @@
+"""Learned dictionary cost model: regressors, featurization, persistence."""
+import numpy as np
+import pytest
+
+from repro.costmodel import regression as R
+from repro.costmodel.profiler import ProfileRow, ProfileTable
+from repro.costmodel.store import (
+    LearnedCostModel,
+    load_model,
+    save_model,
+    train,
+    train_all_in_one,
+)
+
+
+def _fake_table():
+    """Synthetic 'profiling' data with known structure: hash ~ c·n,
+    sorted ~ c·n·log2(size) (unordered) / c·n (ordered)."""
+    rows = []
+    for size in (256, 1024, 4096, 16384):
+        for ratio in (0.5, 1.0, 2.0):
+            n = int(size * ratio)
+            for ordered in (False, True):
+                rows.append(ProfileRow("ht_linear", "lookup_hit", ordered, size, n, 20e-9 * n))
+                st = (9e-9 * n) if ordered else (11e-9 * n * np.log2(size))
+                rows.append(ProfileRow("st_sorted", "lookup_hit", ordered, size, n, st))
+                rows.append(ProfileRow("ht_linear", "insert", ordered, size, n, 26e-9 * n))
+                ins = (7e-9 * n) if ordered else (14e-9 * n * np.log2(size))
+                rows.append(ProfileRow("st_sorted", "insert", ordered, size, n, ins))
+                rows.append(ProfileRow("ht_linear", "lookup_miss", ordered, size, n, 30e-9 * n))
+                rows.append(ProfileRow("st_sorted", "lookup_miss", ordered, size, n, st))
+    return ProfileTable(rows)
+
+
+def test_individual_models_recover_crossover():
+    tab = _fake_table()
+    m = train(tab, model_name="knn4")
+    # large sorted-unordered lookup must cost more than hash; ordered less
+    st_uno = m.op_cost("st_sorted", "lookup_hit", 10000, 16384, False)
+    st_ord = m.op_cost("st_sorted", "lookup_hit", 10000, 16384, True)
+    ht = m.op_cost("ht_linear", "lookup_hit", 10000, 16384, False)
+    assert st_ord < ht < st_uno
+
+
+def test_prediction_proportional_to_truth():
+    """Fig. 9's criterion: predictions proportional to actual on log scale."""
+    tab = _fake_table()
+    for name in ("knn4", "poly2", "gboost"):
+        m = train(tab, model_name=name)
+        logs = []
+        for r in tab.rows:
+            pred = m.op_cost(r.ds, r.op, r.n, r.size, r.ordered)
+            logs.append(abs(np.log(max(pred, 1e-12)) - np.log(r.seconds)))
+        assert np.median(logs) < 0.25, name
+
+
+def test_all_in_one_model():
+    m = train_all_in_one(_fake_table())
+    assert m.op_cost("ht_linear", "insert", 1000, 2048, False) > 0
+
+
+def test_save_load_roundtrip(tmp_path):
+    tab = _fake_table()
+    m = train(tab)
+    save_model(m, str(tmp_path))
+    m2 = load_model(str(tmp_path))
+    for key in list(m.models)[:4]:
+        ds, op, o = key
+        a = m.op_cost(ds, op, 5000, 4096, o)
+        b = m2.op_cost(ds, op, 5000, 4096, o)
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+
+
+@pytest.mark.parametrize("name", sorted(R.MODEL_ZOO))
+def test_regressor_fit_predict_roundtrip(name, rng):
+    X = rng.random((60, 2)) * 100 + 1
+    y = X[:, 0] * 0.5 + X[:, 1] ** 1.2 + 5
+    m = R.make(name).fit(R.with_log_features(X), y)
+    pred = m.predict(R.with_log_features(X))
+    assert np.median(np.abs(np.log(pred) - np.log(y))) < 0.4
+    m2 = R.MODEL_ZOO[name].from_state(m.to_state())
+    np.testing.assert_allclose(pred, m2.predict(R.with_log_features(X)), rtol=1e-6)
+
+
+def test_quick_profile_smoke():
+    """One tiny real profiling cell — exercises the actual timing path."""
+    from repro.costmodel.profiler import profile
+
+    tab = profile(backends=("ht_linear",), sizes=(256,), lookup_ratios=(1.0,), repeats=1)
+    # per ordering: 1 distinct insert + 5 duplicate-heavy inserts (small-size
+    # extreme-dup grid) + hit + miss = 8; × {unordered, ordered} = 16
+    assert len(tab.rows) == 16
+    assert all(r.seconds > 0 for r in tab.rows)

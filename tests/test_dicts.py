@@ -1,0 +1,115 @@
+"""Dictionary backends: correctness vs Python oracle + hypothesis invariants."""
+import collections
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.dicts import base as dbase
+from repro.dicts import registry
+
+BACKENDS = registry.names()
+
+
+def _oracle(keys, vals, valid=None):
+    out = collections.defaultdict(lambda: np.zeros(vals.shape[1], np.float32))
+    for i, (k, v) in enumerate(zip(keys, vals)):
+        if valid is None or valid[i]:
+            out[int(k)] += v
+    return out
+
+
+@pytest.mark.parametrize("ds", BACKENDS)
+def test_build_lookup_update(ds, rng):
+    mod = registry.get(ds)
+    keys = rng.integers(0, 120, 400).astype(np.int32)
+    vals = rng.normal(size=(400, 2)).astype(np.float32)
+    exp = _oracle(keys, vals)
+    t = mod.build(jnp.asarray(keys), jnp.asarray(vals), 1024)
+    assert int(mod.size(t)) == len(exp)
+    qs = jnp.asarray(sorted(exp), jnp.int32)
+    v, f = mod.lookup(t, qs)
+    assert bool(f.all())
+    np.testing.assert_allclose(
+        np.asarray(v), np.stack([exp[int(k)] for k in np.asarray(qs)]), rtol=1e-4
+    )
+    # misses
+    vm, fm = mod.lookup(t, jnp.asarray([5000, -3], jnp.int32))
+    assert not bool(fm.any()) and float(jnp.abs(vm).sum()) == 0.0
+    # update doubles
+    t2 = mod.update_add(t, jnp.asarray(keys), jnp.asarray(vals))
+    v2, _ = mod.lookup(t2, qs)
+    np.testing.assert_allclose(np.asarray(v2), 2 * np.asarray(v), rtol=1e-4)
+
+
+@pytest.mark.parametrize("ds", BACKENDS)
+def test_valid_mask(ds, rng):
+    mod = registry.get(ds)
+    keys = rng.integers(0, 60, 200).astype(np.int32)
+    vals = rng.normal(size=(200, 1)).astype(np.float32)
+    valid = rng.random(200) < 0.4
+    exp = _oracle(keys, vals, valid)
+    t = mod.build(jnp.asarray(keys), jnp.asarray(vals), 512, valid=jnp.asarray(valid))
+    assert int(mod.size(t)) == len(exp)
+
+
+@pytest.mark.parametrize("ds", ("st_sorted", "st_blocked"))
+def test_sorted_iteration_order(ds, rng):
+    mod = registry.get(ds)
+    keys = rng.integers(0, 500, 300).astype(np.int32)
+    t = mod.build(jnp.asarray(keys), jnp.ones((300, 1), jnp.float32), 1024)
+    ks, _, valid = mod.items(t)
+    live = np.asarray(ks)[np.asarray(valid)]
+    assert (np.diff(live) > 0).all()  # strictly ascending, deduped
+
+
+@pytest.mark.parametrize("ds", ("st_sorted", "st_blocked"))
+def test_assume_sorted_build(ds, rng):
+    mod = registry.get(ds)
+    keys = np.sort(rng.integers(0, 100, 256).astype(np.int32))
+    vals = rng.normal(size=(256, 1)).astype(np.float32)
+    t1 = mod.build(jnp.asarray(keys), jnp.asarray(vals), 512, assume_sorted=True)
+    t2 = mod.build(jnp.asarray(keys), jnp.asarray(vals), 512, assume_sorted=False)
+    np.testing.assert_array_equal(np.asarray(t1.keys), np.asarray(t2.keys))
+    np.testing.assert_allclose(np.asarray(t1.vals), np.asarray(t2.vals), rtol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    data=st.lists(
+        st.tuples(st.integers(0, 40), st.floats(-5, 5, allow_nan=False)),
+        min_size=1,
+        max_size=120,
+    ),
+    ds=st.sampled_from(BACKENDS),
+)
+def test_property_lookup_after_build(data, ds):
+    """∀ batches: lookup(build(batch), k) == Σ of k's values (bag semantics)."""
+    mod = registry.get(ds)
+    keys = np.array([k for k, _ in data], np.int32)
+    vals = np.array([[v] for _, v in data], np.float32)
+    exp = _oracle(keys, vals)
+    t = mod.build(jnp.asarray(keys), jnp.asarray(vals), 256)
+    qs = jnp.asarray(sorted(exp), jnp.int32)
+    v, f = mod.lookup(t, qs)
+    assert bool(f.all())
+    got = np.asarray(v)[:, 0]
+    want = np.array([exp[int(k)][0] for k in np.asarray(qs)])
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+    assert int(mod.size(t)) == len(exp)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    keys=st.lists(st.integers(0, 1000), min_size=1, max_size=80),
+    ds=st.sampled_from(BACKENDS),
+)
+def test_property_misses_never_found(keys, ds):
+    """Keys outside the built set are never 'found' (no false positives)."""
+    mod = registry.get(ds)
+    ks = np.array(keys, np.int32)
+    t = mod.build(jnp.asarray(ks), jnp.ones((len(ks), 1), jnp.float32), 256)
+    absent = np.array([k + 2000 for k in keys[:20]], np.int32)
+    _, f = mod.lookup(t, jnp.asarray(absent))
+    assert not bool(f.any())

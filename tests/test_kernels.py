@@ -1,0 +1,133 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dicts import registry
+from repro.kernels import (
+    flash_attention as fa,
+    hash_probe as hp,
+    merge_lookup as ml,
+    ref,
+    segment_reduce as sr,
+    sorted_lookup as sl,
+)
+
+
+@pytest.mark.parametrize("n,cap,V", [(700, 2048, 1), (2000, 8192, 3), (64, 1024, 2)])
+def test_hash_probe(n, cap, V, rng):
+    keys = rng.integers(0, 3 * n, n).astype(np.int32)
+    vals = rng.normal(size=(n, V)).astype(np.float32)
+    t = registry.get("ht_linear").build(jnp.asarray(keys), jnp.asarray(vals), cap)
+    qs = jnp.asarray(rng.integers(0, 6 * n, max(n // 2, 8)).astype(np.int32))
+    rv, rf = ref.hash_probe(t.keys, t.vals, qs)
+    kv, kf = hp.hash_probe(t.keys, t.vals, qs, block=256)
+    np.testing.assert_array_equal(np.asarray(rf), np.asarray(kf))
+    np.testing.assert_allclose(np.asarray(rv), np.asarray(kv), rtol=1e-6)
+
+
+@pytest.mark.parametrize("n,cap", [(500, 2048), (3000, 4096)])
+def test_sorted_lookup(n, cap, rng):
+    keys = np.unique(rng.integers(0, 5 * n, n)).astype(np.int32)
+    vals = rng.normal(size=(len(keys), 2)).astype(np.float32)
+    t = registry.get("st_sorted").build(jnp.asarray(keys), jnp.asarray(vals), cap)
+    qs = jnp.asarray(rng.integers(0, 10 * n, 900).astype(np.int32))
+    rv, rf = ref.sorted_lookup(t.keys, t.vals, qs)
+    kv, kf = sl.sorted_lookup(t.keys, t.vals, qs, block=256)
+    np.testing.assert_array_equal(np.asarray(rf), np.asarray(kf))
+    np.testing.assert_allclose(np.asarray(rv), np.asarray(kv), rtol=1e-6)
+
+
+@pytest.mark.parametrize("skew", [False, True])
+def test_merge_lookup(skew, rng):
+    keys = np.unique(rng.integers(0, 60000, 20000)).astype(np.int32)
+    vals = rng.normal(size=(len(keys), 1)).astype(np.float32)
+    t = registry.get("st_sorted").build(jnp.asarray(keys), jnp.asarray(vals), 32768)
+    if skew:  # busts the window -> exercises the lax.cond fallback
+        qs = np.sort(
+            np.concatenate([np.zeros(500, np.int32), np.full(500, 59999, np.int32)])
+        )
+    else:
+        qs = np.sort(rng.integers(0, 60000, 4000).astype(np.int32))
+    rv, rf = ref.merge_lookup(t.keys, t.vals, jnp.asarray(qs))
+    kv, kf = ml.merge_lookup(t.keys, t.vals, jnp.asarray(qs))
+    np.testing.assert_array_equal(np.asarray(rf), np.asarray(kf))
+    np.testing.assert_allclose(np.asarray(rv), np.asarray(kv), rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize(
+    "nkeys,n,block", [(30, 2000, 256), (3, 1500, 512), (1, 600, 128), (1200, 2048, 1024)]
+)
+def test_segment_reduce(nkeys, n, block, rng):
+    keys = np.sort(rng.integers(0, nkeys, n)).astype(np.int32)
+    vals = rng.normal(size=(n, 2)).astype(np.float32)
+    rs, re = ref.segment_reduce(jnp.asarray(keys), jnp.asarray(vals))
+    ks, ke = sr.segment_reduce(jnp.asarray(keys), jnp.asarray(vals), block=block)
+    np.testing.assert_array_equal(np.asarray(re), np.asarray(ke))
+    np.testing.assert_allclose(np.asarray(rs), np.asarray(ks), rtol=3e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize(
+    "B,H,Hkv,Tq,Tk,D,causal,window",
+    [
+        (1, 2, 2, 64, 64, 16, True, 0),
+        (1, 4, 2, 64, 64, 16, True, 0),  # GQA
+        (1, 4, 1, 32, 96, 16, True, 0),  # decode-ish, MQA
+        (1, 2, 2, 64, 64, 16, False, 0),  # cross-attention
+        (1, 2, 1, 96, 96, 16, True, 40),  # sliding window
+        (1, 1, 1, 50, 70, 16, True, 0),  # unaligned lengths
+    ],
+)
+def test_flash_attention(B, H, Hkv, Tq, Tk, D, causal, window, rng):
+    q = jnp.asarray(rng.normal(size=(B, H, Tq, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Hkv, Tk, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Hkv, Tk, D)), jnp.float32)
+    g = H // Hkv
+    r = ref.flash_attention(
+        q, jnp.repeat(k, g, axis=1), jnp.repeat(v, g, axis=1), causal=causal, window=window
+    )
+    o = fa.flash_attention(q, k, v, causal=causal, window=window, bq=32, bk=32)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_chunked_matches_dense(rng):
+    q = jnp.asarray(rng.normal(size=(1, 2, 64, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 96, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 96, 16)), jnp.float32)
+    for causal, window in [(True, 0), (False, 0), (True, 24)]:
+        a = ref.flash_attention(q, k, v, causal=causal, window=window)
+        b = ref.flash_attention_chunked(q, k, v, causal=causal, window=window, chunk=32)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)
+
+
+def test_kernel_dtype_sweep_bf16(rng):
+    """Kernels accept bf16 values (vals lanes) without NaNs."""
+    q = jnp.asarray(rng.normal(size=(1, 2, 32, 16)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(1, 2, 32, 16)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(1, 2, 32, 16)), jnp.bfloat16)
+    o = fa.flash_attention(q, k, v, causal=True, bq=16, bk=16)
+    assert o.dtype == jnp.bfloat16
+    assert np.isfinite(np.asarray(o, np.float32)).all()
+
+
+@pytest.mark.parametrize("n,cap,block", [(1500, 2048, 512), (300, 1024, 128)])
+def test_hash_build_kernel(n, cap, block, rng):
+    """Pallas build (VMEM-scratch table carried across tiles) == oracle."""
+    import collections
+
+    from repro.dicts import base as dbase
+    from repro.kernels import hash_build as hb
+
+    keys = rng.integers(0, n // 2, n).astype(np.int32)
+    vals = rng.normal(size=(n, 2)).astype(np.float32)
+    tk, tv = hb.hash_build(
+        jnp.asarray(keys), jnp.asarray(vals), capacity=cap, block=block
+    )
+    tk, tv = np.asarray(tk), np.asarray(tv)
+    exp = collections.defaultdict(lambda: np.zeros(2, np.float32))
+    for k, v in zip(keys, vals):
+        exp[int(k)] += v
+    got = {int(k): tv[i] for i, k in enumerate(tk) if tk[i] != dbase.EMPTY}
+    assert set(got) == set(exp)
+    for k in exp:
+        np.testing.assert_allclose(got[k], exp[k], rtol=3e-4, atol=3e-4)

@@ -1,0 +1,128 @@
+"""LLQL IR + reference-interpreter semantics (the system's ground truth)."""
+import numpy as np
+import pytest
+
+from repro.core import interp as I
+from repro.core import llql as L
+from repro.core import operators as O
+
+
+def _rows(rng, n, nk=20):
+    return [
+        dict(K=int(rng.integers(0, nk)), P=float(rng.random()), D=float(rng.random()))
+        for _ in range(n)
+    ]
+
+
+def test_groupby_matches_oracle(rng):
+    rows = _rows(rng, 300)
+    prog = O.groupby(
+        "R", grp=lambda r: r.key.get("K"), aggfn=lambda r: r.key.get("P") * r.key.get("D")
+    )
+    res = I.run(prog, {"R": I.relation(rows)})
+    expect = {}
+    for r in rows:
+        expect[r["K"]] = expect.get(r["K"], 0.0) + r["P"] * r["D"]
+    assert set(res.data) == set(expect)
+    for k, v in expect.items():
+        assert abs(res.data[k] - v) < 1e-9
+
+
+def test_groupby_hinted_same_semantics(rng):
+    rows = sorted(_rows(rng, 200), key=lambda r: r["K"])
+    plain = O.groupby("R", grp=lambda r: r.key.get("K"), aggfn=lambda r: r.key.get("P"))
+    hinted = O.groupby(
+        "R", grp=lambda r: r.key.get("K"), aggfn=lambda r: r.key.get("P"),
+        ds="st_sorted", hinted=True,
+    )
+    r1 = I.run(plain, {"R": I.relation(rows)})
+    r2 = I.run(hinted, {"R": I.relation(rows)})
+    assert r1.data.keys() == r2.data.keys()
+    for k in r1.data:
+        assert abs(r1.data[k] - r2.data[k]) < 1e-9
+    # hinted update stats recorded, and the key sequence was ordered
+    assert r2.stats.hinted_updates > 0
+    assert r2.stats.update_keys_sorted
+
+
+def test_partitioned_join_counts(rng):
+    rrows = [dict(K=int(rng.integers(0, 10)), A=float(i)) for i in range(60)]
+    srows = [dict(K=int(rng.integers(0, 10)), B=float(i)) for i in range(40)]
+    pj = O.partitioned_join(
+        "R", "S",
+        part_r=lambda r: r.key.get("K"),
+        part_s=lambda s: s.key.get("K"),
+        out_key=lambda r, s: L.RecordCtor(
+            (("A", r.key.get("A")), ("B", s.key.get("B")))
+        ),
+    )
+    out = I.run(pj, {"R": I.relation(rrows), "S": I.relation(srows)})
+    expect = sum(1 for a in rrows for b in srows if a["K"] == b["K"])
+    assert sum(out.data.values()) == expect
+
+
+def test_sort_merge_join_equals_hash_join(rng):
+    rrows = sorted(
+        [dict(K=int(rng.integers(0, 15)), A=float(i)) for i in range(50)],
+        key=lambda r: r["K"],
+    )
+    srows = [dict(K=int(rng.integers(0, 15)), B=float(i)) for i in range(30)]
+    kw = dict(
+        part_r=lambda r: r.key.get("K"),
+        part_s=lambda s: s.key.get("K"),
+        out_key=lambda r, s: L.RecordCtor(
+            (("A", r.key.get("A")), ("B", s.key.get("B")))
+        ),
+    )
+    hj = I.run(O.hash_join("R", "S", **kw), {"R": I.relation(rrows), "S": I.relation(srows)})
+    smj = I.run(
+        O.sort_merge_join("R", "S", **kw),
+        {"R": I.relation(rrows), "S": I.relation(srows)},
+    )
+    assert hj.data.keys() == smj.data.keys()
+
+
+def test_covar_three_forms_agree(rng):
+    S = [dict(s=int(rng.integers(0, 8)), i=float(rng.random())) for _ in range(80)]
+    R = [dict(s=int(rng.integers(0, 8)), c=float(rng.random())) for _ in range(30)]
+    trie = I.LDict("st_sorted", "Strie")
+    for row in S:
+        inner = trie.data.setdefault(row["s"], I.LDict("st_sorted"))
+        inner.data[row["i"]] = inner.data.get(row["i"], 0) + 1
+    cn = I.run(O.covar_naive(), {"S": I.relation(S), "R": I.relation(R)})
+    ci = I.run(O.covar_interleaved(), {"S": I.relation(S), "R": I.relation(R)})
+    cf = I.run(O.covar_factorized(), {"R": I.relation(R), "Strie": trie})
+    for f in ("i_i", "i_c", "c_c"):
+        assert abs(cn.value.get(f) - ci.value.get(f)) < 1e-9
+        assert abs(cn.value.get(f) - cf.value.get(f)) < 1e-9
+
+
+def test_missing_semantics():
+    d = I.LDict("ht_linear")
+    assert isinstance(d.lookup(42), I.Missing)
+    assert d.stats.lookup_misses == 1
+    # MISSING annihilates products and is additive zero
+    assert I.value_add(I.MISSING, 5.0) == 5.0
+
+
+def test_pretty_prints_roundtrippable_shapes():
+    prog = O.groupby("R", grp=lambda r: r.key.get("K"), aggfn=lambda r: r.key.get("P"))
+    txt = L.pretty(prog)
+    assert "for(r <- R)" in txt and "{{ }}" in txt
+
+
+def test_annotate_and_dict_symbols():
+    prog = O.groupjoin(
+        "L", "O",
+        key_r=lambda r: r.key.get("K"), key_s=lambda s: s.key.get("K"),
+        g=lambda s: L.Const(1.0, L.DOUBLE), f=lambda r: r.key.get("P"),
+    )
+    syms = L.dict_symbols(prog)
+    assert set(syms) == {"Sd", "Agg"}
+    ann = L.annotate(prog, {"Sd": "st_sorted", "Agg": "ht_linear"})
+    found = {
+        n.name: n.value.ds
+        for n in L.walk(ann)
+        if isinstance(n, L.Let) and isinstance(n.value, L.DictNew)
+    }
+    assert found == {"Sd": "st_sorted", "Agg": "ht_linear"}
