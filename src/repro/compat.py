@@ -1,0 +1,68 @@
+"""jax version compatibility — single source for API drift.
+
+The repo targets the modern jax surface (``jax.shard_map``,
+``jax.sharding.AxisType``, differentiable ``optimization_barrier``); older
+runtimes (0.4.x) spell these differently or lack them.  Every module that
+touches one of these goes through this shim so version logic lives in one
+place.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]) -> "jax.sharding.Mesh":
+    """``jax.make_mesh`` with Auto axis types where supported."""
+    try:
+        from jax.sharding import AxisType
+
+        return jax.make_mesh(
+            tuple(axis_shapes),
+            tuple(axis_names),
+            axis_types=(AxisType.Auto,) * len(tuple(axis_names)),
+        )
+    except (ImportError, TypeError):
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+
+
+def shard_map(fn, *, mesh, in_specs, out_specs):
+    """``jax.shard_map`` (new) / ``jax.experimental.shard_map`` (old), with
+    replication checking off — dictionary builds start from shard-invariant
+    empties, which the checker cannot see."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )
+
+
+def axis_size(axis) -> int:
+    """``lax.axis_size`` (new) / ``psum(1, axis)`` (old) for a named mesh
+    axis or axis tuple, inside a shard_map/pmap region."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis)
+    return jax.lax.psum(1, axis)
+
+
+@functools.lru_cache(maxsize=None)
+def _barrier_differentiable() -> bool:
+    try:
+        jax.grad(lambda x: jax.lax.optimization_barrier(x * 1.0))(1.0)
+        return True
+    except NotImplementedError:
+        return False
+
+
+def optimization_barrier(x):
+    """``lax.optimization_barrier`` where it is differentiable; identity
+    otherwise (the barrier is a perf hint — correctness never depends on it)."""
+    if _barrier_differentiable():
+        return jax.lax.optimization_barrier(x)
+    return x

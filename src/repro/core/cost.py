@@ -121,6 +121,35 @@ class DictChoice:
 GammaDict = Dict[str, DictChoice]
 
 
+# ---------------------------------------------------------------------------
+# Δ_net — exchange/shuffle cost for the distributed plan realization
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class NetCostModel:
+    """α-β model of the cross-shard Exchange the sharded executor inserts
+    after every dictionary built from sharded inputs (DESIGN.md §4): each
+    shard's partial dictionary is routed by key hash through an all-to-all,
+    then merged by one local build.  ``shuffle_seconds`` prices the wire
+    traffic; the merge build is priced through Δ by the caller."""
+
+    n_shards: int = 1
+    alpha: float = 2e-6  # per-collective latency (s) — one all-to-all phase
+    beta: float = 1.0 / 10e9  # seconds per byte through the interconnect
+    key_bytes: float = 4.0  # int32 keys
+    lane_bytes: float = 4.0  # f32 value lanes
+
+    def entry_bytes(self, lanes: float = 1.0) -> float:
+        return self.key_bytes + self.lane_bytes * max(1.0, lanes)
+
+    def shuffle_seconds(self, entries: float, lanes: float = 1.0) -> float:
+        if self.n_shards <= 1 or entries <= 0:
+            return 0.0
+        hops = math.log2(max(2.0, float(self.n_shards)))
+        return self.alpha * hops + entries * self.entry_bytes(lanes) * self.beta
+
+
 @dataclass
 class DictMeta:
     name: str
@@ -129,6 +158,8 @@ class DictMeta:
     elems: float = 0.0  # total inserted elements incl. duplicates (for groups)
     nested: bool = False  # values are inner dictionaries (partition/trie dict)
     build_ordered: bool = True  # every build site saw sorted keys
+    lanes: float = 1.0  # value arity (bytes on the wire for exchanges)
+    build_rels: set = field(default_factory=set)  # base relations feeding builds
 
     @property
     def group_sz(self) -> float:
@@ -397,6 +428,13 @@ class _Infer:
                 )
         meta.card = N
         meta.elems += C
+        for node in L.walk(e.keyexpr):
+            if isinstance(node, L.Var) and isinstance(env.get(node.name), RowOf):
+                meta.build_rels.add(env[node.name].rel)  # type: ignore[union-attr]
+        for node in L.walk(e.value):
+            if isinstance(node, L.RecordCtor):
+                meta.lanes = max(meta.lanes, float(len(node.fields)))
+                break
         if isinstance(e.value, L.DictNew) and e.value.key is not None:
             meta.nested = True
         if not ordered and not meta.choice.ds.startswith("ht"):
@@ -507,6 +545,8 @@ def infer_cost(
     delta: DictCostModel,
     gamma_dict: Optional[GammaDict] = None,
     vectorized: bool = VECTORIZED_DEFAULT,
+    net: Optional[NetCostModel] = None,
+    sharded_rels: Optional[Tuple[str, ...]] = None,
 ) -> CostResult:
     """Run the Fig. 8 inference over a whole program.
 
@@ -514,7 +554,40 @@ def infer_cost(
     choice; unmentioned symbols fall back to their ``@ds`` annotation, then to
     ``DEFAULT_DS``.  ``vectorized=False`` recovers the paper's exact per-row
     rules (CPU engine semantics).
+
+    ``net`` prices the *distributed* realization of the program: every
+    dictionary built from a sharded base relation (all relations when
+    ``sharded_rels`` is None) becomes a per-shard dictionary plus an Exchange
+    (``plan.shard``), charged as wire traffic (Δ_net) plus the merge re-build
+    (Δ insert of the routed partial entries).
     """
     eng = _Infer(sigma, delta, gamma_dict or {}, vectorized=vectorized)
     eng.infer(expr, {}, calls=1.0, site="root")
+    if net is not None and net.n_shards > 1:
+        for meta in eng.res.dict_meta.values():
+            if sharded_rels is not None and not (
+                meta.build_rels & set(sharded_rels)
+            ):
+                continue
+            # each shard holds at most its own elements and at most the full
+            # key set; the shuffle moves every per-shard partial entry
+            entries = min(meta.elems, meta.card * net.n_shards)
+            if entries <= 0:
+                continue
+            sec = net.shuffle_seconds(entries, meta.lanes)
+            sec += delta.op_cost(
+                meta.choice.ds, "insert", entries, max(1.0, meta.card), False
+            )
+            eng.res.add(
+                CostItem(
+                    "exchange",
+                    meta.name,
+                    meta.choice.ds,
+                    "exchange",
+                    entries,
+                    max(1.0, meta.card),
+                    False,
+                    sec,
+                )
+            )
     return eng.res

@@ -294,7 +294,13 @@ class Interp:
             return _BINOPS[e.op](a, b)
         if isinstance(e, L.UnOp):
             v = self._eval(e.operand, env)
-            return (not v) if e.op == "!" else (-v)
+            if e.op == "!":
+                return not v
+            if e.op == "floor":
+                import math
+
+                return float(math.floor(v))
+            return -v
         if isinstance(e, L.RefNew):
             return RefCell(zero_of(e.type))
         if isinstance(e, L.RefAdd):

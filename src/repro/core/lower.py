@@ -1,18 +1,23 @@
-"""LLQL → vectorized-engine lowering.
+"""LLQL → physical-plan lowering.
 
 DBFlex generates specialized C++ from the synthesized LLQL; here the same
-role is played by *tracing*: the recognized loop forms (exactly the paper's
-Fig. 6/7 listings) are matched structurally and compiled to the vectorized
-operators in ``repro.exec.engine``, parameterized by the ``@ds`` choices the
-synthesizer made.  Row-level scalar expressions are compiled to columnar jnp
-expressions by ``compile_rowfn``.
+role is played by compiling the recognized loop forms (the paper's Fig. 6/7
+listings plus their chained compositions) into the explicit physical-plan IR
+of ``repro.core.plan``.  ``compile`` is pure translation — no data touched —
+so the *same* plan object feeds the single-shard executor
+(``repro.exec.engine.execute_plan``), the sharded executor
+(``repro.exec.distributed.execute_plan_sharded``), and the cost model.
 
 Recognized forms
 ----------------
 * group-by aggregate (Fig. 6c/6d), with optional filter and hinted insert;
-* partitioned FK join build+probe (Fig. 6a/6b), hinted or not;
+* partitioned FK join build+probe (Fig. 6a/6b), hinted or not — including
+  *chains*: loops over previously-joined relations (record-keyed join
+  outputs become ``Project`` relations) and index builds over them;
 * groupjoin (Fig. 6e/6f);
 * scalar aggregation incl. interleaved-lookup form (Fig. 7b);
+* dictionary scans (``for g in Agg``) with filter + re-join (TPC-H Q18's
+  HAVING + join-back shape);
 * selection / projection (§3.3.1–3.3.2).
 
 Anything else falls back to the reference interpreter (slow, correct) with
@@ -23,15 +28,21 @@ from __future__ import annotations
 
 import warnings
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 
 from repro.data.table import Table
-from repro.dicts import base as dbase
 from . import llql as L
-from .cardinality import CardModel, key_columns
+from . import plan as P
+from .cardinality import CardModel
 from .cost import DictChoice, GammaDict
+
+# Reserved column names of a materialized dictionary scan (`for g in Agg`):
+# `g.key` / `g.val` compile to these columns; extra value lanes get an index
+# suffix (`__val__1`, ...).
+DICT_KEY = "__key__"
+DICT_VAL = "__val__"
 
 
 # ---------------------------------------------------------------------------
@@ -56,10 +67,23 @@ _BIN = {
     "max": jnp.maximum,
 }
 
+_UN = {
+    "!": lambda v: ~v,
+    "-": lambda v: -v,
+    "floor": jnp.floor,
+}
 
-def compile_rowfn(e: L.Expr, var: str, table: Table):
-    """Compile a row-level expression over loop variable ``var`` into a
-    columnar jnp value against ``table``."""
+
+class _Unsupported(Exception):
+    pass
+
+
+def compile_rowfn_frame(e: L.Expr, tables: Dict[str, Table]):
+    """Compile a row-level expression over one or more loop variables into a
+    columnar jnp value; ``tables`` maps each bound variable to its (aligned)
+    table.  ``v.key.a`` reads column ``a`` of v's table; ``v.val`` is the
+    dictionary value lane for dict scans and the bag multiplicity otherwise;
+    ``v.key`` (whole) is the key column of a dict scan."""
 
     def go(x: L.Expr):
         if isinstance(x, L.Const):
@@ -70,95 +94,71 @@ def compile_rowfn(e: L.Expr, var: str, table: Table):
                 isinstance(base, L.FieldAccess)
                 and base.name == "key"
                 and isinstance(base.rec, L.Var)
-                and base.rec.name == var
+                and base.rec.name in tables
             ):
-                return table.col(x.name)
-            if isinstance(base, L.Var) and base.name == var:
+                return tables[base.rec.name].col(x.name)
+            if isinstance(base, L.Var) and base.name in tables:
+                t = tables[base.name]
                 if x.name == "val":
-                    return table.multiplicity()
+                    if DICT_VAL in t.columns:
+                        return t.col(DICT_VAL)
+                    return t.multiplicity()
                 if x.name == "key":
+                    if DICT_KEY in t.columns:
+                        return t.col(DICT_KEY)
                     raise _Unsupported("whole-row key")
             raise _Unsupported(f"field access {L.pretty(x)}")
         if isinstance(x, L.BinOp):
             return _BIN[x.op](go(x.lhs), go(x.rhs))
         if isinstance(x, L.UnOp):
-            v = go(x.operand)
-            return (~v) if x.op == "!" else (-v)
+            return _UN[x.op](go(x.operand))
         raise _Unsupported(f"row expr {type(x).__name__}")
 
     return go(e)
 
 
-class _Unsupported(Exception):
-    pass
+def compile_rowfn(e: L.Expr, var: str, table: Table):
+    """Single-variable form (kept for callers outside the plan executor)."""
+    return compile_rowfn_frame(e, {var: table})
 
 
 # ---------------------------------------------------------------------------
-# structural analysis: flatten the program into phases
+# LLQL → Plan
 # ---------------------------------------------------------------------------
 
 
-@dataclass
-class BuildPhase:
-    sym: str
-    rel: str
-    loopvar: str
-    keyexpr: L.Expr
-    valexpr: L.Expr  # scalar/record value; DictNew singleton => index build
-    pred: Optional[L.Expr] = None
-    hinted: bool = False
+def compile(
+    expr: L.Expr,
+    choices: Optional[GammaDict] = None,
+    sigma: Optional[CardModel] = None,
+) -> P.Plan:
+    """Translate an LLQL program into a physical plan, baking the synthesized
+    per-dictionary ``choices`` into the dictionary-producing nodes (symbols
+    not covered fall back to their ``@ds`` annotation, then the default).
+    Raises ``_Unsupported`` on program shapes outside the recognized forms
+    (``execute`` catches it and falls back to the interpreter)."""
+    del sigma  # capacity decisions happen at execution time
+    choices = dict(choices or {})
+    nodes: List[P.Node] = []
+    dict_ann: Dict[str, Optional[str]] = {}
+    ref_syms: Dict[str, L.Type] = {}
+    result: List[Optional[str]] = [None]
+    counter = [0]
 
+    def fresh() -> str:
+        counter[0] += 1
+        return f"%{counter[0] - 1}"
 
-@dataclass
-class ProbeJoinPhase:  # Fig. 6a/6b probe loop (nested For over lookup)
-    out_sym: str
-    rel: str
-    loopvar: str
-    inner_var: str
-    build_sym: str
-    probe_key: L.Expr
-    out_key: L.Expr
-    valexpr: L.Expr
-    pred: Optional[L.Expr] = None
-    hinted: bool = False
+    def choice_of(sym: str) -> DictChoice:
+        if sym in choices:
+            return choices[sym]
+        ann = dict_ann.get(sym)
+        return DictChoice(ann) if ann else DictChoice()
 
+    def emit(node: P.Node) -> None:
+        nodes.append(node)
 
-@dataclass
-class GroupJoinPhase:  # Fig. 6e/6f probe: out[k] += f(r) * lookup(build, k)
-    out_sym: str
-    rel: str
-    loopvar: str
-    build_sym: str
-    keyexpr: L.Expr
-    f_expr: L.Expr  # multiplicand not containing the lookup
-    pred: Optional[L.Expr] = None
-    hinted: bool = False
-
-
-@dataclass
-class ScalarAggPhase:  # RefAdd of a record of row exprs, optional dict lookup
-    ref_sym: str
-    rel: str
-    loopvar: str
-    fields: Tuple[Tuple[str, L.Expr], ...]
-    lookup_sym: Optional[str] = None  # Fig. 7b: let ra = Ragg(key) in ...
-    lookup_key: Optional[L.Expr] = None
-    lookup_var: Optional[str] = None
-    pred: Optional[L.Expr] = None
-
-
-@dataclass
-class Program:
-    dict_syms: Dict[str, Optional[str]] = field(default_factory=dict)  # ds ann
-    ref_syms: Dict[str, L.Type] = field(default_factory=dict)
-    phases: List[object] = field(default_factory=list)
-    result: Optional[str] = None
-
-
-def analyze(e: L.Expr) -> Program:
-    prog = Program()
-    hints: Dict[str, str] = {}  # iterator name -> dict sym
-
+    # -- statement level ----------------------------------------------------
     def stmt(x: L.Expr) -> None:
         if isinstance(x, L.Seq):
             stmt(x.first)
@@ -167,11 +167,11 @@ def analyze(e: L.Expr) -> Program:
         if isinstance(x, L.Let):
             v = x.value
             if isinstance(v, L.DictNew) and v.key is None:
-                prog.dict_syms[x.name] = v.ds
+                dict_ann[x.name] = v.ds
             elif isinstance(v, L.RefNew):
-                prog.ref_syms[x.name] = v.type
+                ref_syms[x.name] = v.type
             elif isinstance(v, L.DictIter) and isinstance(v.dict, L.Var):
-                hints[x.name] = v.dict.name
+                pass  # hintedness rides on HintedUpdate/HintedLookup nodes
             else:
                 raise _Unsupported(f"let of {type(v).__name__}")
             stmt(x.body)
@@ -180,23 +180,35 @@ def analyze(e: L.Expr) -> Program:
             loop(x)
             return
         if isinstance(x, L.Var):
-            prog.result = x.name
+            result[0] = x.name
             return
         if isinstance(x, L.Noop):
             return
         raise _Unsupported(f"top-level {type(x).__name__}")
 
+    # -- loop level ---------------------------------------------------------
     def loop(f: L.For) -> None:
-        if not isinstance(f.source, L.Input):
+        src = f.source
+        if isinstance(src, L.Input):
+            src_name = src.name
+        elif isinstance(src, L.Var) and src.name in dict_ann:
+            src_name = src.name  # derived relation or dictionary scan
+        else:
             raise _Unsupported("loop over non-input")
-        rel, lv = f.source.name, f.var
-        body, pred = f.body, None
+        frame = fresh()
+        emit(P.Scan(frame, source=src_name, var=f.var))
+
+        body = f.body
         if isinstance(body, L.If) and isinstance(body.els, L.Noop):
-            pred, body = body.cond, body.then
-        # optional `let rkey = keyexpr in ...`
+            sel = fresh()
+            emit(P.Select(sel, source=frame, pred=body.cond))
+            frame, body = sel, body.then
+
+        # optional `let rkey = keyexpr in ...` aliases
         key_alias: Dict[str, L.Expr] = {}
         while isinstance(body, L.Let) and not isinstance(
-            body.value, (L.DictNew, L.RefNew, L.DictIter, L.DictLookup, L.HintedLookup)
+            body.value,
+            (L.DictNew, L.RefNew, L.DictIter, L.DictLookup, L.HintedLookup),
         ):
             key_alias[body.name] = body.value
             body = body.body
@@ -208,100 +220,149 @@ def analyze(e: L.Expr) -> Program:
             )
 
         if isinstance(body, (L.DictUpdate, L.HintedUpdate)):
-            sym = body.dict.name  # type: ignore[union-attr]
-            hinted = isinstance(body, L.HintedUpdate)
-            val = resolve(body.value)
-            lk = _find_lookup(val)
-            if lk is not None and isinstance(lk.dict, L.Var):
-                f_expr = _strip_lookup(val, lk)
-                prog.phases.append(
-                    GroupJoinPhase(
-                        out_sym=sym,
-                        rel=rel,
-                        loopvar=lv,
-                        build_sym=lk.dict.name,
-                        keyexpr=resolve(body.keyexpr),
-                        f_expr=f_expr,
-                        pred=pred,
-                        hinted=hinted or isinstance(lk, L.HintedLookup),
-                    )
-                )
-            else:
-                prog.phases.append(
-                    BuildPhase(
-                        sym=sym,
-                        rel=rel,
-                        loopvar=lv,
-                        keyexpr=resolve(body.keyexpr),
-                        valexpr=val,
-                        pred=pred,
-                        hinted=hinted,
-                    )
-                )
+            dict_update(frame, body, resolve)
             return
-        if isinstance(body, L.For):  # nested probe loop (join)
-            src = body.source
-            if isinstance(src, (L.DictLookup, L.HintedLookup)) and isinstance(
-                src.dict, L.Var
-            ):
-                inner = body.body
-                if isinstance(inner, (L.DictUpdate, L.HintedUpdate)):
-                    prog.phases.append(
-                        ProbeJoinPhase(
-                            out_sym=inner.dict.name,  # type: ignore[union-attr]
-                            rel=rel,
-                            loopvar=lv,
-                            inner_var=body.var,
-                            build_sym=src.dict.name,
-                            probe_key=resolve(src.keyexpr),
-                            out_key=resolve(inner.keyexpr),
-                            valexpr=resolve(inner.value),
-                            pred=pred,
-                            hinted=isinstance(src, L.HintedLookup),
-                        )
-                    )
-                    return
-            raise _Unsupported("nested loop form")
+        if isinstance(body, L.For):
+            probe_loop(frame, body, resolve)
+            return
         if isinstance(body, L.Let) and isinstance(
             body.value, (L.DictLookup, L.HintedLookup)
         ):
             # Fig. 7b: let ra = Ragg(key) in Covar += {...}
             lk = body.value
             inner = body.body
-            if isinstance(inner, L.RefAdd) and isinstance(inner.value, L.RecordCtor):
-                prog.phases.append(
-                    ScalarAggPhase(
-                        ref_sym=inner.ref.name,  # type: ignore[union-attr]
-                        rel=rel,
-                        loopvar=lv,
-                        fields=inner.value.fields,
-                        lookup_sym=lk.dict.name,  # type: ignore[union-attr]
+            if (
+                isinstance(inner, L.RefAdd)
+                and isinstance(inner.value, L.RecordCtor)
+                and isinstance(inner.ref, L.Var)
+                and isinstance(lk.dict, L.Var)
+            ):
+                emit(
+                    P.Reduce(
+                        inner.ref.name,
+                        source=frame,
+                        fields=tuple(inner.value.fields),
+                        lookup_sym=lk.dict.name,
                         lookup_key=resolve(lk.keyexpr),
                         lookup_var=body.name,
-                        pred=pred,
                     )
                 )
                 return
             raise _Unsupported("lookup-let form")
-        if isinstance(body, L.RefAdd):
+        if isinstance(body, L.RefAdd) and isinstance(body.ref, L.Var):
             val = resolve(body.value)
             fields = (
-                val.fields if isinstance(val, L.RecordCtor) else ((("_0"), val),)
+                tuple(val.fields)
+                if isinstance(val, L.RecordCtor)
+                else (("_0", val),)
             )
-            prog.phases.append(
-                ScalarAggPhase(
-                    ref_sym=body.ref.name,  # type: ignore[union-attr]
-                    rel=rel,
-                    loopvar=lv,
-                    fields=tuple(fields),
-                    pred=pred,
-                )
-            )
+            emit(P.Reduce(body.ref.name, source=frame, fields=fields))
             return
         raise _Unsupported(f"loop body {type(body).__name__}")
 
-    stmt(e)
-    return prog
+    def dict_update(frame: str, upd, resolve: Callable[[L.Expr], L.Expr]) -> None:
+        if not isinstance(upd.dict, L.Var):
+            raise _Unsupported("update of non-let-bound dictionary")
+        sym = upd.dict.name
+        hinted = isinstance(upd, L.HintedUpdate)
+        key = resolve(upd.keyexpr)
+        val = resolve(upd.value)
+        lk = _find_lookup(val)
+        if lk is not None and isinstance(lk.dict, L.Var) and lk.dict.name in dict_ann:
+            emit(
+                P.GroupJoin(
+                    sym,
+                    source=frame,
+                    build=lk.dict.name,
+                    keyexpr=key,
+                    f_expr=_strip_lookup(val, lk),
+                    choice=choice_of(sym),
+                    hinted=hinted or isinstance(lk, L.HintedLookup),
+                )
+            )
+        elif isinstance(val, L.DictNew):  # partition/index build
+            emit(
+                P.HashBuild(
+                    sym, source=frame, keyexpr=key, choice=choice_of(sym), hinted=hinted
+                )
+            )
+        else:
+            emit(
+                P.GroupBy(
+                    sym,
+                    source=frame,
+                    keyexpr=key,
+                    values=_value_fields(val),
+                    choice=choice_of(sym),
+                    hinted=hinted,
+                )
+            )
+
+    def probe_loop(frame: str, nf: L.For, resolve) -> None:
+        src = nf.source
+        if (
+            not isinstance(src, (L.DictLookup, L.HintedLookup))
+            or not isinstance(src.dict, L.Var)
+            or src.dict.name not in dict_ann
+        ):
+            raise _Unsupported("nested loop form")
+        probe = fresh()
+        emit(
+            P.HashProbe(
+                probe,
+                source=frame,
+                build=src.dict.name,
+                keyexpr=resolve(src.keyexpr),
+                inner_var=nf.var,
+                hinted=isinstance(src, L.HintedLookup),
+            )
+        )
+        inner = nf.body
+        if isinstance(inner, L.If) and isinstance(inner.els, L.Noop):
+            sel = fresh()
+            emit(P.Select(sel, source=probe, pred=resolve(inner.cond)))
+            probe, inner = sel, inner.then
+        if isinstance(inner, (L.DictUpdate, L.HintedUpdate)) and isinstance(
+            inner.dict, L.Var
+        ):
+            osym = inner.dict.name
+            okey = resolve(inner.keyexpr)
+            oval = resolve(inner.value)
+            if isinstance(okey, L.RecordCtor):
+                # record-keyed join output: a relation downstream loops scan
+                emit(P.Project(osym, source=probe, fields=tuple(okey.fields)))
+            else:
+                emit(
+                    P.GroupBy(
+                        osym,
+                        source=probe,
+                        keyexpr=okey,
+                        values=_value_fields(oval),
+                        choice=choice_of(osym),
+                        hinted=isinstance(inner, L.HintedUpdate),
+                    )
+                )
+            return
+        raise _Unsupported("nested probe body")
+
+    stmt(expr)
+    choice_items = tuple((s, choice_of(s)) for s in dict_ann)
+    return P.Plan(tuple(nodes), result[0], choice_items)
+
+
+def _value_fields(val: L.Expr) -> Tuple[Tuple[str, L.Expr], ...]:
+    """Aggregate lanes of a dictionary value.  ``record * m`` (the Fig. 6c
+    ``aggfn(r) * r.val`` shape with a record aggregate) distributes the
+    multiplicity into each lane."""
+    if isinstance(val, L.RecordCtor):
+        return tuple(val.fields)
+    if isinstance(val, L.BinOp) and val.op == "*":
+        for rec, mult in ((val.lhs, val.rhs), (val.rhs, val.lhs)):
+            if isinstance(rec, L.RecordCtor):
+                return tuple(
+                    (a, L.BinOp("*", fx, mult)) for a, fx in rec.fields
+                )
+    return (("_0", val),)
 
 
 def _find_lookup(e: L.Expr):
@@ -318,7 +379,39 @@ def _strip_lookup(e: L.Expr, lk: L.Expr) -> L.Expr:
 
 
 # ---------------------------------------------------------------------------
-# execution of the analyzed program against tables
+# structural analysis view (compat shim over compile)
+# ---------------------------------------------------------------------------
+
+_OPERATOR_NODES = (P.HashBuild, P.GroupBy, P.GroupJoin, P.HashProbe, P.Reduce)
+
+
+@dataclass
+class Program:
+    """Flattened operator view of a compiled plan (historic ``analyze`` API:
+    ``phases`` are the operator nodes, Scans/Selects/Projects elided)."""
+
+    dict_syms: Dict[str, Optional[str]] = field(default_factory=dict)
+    ref_syms: Dict[str, L.Type] = field(default_factory=dict)
+    phases: List[object] = field(default_factory=list)
+    result: Optional[str] = None
+
+
+def analyze(e: L.Expr) -> Program:
+    plan = compile(e)
+    prog = Program()
+    for n in L.walk(e):
+        if isinstance(n, L.Let):
+            if isinstance(n.value, L.DictNew) and n.value.key is None:
+                prog.dict_syms[n.name] = n.value.ds
+            elif isinstance(n.value, L.RefNew):
+                prog.ref_syms[n.name] = n.value.type
+    prog.phases = [n for n in plan.nodes if isinstance(n, _OPERATOR_NODES)]
+    prog.result = plan.result
+    return prog
+
+
+# ---------------------------------------------------------------------------
+# execution entry point
 # ---------------------------------------------------------------------------
 
 
@@ -328,166 +421,18 @@ def execute(
     choices: Optional[GammaDict] = None,
     sigma: Optional[CardModel] = None,
 ):
-    """Lower and run.  Returns the program result: a ``DictResult`` for
-    dictionary-valued programs or a dict of scalars for Ref results.
-    Falls back to the interpreter on unrecognized structure."""
+    """Compile and run.  Returns the program result: a ``DictResult`` for
+    dictionary-valued programs, a ``Table`` for relation results, or a dict
+    of scalars for Ref results.  Falls back to the interpreter on
+    unrecognized structure."""
     from repro.exec import engine as E
 
-    choices = choices or {}
     try:
-        prog = analyze(expr)
+        plan = compile(expr, choices)
+        return E.execute_plan(plan, db, sigma=sigma)
     except _Unsupported as why:
         warnings.warn(f"LLQL lowering fell back to interpreter: {why}")
         return _interpret_fallback(expr, db)
-
-    def choice_of(sym: str) -> DictChoice:
-        if sym in choices:
-            return choices[sym]
-        ann = prog.dict_syms.get(sym)
-        return DictChoice(ann) if ann else DictChoice()
-
-    def cap_of(sym: str, keyexpr: L.Expr, loopvar: str, rel: str) -> int:
-        if sigma is not None:
-            cols = key_columns(keyexpr, loopvar)
-            d = sigma.dist(rel, cols) if cols else sigma.rel(rel).rows
-            return E.capacity_for(choice_of(sym).ds, int(d))
-        return E.capacity_for(choice_of(sym).ds, db[rel].nrows)
-
-    env: Dict[str, object] = {}
-    refs: Dict[str, jnp.ndarray] = {}
-    lanes_of: Dict[str, Tuple[str, ...]] = {}  # record-valued dict lane names
-
-    def sorted_on_key(rel: str, keyexpr: L.Expr, loopvar: str) -> bool:
-        t = db[rel]
-        cols = key_columns(keyexpr, loopvar)
-        return bool(cols) and t.sorted_on[: len(cols)] == tuple(cols)
-
-    for ph in prog.phases:
-        t = db[ph.rel]
-        if ph.pred is not None:
-            t = t.with_mask(compile_rowfn(ph.pred, ph.loopvar, t))
-        if isinstance(ph, BuildPhase):
-            ch = choice_of(ph.sym)
-            keys = compile_rowfn(ph.keyexpr, ph.loopvar, t).astype(jnp.int32)
-            srt = sorted_on_key(ph.rel, ph.keyexpr, ph.loopvar)
-            cap = cap_of(ph.sym, ph.keyexpr, ph.loopvar, ph.rel)
-            if isinstance(ph.valexpr, L.DictNew):  # partition/index build
-                env[ph.sym] = (
-                    E.build_index(
-                        ch.ds, keys, cap, valid=t.mask,
-                        assume_sorted=srt and (ch.hinted or ph.hinted),
-                    ),
-                    ph.rel,
-                )
-            else:
-                if isinstance(ph.valexpr, L.RecordCtor):
-                    lanes_of[ph.sym] = tuple(a for a, _ in ph.valexpr.fields)
-                    lanes = [
-                        jnp.broadcast_to(
-                            jnp.asarray(
-                                compile_rowfn(fx, ph.loopvar, t), jnp.float32
-                            ),
-                            (t.nrows,),
-                        )
-                        for _, fx in ph.valexpr.fields
-                    ]
-                    vals = jnp.stack(lanes, axis=1)
-                else:
-                    vals = compile_rowfn(ph.valexpr, ph.loopvar, t)
-                    vals = jnp.broadcast_to(
-                        jnp.asarray(vals, jnp.float32), (t.nrows,)
-                    )
-                env[ph.sym] = E.groupby(
-                    t, keys, vals, ch.ds, cap,
-                    assume_sorted=srt and (ch.hinted or ph.hinted),
-                )
-        elif isinstance(ph, GroupJoinPhase):
-            ch = choice_of(ph.out_sym)
-            bch = choice_of(ph.build_sym)
-            keys = compile_rowfn(ph.keyexpr, ph.loopvar, t).astype(jnp.int32)
-            srt = sorted_on_key(ph.rel, ph.keyexpr, ph.loopvar)
-            f_vals = compile_rowfn(ph.f_expr, ph.loopvar, t)
-            f_vals = jnp.broadcast_to(jnp.asarray(f_vals, jnp.float32), (t.nrows,))
-            build = env[ph.build_sym]
-            build = build[0] if isinstance(build, tuple) else build
-            cap = cap_of(ph.out_sym, ph.keyexpr, ph.loopvar, ph.rel)
-            env[ph.out_sym] = E.groupjoin(
-                t, keys, f_vals[:, None], build, ch.ds, cap,
-                sorted_probes=srt and (ph.hinted or bch.hinted),
-                assume_sorted=srt and ch.hinted,
-            )
-        elif isinstance(ph, ProbeJoinPhase):
-            bch = choice_of(ph.build_sym)
-            build, build_rel = env[ph.build_sym]
-            keys = compile_rowfn(ph.probe_key, ph.loopvar, t).astype(jnp.int32)
-            srt = sorted_on_key(ph.rel, ph.probe_key, ph.loopvar)
-            joined = E.fk_join(
-                t, keys, db[build_rel], build,
-                take=list(db[build_rel].names()),
-                sorted_probes=srt and (ph.hinted or bch.hinted),
-                prefix=f"{ph.inner_var}_",
-            )
-            env[ph.out_sym] = ("relation", joined, ph)
-        elif isinstance(ph, ScalarAggPhase):
-            cols = {}
-            if ph.lookup_sym is not None:
-                d = env[ph.lookup_sym]
-                d = d[0] if isinstance(d, tuple) else d
-                keys = compile_rowfn(ph.lookup_key, ph.loopvar, t).astype(jnp.int32)
-                srt = sorted_on_key(ph.rel, ph.lookup_key, ph.loopvar)
-                lch = choice_of(ph.lookup_sym)
-                vals, found = E.lookup_dict(
-                    d, keys, valid=t.mask, sorted_probes=srt and lch.hinted
-                )
-                t = t.with_mask(found)
-                # expose looked-up record fields as columns <var>.<field>
-                # field order: the groupby value arity order — callers use
-                # positional .get on the record; we map by position.
-                cols = {"__lookup__": vals}
-            total = {}
-            lk_lanes = lanes_of.get(ph.lookup_sym or "", ("m", "c", "c_c"))
-            for i, (fname, fexpr) in enumerate(ph.fields):
-                col = _compile_scalar_field(fexpr, ph, t, cols, lk_lanes)
-                total[fname] = E.scalar_aggregate(t, col)[0]
-            refs[ph.ref_sym] = total
-        else:  # pragma: no cover
-            raise AssertionError(ph)
-
-    if prog.result is None:
-        # program returns a ref (scalar aggregate record)
-        if len(refs) == 1:
-            return next(iter(refs.values()))
-        return refs
-    out = refs.get(prog.result, env.get(prog.result))
-    return out
-
-
-def _compile_scalar_field(
-    fexpr: L.Expr, ph: ScalarAggPhase, t: Table, cols, lane_names=("m", "c", "c_c")
-):
-    """Compile one field of a scalar-agg record; lookup-value field accesses
-    (``ra.m`` etc.) resolve into the looked-up value lanes by the lane names
-    recorded when the probed dictionary was built (Fig. 7b's Ragg record)."""
-    lanes: Dict[str, int] = {}
-    if ph.lookup_var is not None:
-        lanes = {nm: i for i, nm in enumerate(lane_names)}
-
-    def go(x: L.Expr):
-        if (
-            isinstance(x, L.FieldAccess)
-            and isinstance(x.rec, L.Var)
-            and x.rec.name == ph.lookup_var
-        ):
-            return cols["__lookup__"][:, lanes[x.name]]
-        if isinstance(x, L.BinOp):
-            return _BIN[x.op](go(x.lhs), go(x.rhs))
-        if isinstance(x, L.UnOp):
-            return -go(x.operand)
-        if isinstance(x, L.Const):
-            return x.value
-        return compile_rowfn(x, ph.loopvar, t)
-
-    return jnp.asarray(go(fexpr), jnp.float32)
 
 
 def _interpret_fallback(expr: L.Expr, db: Dict[str, Table]):

@@ -1,0 +1,255 @@
+"""Physical-plan IR — the bridge between synthesized LLQL and execution.
+
+DBFlex generates specialized C++ straight from the annotated LLQL program;
+here the same role is split in two: ``core.lower.compile`` turns the LLQL
+program into this small physical-plan IR, and an *executor* realizes the
+plan — single-shard (``repro.exec.engine.execute_plan``) or sharded under
+``shard_map`` (``repro.exec.distributed.execute_plan_sharded``).  The plan is
+the paper's "generated engine" made explicit as data: every dictionary-
+producing node carries the ``DictChoice`` the synthesizer made for it, so one
+plan object serves costing, single-core execution, and scale-out.
+
+Node vocabulary (DESIGN.md §3):
+
+* ``Scan``      — bind a loop variable over a base relation, a derived
+                  relation (a previous join/projection output), or the
+                  key/value pairs of a materialized dictionary (dict-scan);
+* ``Select``    — static-shape filter (mask, never compaction);
+* ``Project``   — materialize named columns from the current frame; the
+                  output is a *relation* downstream Scans can iterate;
+* ``HashBuild`` — key → row-index dictionary (join index) with its choice;
+* ``HashProbe`` — probe a built index, binding the inner loop variable to
+                  the gathered build-side row (FK join);
+* ``GroupBy``   — dictionary aggregate build (Fig. 6c/6d);
+* ``GroupJoin`` — Fig. 6e/6f compound probe+aggregate;
+* ``Reduce``    — scalar aggregation into a ref, with the optional
+                  interleaved lookup of Fig. 7b;
+* ``Exchange``  — cross-shard merge of a per-shard dictionary (shuffle by
+                  key hash, or all-reduce for dense low-cardinality
+                  aggregates).  Identity on a single shard.
+
+Expressions inside nodes are LLQL row expressions over the loop variables
+bound by the node chain (``Scan.var`` / ``HashProbe.inner_var``); executors
+compile them to columnar jnp values.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from . import llql as L
+from .cost import DictChoice, GammaDict
+
+
+@dataclass(frozen=True)
+class Node:
+    out: str  # symbol this node defines (frame, relation, dict, or ref)
+
+
+@dataclass(frozen=True)
+class Scan(Node):
+    source: str  # base relation, derived relation symbol, or dict symbol
+    var: str  # LLQL loop variable bound to the rows
+
+
+@dataclass(frozen=True)
+class Select(Node):
+    source: str
+    pred: L.Expr  # row predicate over the frame's bound variables
+
+
+@dataclass(frozen=True)
+class Project(Node):
+    source: str
+    fields: Tuple[Tuple[str, L.Expr], ...]  # name -> row expression
+
+
+@dataclass(frozen=True)
+class HashBuild(Node):
+    source: str
+    keyexpr: L.Expr
+    choice: DictChoice
+    hinted: bool = False  # program-level hinted insert (Fig. 6b/6d form)
+
+
+@dataclass(frozen=True)
+class GroupBy(Node):
+    source: str
+    keyexpr: L.Expr
+    values: Tuple[Tuple[str, L.Expr], ...]  # aggregate lanes
+    choice: DictChoice
+    hinted: bool = False
+
+
+@dataclass(frozen=True)
+class HashProbe(Node):
+    source: str
+    build: str  # HashBuild output symbol
+    keyexpr: L.Expr
+    inner_var: str  # variable bound to the matched build-side row
+    hinted: bool = False  # program-level hinted lookup (merge form)
+
+
+@dataclass(frozen=True)
+class GroupJoin(Node):
+    source: str
+    build: str  # GroupBy output symbol holding g-side partial aggregates
+    keyexpr: L.Expr
+    f_expr: L.Expr  # multiplicand over the probe side (lookup stripped)
+    choice: DictChoice
+    hinted: bool = False
+
+
+@dataclass(frozen=True)
+class Reduce(Node):
+    source: str
+    fields: Tuple[Tuple[str, L.Expr], ...]
+    lookup_sym: Optional[str] = None  # Fig. 7b interleaved lookup
+    lookup_key: Optional[L.Expr] = None
+    lookup_var: Optional[str] = None
+
+
+@dataclass(frozen=True)
+class Exchange(Node):
+    source: str  # per-shard dictionary symbol to merge
+    kind: str  # "shuffle" | "allreduce"
+    choice: DictChoice = field(default_factory=DictChoice)
+
+
+DICT_NODES = (HashBuild, GroupBy, GroupJoin)
+
+
+@dataclass(frozen=True)
+class Plan:
+    nodes: Tuple[Node, ...]
+    result: Optional[str]  # symbol of the program result (None: ref record)
+    choices: Tuple[Tuple[str, DictChoice], ...] = ()
+
+    def choice_map(self) -> GammaDict:
+        return dict(self.choices)
+
+    def node_defining(self, sym: str) -> Optional[Node]:
+        for n in self.nodes:
+            if n.out == sym:
+                return n
+        return None
+
+    def dict_nodes(self) -> Iterator[Node]:
+        for n in self.nodes:
+            if isinstance(n, DICT_NODES):
+                yield n
+
+    def describe(self) -> str:
+        """Stable one-line-per-node rendering (golden tests, explain)."""
+        lines = []
+        for n in self.nodes:
+            if isinstance(n, Scan):
+                lines.append(f"Scan {n.out} <- {n.source} as {n.var}")
+            elif isinstance(n, Select):
+                lines.append(f"Select {n.out} <- {n.source}")
+            elif isinstance(n, Project):
+                cols = ",".join(a for a, _ in n.fields)
+                lines.append(f"Project {n.out} <- {n.source} [{cols}]")
+            elif isinstance(n, HashBuild):
+                lines.append(f"HashBuild {n.out} <- {n.source} [{n.choice}]")
+            elif isinstance(n, GroupBy):
+                lanes = ",".join(a for a, _ in n.values)
+                lines.append(
+                    f"GroupBy {n.out} <- {n.source} [{n.choice}] lanes={lanes}"
+                )
+            elif isinstance(n, HashProbe):
+                lines.append(
+                    f"HashProbe {n.out} <- {n.source} ⋈ {n.build} as {n.inner_var}"
+                )
+            elif isinstance(n, GroupJoin):
+                lines.append(f"GroupJoin {n.out} <- {n.source} ⋈ {n.build} [{n.choice}]")
+            elif isinstance(n, Reduce):
+                lanes = ",".join(a for a, _ in n.fields)
+                lk = f" lookup={n.lookup_sym}" if n.lookup_sym else ""
+                lines.append(f"Reduce {n.out} <- {n.source} lanes={lanes}{lk}")
+            elif isinstance(n, Exchange):
+                lines.append(f"Exchange {n.out} <- {n.source} ({n.kind})")
+            else:  # pragma: no cover
+                lines.append(repr(n))
+        lines.append(f"Result {self.result}")
+        return "\n".join(lines)
+
+
+class PlanShardError(Exception):
+    """The plan cannot be realized under the sharded executor."""
+
+
+def shard(plan: Plan, sharded_rels: Tuple[str, ...]) -> Tuple[Plan, Dict[str, bool]]:
+    """Rewrite a single-shard plan for sharded execution: every dictionary
+    built from a *sharded* source becomes a per-shard dictionary followed by
+    an ``Exchange`` that merges the partial dictionaries by key-hash routing
+    (DESIGN.md §4).  Dictionaries built from replicated sources are identical
+    on every shard and need no exchange.
+
+    Returns (plan', taint) where ``taint[sym]`` says whether the symbol's data
+    is shard-local.  Raises :class:`PlanShardError` for plans where a sharded
+    dictionary is probed downstream (would need co-partitioned probes — not
+    realized yet) or a Project output from sharded data is re-scanned (fine)
+    — only the probe case is rejected.
+    """
+    taint: Dict[str, bool] = {}
+    out_nodes: List[Node] = []
+
+    def src_taint(sym: str) -> bool:
+        return taint.get(sym, False)
+
+    for n in plan.nodes:
+        if isinstance(n, Scan):
+            taint[n.out] = n.source in sharded_rels or src_taint(n.source)
+            out_nodes.append(n)
+        elif isinstance(n, (Select, Project)):
+            taint[n.out] = src_taint(n.source)
+            out_nodes.append(n)
+        elif isinstance(n, HashBuild):
+            if src_taint(n.source):
+                raise PlanShardError(
+                    f"index {n.out} is built from sharded data; probes would "
+                    "need co-partitioning (unsupported)"
+                )
+            taint[n.out] = False
+            out_nodes.append(n)
+        elif isinstance(n, HashProbe):
+            if src_taint(n.build):
+                raise PlanShardError(f"probe of sharded dictionary {n.build}")
+            taint[n.out] = src_taint(n.source)
+            out_nodes.append(n)
+        elif isinstance(n, (GroupBy, GroupJoin)):
+            if isinstance(n, GroupJoin) and src_taint(n.build):
+                raise PlanShardError(f"groupjoin against sharded dictionary {n.build}")
+            if src_taint(n.source):
+                # per-shard partial dictionary + shuffle exchange
+                local = _rename(n, n.out + "#local")
+                out_nodes.append(local)
+                out_nodes.append(
+                    Exchange(n.out, source=local.out, kind="shuffle", choice=n.choice)
+                )
+                taint[local.out] = True
+                taint[n.out] = True  # result slices live per shard (disjoint keys)
+            else:
+                out_nodes.append(n)
+                taint[n.out] = False
+        elif isinstance(n, Reduce):
+            if n.lookup_sym is not None and src_taint(n.lookup_sym):
+                raise PlanShardError(f"reduce lookup of sharded dictionary {n.lookup_sym}")
+            out_nodes.append(n)
+            if src_taint(n.source):
+                out_nodes.append(Exchange(n.out + "#sum", source=n.out, kind="allreduce"))
+            taint[n.out] = False  # all-reduced: replicated scalar
+        elif isinstance(n, Exchange):
+            out_nodes.append(n)
+            taint[n.out] = True
+        else:  # pragma: no cover
+            raise PlanShardError(f"unknown node {type(n).__name__}")
+
+    return Plan(tuple(out_nodes), plan.result, plan.choices), taint
+
+
+def _rename(n: Node, new_out: str) -> Node:
+    import dataclasses
+
+    return dataclasses.replace(n, out=new_out)

@@ -126,7 +126,13 @@ def synthesize(
     sigma: CardModel,
     delta: DictCostModel,
     candidates: Sequence[str] = DEFAULT_CANDIDATES,
+    net=None,
+    sharded_rels: Optional[Tuple[str, ...]] = None,
 ) -> SynthesisResult:
+    """Greedy Algorithm 1.  Pass ``net`` (a :class:`repro.core.cost.NetCostModel`)
+    to cost the *distributed* realization — each candidate then also pays the
+    Exchange the sharded executor would insert for its dictionary, so choices
+    account for shuffle volume, not just local op costs."""
     order = dependency_order(expr)
     gamma: GammaDict = {}
     evaluated = 0
@@ -137,7 +143,9 @@ def synthesize(
         for choice in _candidates_for(sym, expr, candidates):
             trial = dict(gamma)
             trial[sym] = choice
-            res = infer_cost(expr, sigma, delta, trial)
+            res = infer_cost(
+                expr, sigma, delta, trial, net=net, sharded_rels=sharded_rels
+            )
             evaluated += 1
             if res.total < best_cost:
                 best_cost = res.total
@@ -145,7 +153,7 @@ def synthesize(
         assert best is not None
         gamma[sym] = best
         log.append(f"{sym}: {best} ({best_cost*1e3:.3f} ms)")
-    final = infer_cost(expr, sigma, delta, gamma)
+    final = infer_cost(expr, sigma, delta, gamma, net=net, sharded_rels=sharded_rels)
     return SynthesisResult(choices=gamma, cost=final, evaluated=evaluated, log=log)
 
 
@@ -154,6 +162,8 @@ def synthesize_exhaustive(
     sigma: CardModel,
     delta: DictCostModel,
     candidates: Sequence[str] = DEFAULT_CANDIDATES,
+    net=None,
+    sharded_rels: Optional[Tuple[str, ...]] = None,
 ) -> SynthesisResult:
     """Exact search over the full cross product — exponential; tests only."""
     syms = L.dict_symbols(expr)
@@ -163,7 +173,9 @@ def synthesize_exhaustive(
     evaluated = 0
     for combo in itertools.product(*per_sym):
         gamma = dict(zip(syms, combo))
-        res = infer_cost(expr, sigma, delta, gamma)
+        res = infer_cost(
+            expr, sigma, delta, gamma, net=net, sharded_rels=sharded_rels
+        )
         evaluated += 1
         if best_res is None or res.total < best_res.total:
             best_res, best = res, gamma

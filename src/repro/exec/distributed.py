@@ -23,6 +23,7 @@ lowers the combined-axis all_to_all to the hierarchical schedule).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional, Sequence, Tuple, Union
 
@@ -31,6 +32,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.dicts import base as dbase
 from repro.dicts import registry
 
@@ -39,10 +41,10 @@ Axis = Union[str, Tuple[str, ...]]
 
 def _axis_size(axis: Axis) -> jax.Array:
     if isinstance(axis, str):
-        return lax.axis_size(axis)
+        return compat.axis_size(axis)
     n = 1
     for a in axis:
-        n = n * lax.axis_size(a)
+        n = n * compat.axis_size(a)
     return n
 
 
@@ -132,12 +134,11 @@ def dist_groupby(
         final_capacity=final_capacity,
         assume_sorted=assume_sorted,
     )
-    return jax.shard_map(
+    return compat.shard_map(
         fn,
         mesh=mesh,
         in_specs=(spec_in, spec_val),
         out_specs=(P(axis), P(axis, None), P(axis)),
-        check_vma=False,  # dict builds start from shard-invariant empties
     )(keys, vals)
 
 
@@ -195,13 +196,168 @@ def dist_fk_join(
     fn = functools.partial(
         dist_fk_join_shard, axis=axis, ds=ds, capacity=capacity
     )
-    return jax.shard_map(
+    return compat.shard_map(
         fn,
         mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis, None)),
         out_specs=(P(axis, None), P(axis)),
-        check_vma=False,  # dict builds start from shard-invariant empties
     )(probe_keys, build_keys, build_payload)
+
+
+# ---------------------------------------------------------------------------
+# physical-plan execution under shard_map
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ShardedDictResult:
+    """Global view of a shuffled result dictionary: each shard's slice holds
+    its hash-owned keys, concatenated over shards (keys globally unique)."""
+
+    ds: str
+    keys: jax.Array  # [n_sh * C]
+    vals: jax.Array  # [n_sh * C, V]
+    valid: jax.Array  # [n_sh * C] bool
+
+    def arrays(self):
+        return self.keys, self.vals, self.valid
+
+    def items_np(self):
+        import numpy as np
+
+        ks, vs, valid = map(np.asarray, (self.keys, self.vals, self.valid))
+        return {int(k): vs[i] for i, k in enumerate(ks) if valid[i]}
+
+    def size(self) -> int:
+        import numpy as np
+
+        return int(np.asarray(self.valid).sum())
+
+
+def _plan_exchange(node, built, *, axis: Axis):
+    """Realize an Exchange node: route the per-shard partial dictionary's
+    entries to their hash-owner shard (all-to-all) and merge with one local
+    build — the per-shard-dictionary + Exchange pair of DESIGN.md §4.
+    ``allreduce`` exchanges (scalar Reduce results) are a psum."""
+    from repro.exec import engine as E
+
+    if node.kind == "allreduce":
+        return jax.tree.map(lambda v: lax.psum(v, axis), built)
+
+    mod = registry.get(built.res.ds)
+    ks, vs, valid = built.res.arrays()
+    lk = jnp.where(valid, ks, dbase.PAD)
+    n_sh = _axis_size(axis)
+    buf_k, buf_v, *_ = _route(lk, n_sh, vs)
+    rk = _a2a(buf_k, axis).reshape(-1)
+    rv = _a2a(buf_v, axis).reshape(-1, vs.shape[-1])
+    # merge capacity must cover the worst hash skew: one shard can own up to
+    # every routed entry (n_sh × the per-shard capacity), so size for it —
+    # this is the same total footprint a single-shard build of the global
+    # input would use, just concentrated on the owning shard
+    merge_cap = dbase.next_pow2(int(n_sh) * ks.shape[0])
+    t2 = mod.build(rk, rv, merge_cap, valid=rk != dbase.PAD)
+    res = E.DictResult(built.res.ds, t2)
+    return E.BuiltDict(res, built.choice, lanes=built.lanes, kind=built.kind)
+
+
+def execute_plan_sharded(
+    plan,
+    db,
+    mesh: jax.sharding.Mesh,
+    axis: Axis,
+    shard_rels: Tuple[str, ...] = ("lineitem",),
+):
+    """Execute a compiled physical plan (``repro.core.plan``) with
+    ``shard_rels`` row-sharded over ``axis`` and every other relation
+    replicated.  ``plan.shard`` rewrites dictionary builds over sharded data
+    into per-shard builds + Exchange; this function realizes that rewrite
+    under ``shard_map`` and returns the merged result dictionary.
+
+    The *same* plan object the single-shard executor runs is accepted here —
+    the distributed realization is a property of the executor, not the plan.
+    Sorted-input/merge fast paths are disabled per shard (a shard holds a
+    contiguous slice, but hinted kernels are tuned for the single-shard
+    layout; correctness first).
+    """
+    from jax.sharding import PartitionSpec as PSpec
+
+    from repro.core import plan as cplan
+    from repro.data.table import Table
+    from repro.exec import engine as E
+
+    splan, _taint = cplan.shard(plan, tuple(shard_rels))
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+    n_sh = 1
+    for a in axes:
+        n_sh *= mesh.shape[a]
+
+    cols_in, masks_in, col_specs, mask_specs, sorted_meta = {}, {}, {}, {}, {}
+    for rel, t in db.items():
+        mask = t.live_mask()
+        cols = dict(t.columns)
+        if rel in shard_rels:
+            pad = (-t.nrows) % n_sh
+            if pad:
+                cols = {
+                    c: jnp.concatenate([v, jnp.zeros((pad,), v.dtype)])
+                    for c, v in cols.items()
+                }
+                mask = jnp.concatenate([mask, jnp.zeros((pad,), bool)])
+            spec = PSpec(axis)
+        else:
+            spec = PSpec()
+        cols_in[rel] = cols
+        masks_in[rel] = mask
+        col_specs[rel] = {c: spec for c in cols}
+        mask_specs[rel] = spec
+        sorted_meta[rel] = t.sorted_on
+
+    def run_local(cols, masks):
+        local_db = {}
+        for rel in cols:
+            n = next(iter(cols[rel].values())).shape[0]
+            local_db[rel] = Table(
+                cols[rel], n, mask=masks[rel], sorted_on=sorted_meta[rel]
+            )
+        return E.execute_plan(
+            splan,
+            local_db,
+            sigma=None,
+            exchange_impl=functools.partial(_plan_exchange, axis=axis),
+            allow_sorted=False,
+        )
+
+    result_node = (
+        plan.node_defining(plan.result) if plan.result is not None else None
+    )
+    if result_node is None or isinstance(result_node, cplan.Reduce):
+        # scalar ref-record result: per-shard partials were already psum-ed
+        # by the allreduce Exchange, so every shard holds the global answer
+        def body_scalar(cols, masks):
+            return run_local(cols, masks)
+
+        return compat.shard_map(
+            body_scalar,
+            mesh=mesh,
+            in_specs=(col_specs, mask_specs),
+            out_specs=PSpec(),
+        )(cols_in, masks_in)
+
+    def body(cols, masks):
+        ks, vs, valid = run_local(cols, masks).arrays()
+        return ks, vs, valid.astype(jnp.int32)
+
+    ks, vs, valid = compat.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(col_specs, mask_specs),
+        out_specs=(PSpec(axis), PSpec(axis, None), PSpec(axis)),
+    )(cols_in, masks_in)
+    ds = getattr(result_node, "choice", None)
+    return ShardedDictResult(
+        ds.ds if ds is not None else "ht_linear", ks, vs, valid.astype(bool)
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -220,6 +220,338 @@ def groupjoin(
 
 
 # ---------------------------------------------------------------------------
+# physical-plan executor (single shard)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Frame:
+    """Aligned row bindings of a plan pipeline: every bound loop variable maps
+    to a table with the same static row count and (conceptually) the same
+    mask — Select/probe masks are applied to all members."""
+
+    tables: Dict[str, "Table"]
+    order: Tuple[str, ...]
+    rels: Dict[str, Optional[str]]  # var -> base relation name (None: derived)
+
+    @property
+    def primary(self) -> "Table":
+        return self.tables[self.order[0]]
+
+    def with_mask(self, m: jax.Array) -> "Frame":
+        return Frame(
+            {v: t.with_mask(m) for v, t in self.tables.items()},
+            self.order,
+            self.rels,
+        )
+
+
+@dataclass
+class BuiltDict:
+    """A dictionary materialized by a plan node, plus what probes need:
+    value-lane names (Reduce field resolution) and, for join indices, the
+    source table the stored row-ids point into."""
+
+    res: DictResult
+    choice: object  # DictChoice
+    lanes: Tuple[str, ...] = ()
+    kind: str = "agg"  # "agg" | "index"
+    src: Optional["Table"] = None  # index only: gather target
+
+
+def _dict_scan_table(d: BuiltDict) -> "Table":
+    from repro.core.lower import DICT_KEY, DICT_VAL
+
+    ks, vs, valid = d.res.arrays()
+    cols = {DICT_KEY: ks}
+    for i in range(vs.shape[1]):
+        cols[DICT_VAL if i == 0 else f"{DICT_VAL}{i}"] = vs[:, i]
+    sorted_on = (DICT_KEY,) if d.res.ds.startswith("st") else ()
+    return Table(cols, ks.shape[0], mask=valid.astype(bool), sorted_on=sorted_on)
+
+
+def _key_info(frame: Frame, keyexpr) -> Tuple[Optional[str], Tuple[str, ...], bool]:
+    """(base relation, key columns, probe/build sequence sorted?) for a key
+    expression over the frame."""
+    from repro.core.cardinality import key_columns
+    from repro.core.lower import DICT_KEY
+
+    for var in frame.order:
+        cols = key_columns(keyexpr, var)
+        if not cols:
+            continue
+        t = frame.tables[var]
+        if "*" in cols:
+            if DICT_KEY in t.columns:  # whole-key of a dict scan
+                cols = (DICT_KEY,)
+            else:
+                return frame.rels.get(var), cols, False
+        srt = bool(cols) and t.sorted_on[: len(cols)] == tuple(cols)
+        return frame.rels.get(var), cols, srt
+    return None, (), False
+
+
+def _capacity(frame: Frame, keyexpr, ds: str, sigma) -> int:
+    rel, cols, _ = _key_info(frame, keyexpr)
+    if sigma is not None and rel is not None and cols and "*" not in cols:
+        try:
+            return capacity_for(ds, int(sigma.dist(rel, cols)))
+        except KeyError:
+            pass
+    return capacity_for(ds, frame.primary.nrows)
+
+
+def execute_plan(
+    plan,
+    db: Dict[str, "Table"],
+    sigma=None,
+    exchange_impl=None,
+    allow_sorted: bool = True,
+):
+    """Run a physical plan (``repro.core.plan``) against a database.
+
+    ``exchange_impl`` realizes Exchange nodes (the sharded executor passes the
+    all-to-all merge); on a single shard Exchange is the identity.
+    ``allow_sorted=False`` disables the sorted-input/merge fast paths —
+    the sharded executor uses it because hinted kernels assume a global sort
+    the shards no longer have.
+    """
+    from repro.core import plan as P
+    from repro.core.lower import compile_rowfn_frame
+
+    env: Dict[str, object] = {}
+    refs: Dict[str, object] = {}
+
+    def frame_of(sym: str) -> Frame:
+        v = env[sym]
+        assert isinstance(v, Frame), f"{sym} is not a row frame"
+        return v
+
+    for node in plan.nodes:
+        if isinstance(node, P.Scan):
+            if node.source in env:
+                src = env[node.source]
+                if isinstance(src, BuiltDict):
+                    t, rel = _dict_scan_table(src), None
+                elif isinstance(src, Table):
+                    t, rel = src, None
+                else:
+                    raise TypeError(f"cannot scan {node.source}")
+            else:
+                t, rel = db[node.source], node.source
+            env[node.out] = Frame({node.var: t}, (node.var,), {node.var: rel})
+
+        elif isinstance(node, P.Select):
+            f = frame_of(node.source)
+            m = compile_rowfn_frame(node.pred, f.tables)
+            env[node.out] = f.with_mask(jnp.asarray(m, bool))
+
+        elif isinstance(node, P.Project):
+            from repro.core import llql as L
+
+            f = frame_of(node.source)
+            n = f.primary.nrows
+            cols = {}
+            sorted_on: Tuple[str, ...] = ()
+            for name, fx in node.fields:
+                col = jnp.asarray(compile_rowfn_frame(fx, f.tables))
+                cols[name] = jnp.broadcast_to(col, (n,))
+                # physical row order is the probe side's: an identity copy of
+                # a sort-leading column keeps its orderedness
+                if (
+                    not sorted_on
+                    and isinstance(fx, L.FieldAccess)
+                    and isinstance(fx.rec, L.FieldAccess)
+                    and fx.rec.name == "key"
+                    and isinstance(fx.rec.rec, L.Var)
+                    and fx.rec.rec.name in f.tables
+                    and f.tables[fx.rec.rec.name].sorted_on[:1] == (fx.name,)
+                ):
+                    sorted_on = (name,)
+            env[node.out] = Table(cols, n, mask=f.primary.mask, sorted_on=sorted_on)
+
+        elif isinstance(node, P.HashBuild):
+            f = frame_of(node.source)
+            keys = jnp.asarray(
+                compile_rowfn_frame(node.keyexpr, f.tables), jnp.int32
+            )
+            _, _, srt = _key_info(f, node.keyexpr)
+            srt = srt and allow_sorted
+            cap = _capacity(f, node.keyexpr, node.choice.ds, sigma)
+            d = build_index(
+                node.choice.ds,
+                keys,
+                cap,
+                valid=f.primary.mask,
+                assume_sorted=srt and (node.choice.hinted or node.hinted),
+            )
+            env[node.out] = BuiltDict(d, node.choice, kind="index", src=f.primary)
+
+        elif isinstance(node, P.HashProbe):
+            f = frame_of(node.source)
+            b = env[node.build]
+            assert isinstance(b, BuiltDict) and b.kind == "index", node.build
+            keys = jnp.asarray(
+                compile_rowfn_frame(node.keyexpr, f.tables), jnp.int32
+            )
+            _, _, srt = _key_info(f, node.keyexpr)
+            srt = srt and allow_sorted
+            vals, found = lookup_dict(
+                b.res,
+                keys,
+                valid=f.primary.mask,
+                sorted_probes=srt and (node.hinted or b.choice.hinted),
+            )
+            ridx = jnp.where(found, vals[:, 0].astype(jnp.int32), 0)
+            src_t = b.src
+            gcols = {
+                c: jnp.where(
+                    found, src_t.col(c)[ridx], jnp.zeros((), src_t.col(c).dtype)
+                )
+                for c in src_t.names()
+            }
+            gathered = Table(gcols, f.primary.nrows, mask=found)
+            masked = f.with_mask(found)
+            env[node.out] = Frame(
+                {**masked.tables, node.inner_var: gathered},
+                masked.order + (node.inner_var,),
+                {**masked.rels, node.inner_var: None},
+            )
+
+        elif isinstance(node, P.GroupBy):
+            f = frame_of(node.source)
+            n = f.primary.nrows
+            keys = jnp.asarray(
+                compile_rowfn_frame(node.keyexpr, f.tables), jnp.int32
+            )
+            _, _, srt = _key_info(f, node.keyexpr)
+            srt = srt and allow_sorted
+            lanes = [
+                jnp.broadcast_to(
+                    jnp.asarray(compile_rowfn_frame(fx, f.tables), jnp.float32),
+                    (n,),
+                )
+                for _, fx in node.values
+            ]
+            vals = jnp.stack(lanes, axis=1)
+            cap = _capacity(f, node.keyexpr, node.choice.ds, sigma)
+            d = groupby(
+                f.primary,
+                keys,
+                vals,
+                node.choice.ds,
+                cap,
+                assume_sorted=srt and (node.choice.hinted or node.hinted),
+            )
+            env[node.out] = BuiltDict(
+                d, node.choice, lanes=tuple(a for a, _ in node.values)
+            )
+
+        elif isinstance(node, P.GroupJoin):
+            f = frame_of(node.source)
+            b = env[node.build]
+            assert isinstance(b, BuiltDict), node.build
+            n = f.primary.nrows
+            keys = jnp.asarray(
+                compile_rowfn_frame(node.keyexpr, f.tables), jnp.int32
+            )
+            _, _, srt = _key_info(f, node.keyexpr)
+            srt = srt and allow_sorted
+            f_vals = jnp.broadcast_to(
+                jnp.asarray(compile_rowfn_frame(node.f_expr, f.tables), jnp.float32),
+                (n,),
+            )
+            cap = _capacity(f, node.keyexpr, node.choice.ds, sigma)
+            d = groupjoin(
+                f.primary,
+                keys,
+                f_vals[:, None],
+                b.res,
+                node.choice.ds,
+                cap,
+                sorted_probes=srt and (node.hinted or b.choice.hinted),
+                assume_sorted=srt and node.choice.hinted,
+            )
+            env[node.out] = BuiltDict(d, node.choice, lanes=("_0",))
+
+        elif isinstance(node, P.Reduce):
+            f = frame_of(node.source)
+            lanes: Tuple[str, ...] = ("m", "c", "c_c")
+            lookup_vals = None
+            if node.lookup_sym is not None:
+                b = env[node.lookup_sym]
+                assert isinstance(b, BuiltDict), node.lookup_sym
+                lanes = b.lanes or lanes
+                keys = jnp.asarray(
+                    compile_rowfn_frame(node.lookup_key, f.tables), jnp.int32
+                )
+                _, _, srt = _key_info(f, node.lookup_key)
+                srt = srt and allow_sorted
+                lookup_vals, found = lookup_dict(
+                    b.res,
+                    keys,
+                    valid=f.primary.mask,
+                    sorted_probes=srt and b.choice.hinted,
+                )
+                f = f.with_mask(found)
+            total = {}
+            for name, fx in node.fields:
+                col = _reduce_field(fx, f, node.lookup_var, lookup_vals, lanes)
+                total[name] = scalar_aggregate(f.primary, col)[0]
+            refs[node.out] = total
+
+        elif isinstance(node, P.Exchange):
+            if exchange_impl is not None:
+                if node.kind == "shuffle":
+                    env[node.out] = exchange_impl(node, env[node.source])
+                else:  # allreduce over a scalar ref record
+                    refs[node.source] = exchange_impl(node, refs[node.source])
+            else:  # single shard: identity
+                if node.source in env:
+                    env[node.out] = env[node.source]
+
+        else:  # pragma: no cover
+            raise AssertionError(node)
+
+    if plan.result is None:
+        if len(refs) == 1:
+            return next(iter(refs.values()))
+        return refs
+    if plan.result in refs:
+        return refs[plan.result]
+    out = env.get(plan.result)
+    if isinstance(out, BuiltDict):
+        return out.res
+    return out
+
+
+def _reduce_field(fx, frame: Frame, lookup_var, lookup_vals, lane_names):
+    """One field of a scalar-agg record; lookup-value accesses (``ra.m``)
+    resolve into the looked-up value lanes by name (Fig. 7b's Ragg record)."""
+    from repro.core import llql as L
+    from repro.core.lower import _BIN, _UN, compile_rowfn_frame
+
+    lanes = {nm: i for i, nm in enumerate(lane_names)}
+
+    def go(x):
+        if (
+            isinstance(x, L.FieldAccess)
+            and isinstance(x.rec, L.Var)
+            and x.rec.name == lookup_var
+        ):
+            return lookup_vals[:, lanes[x.name]]
+        if isinstance(x, L.BinOp):
+            return _BIN[x.op](go(x.lhs), go(x.rhs))
+        if isinstance(x, L.UnOp):
+            return _UN[x.op](go(x.operand))
+        if isinstance(x, L.Const):
+            return x.value
+        return compile_rowfn_frame(x, frame.tables)
+
+    return jnp.asarray(go(fx), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
 # sort-based aggregation via the segment_reduce kernel (direct form)
 # ---------------------------------------------------------------------------
 

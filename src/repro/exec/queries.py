@@ -2,27 +2,44 @@
 
 Each query exposes:
 
-* ``llql()``   — the LLQL program (with open ``@ds`` annotations) used for
-  cost inference and synthesis — this is what the paper's optimizer sees;
-* ``run(db, choices)`` — the lowered physical plan, parameterized by the
-  synthesized per-dictionary choices (``{"symbol": DictChoice(...)}``);
+* ``llql()``   — the **complete** LLQL program (open ``@ds`` annotations).
+  This is the single source of truth: cost inference and synthesis read it,
+  and ``run`` is *derived* from it — there is no hand-written physical plan
+  anywhere (the pre-plan-IR engine kept a parallel ``run()`` per query);
+* ``run(db, choices)`` — ``lower.compile(llql(), choices)`` → physical plan
+  → ``engine.execute_plan``;
 * ``reference(db)`` — a numpy oracle for correctness tests.
 
 The queries are structurally faithful simplifications (same joins, same
 group-bys, same selectivity knobs); text/date predicates act on the encoded
-columns of the synthetic generator (``repro.data.tpch``).
+columns of the synthetic generator (``repro.data.tpch``).  Multi-hop queries
+(Q5/Q9) are expressed as chains of partitioned joins whose record-keyed
+outputs are the intermediate relations — exactly the shape the plan compiler
+turns into HashBuild/HashProbe/Project pipelines.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Tuple
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import llql as L
 from repro.core import operators as O
 from repro.core.cost import DictChoice, GammaDict
+from repro.core.llql import (
+    Const,
+    DictLookup,
+    DictNew,
+    DictUpdate,
+    For,
+    If,
+    Input,
+    RecordCtor,
+    Var,
+    let,
+    seq,
+)
 from repro.data.table import Table, collect_stats
 from . import engine as E
 
@@ -30,9 +47,41 @@ from . import engine as E
 def _c(x: float) -> L.Const:
     return L.Const(x, L.DOUBLE)
 
+def _i(x: int) -> L.Const:
+    return L.Const(x, L.INT)
 
-def _ch(choices: GammaDict, sym: str) -> DictChoice:
-    return choices.get(sym, DictChoice())
+
+def _rec(**fields: L.Expr) -> RecordCtor:
+    return RecordCtor(tuple(fields.items()))
+
+
+# Σ statistics cache: run() compiles capacities from per-relation distinct
+# counts; the stats are data-derived and immutable per db dict, so cache by
+# identity (benchmarks call run() in a timing loop).  Entries hold a strong
+# reference to the db and re-verify identity on hit — a bare id() key could
+# alias a recycled address after the original dict is collected.
+_STATS_CACHE: Dict[int, Tuple[Dict[str, Table], object]] = {}
+
+
+def _stats_for(db: Dict[str, Table]):
+    key = id(db)
+    hit = _STATS_CACHE.get(key)
+    if hit is None or hit[0] is not db:
+        if len(_STATS_CACHE) > 8:  # benchmarks generate a handful of dbs
+            _STATS_CACHE.pop(next(iter(_STATS_CACHE)))
+        _STATS_CACHE[key] = (db, collect_stats(db))
+    return _STATS_CACHE[key][1]
+
+
+def _run_llql(prog: L.Expr, db: Dict[str, Table], choices: GammaDict):
+    """The derived physical plan: compile the LLQL under the synthesized
+    choices and execute — the paper's generate-then-run, with the plan IR in
+    the middle."""
+    from repro.core.lower import compile as compile_plan
+
+    plan = compile_plan(prog, choices)
+    out = E.execute_plan(plan, db, sigma=_stats_for(db))
+    return out.items_np()
 
 
 @dataclass
@@ -50,7 +99,7 @@ class Query:
 
 def q1_llql(date: float = 0.9) -> L.Expr:
     r = L.Var("r")
-    key = r.key.get("returnflag") * L.Const(2, L.INT) + r.key.get("linestatus")
+    key = r.key.get("returnflag") * _i(2) + r.key.get("linestatus")
     val = L.record(
         qty=r.key.get("quantity"),
         price=r.key.get("extendedprice"),
@@ -69,20 +118,8 @@ def q1_llql(date: float = 0.9) -> L.Expr:
     )
 
 
-def q1_run(db, choices, date: float = 0.9):
-    li = db["lineitem"]
-    mask = li.col("shipdate") <= date
-    t = li.with_mask(mask)
-    keys = li.col("returnflag") * 2 + li.col("linestatus")
-    one = jnp.ones((li.nrows,), jnp.float32)
-    ep, dc, tx = li.col("extendedprice"), li.col("discount"), li.col("tax")
-    vals = jnp.stack(
-        [li.col("quantity"), ep, ep * (1 - dc), ep * (1 - dc) * (1 + tx), one],
-        axis=1,
-    )
-    ch = _ch(choices, "Agg")
-    g = E.groupby(t, keys, vals, ch.ds, 256, assume_sorted=False)
-    return g.items_np()
+def q1_run(db, choices):
+    return _run_llql(q1_llql(), db, choices)
 
 
 def q1_reference(db, date: float = 0.9):
@@ -128,26 +165,8 @@ def q3_llql(date: float = 0.05) -> L.Expr:
     )
 
 
-def q3_run(db, choices, date: float = 0.05):
-    li, od = db["lineitem"], db["orders"]
-    odf = od.with_mask(od.col("orderdate") < date)
-    bch, ach = _ch(choices, "OD"), _ch(choices, "Agg")
-    cap = E.capacity_for(bch.ds, od.nrows)
-    sd = E.groupby(
-        odf, odf.col("orderkey"), jnp.ones((od.nrows,), jnp.float32), bch.ds, cap
-    )
-    vals = li.col("extendedprice") * (1.0 - li.col("discount"))
-    li_sorted = li.sorted_on[:1] == ("orderkey",)
-    return E.groupjoin(
-        li,
-        li.col("orderkey"),
-        vals[:, None],
-        sd,
-        ach.ds,
-        E.capacity_for(ach.ds, od.nrows),
-        sorted_probes=li_sorted and bch.hinted,
-        assume_sorted=li_sorted and ach.hinted,
-    ).items_np()
+def q3_run(db, choices):
+    return _run_llql(q3_llql(), db, choices)
 
 
 def q3_reference(db, date: float = 0.05):
@@ -169,57 +188,109 @@ def q3_reference(db, date: float = 0.05):
 
 
 def q5_llql(region: int = 0) -> L.Expr:
-    """For synthesis: the two dominant dictionaries (customer-nation index CN,
-    supplier index SN) + the order index OD + final aggregate per nation."""
-    # Expressed as a chain of partitioned joins + group-by; synthesis sees
-    # every dictionary with its cardinalities.
-    cust = O.partitioned_join(
-        "orders",
-        "customer",
-        part_r=lambda r: r.key.get("custkey"),
-        part_s=lambda s: s.key.get("custkey"),
-        out_key=lambda r, s: r.key.get("orderkey"),
-        build="CN",
-        out="OC",
-        pred_s=lambda s: (s.key.get("nationkey") % L.Const(5, L.INT)).eq(
-            L.Const(region, L.INT)
+    """The full chain, dictionaries innermost-first:
+
+    * ``NR``  — nationkey index over region-filtered nation (semijoin side);
+    * ``C2``  — customer ⋈ NR projected to (custkey, nationkey);
+    * ``CN``  — custkey index over C2;
+    * ``OC``  — orders ⋈ CN projected to (orderkey, c_nat);
+    * ``OD``  — orderkey index over OC;
+    * ``LO``  — lineitem ⋈ OD projected to (suppkey, c_nat, rev);
+    * ``SN``  — suppkey index over supplier;
+    * ``Agg`` — Σ rev per supplier nation, keeping supplier-nation == customer-nation.
+    """
+    n, c, x, o, cc, l, od, y, sp = (Var(v) for v in
+                                    ("n", "c", "x", "o", "cc", "l", "od", "y", "sp"))
+    nr_loop = For(
+        "n",
+        Input("nation"),
+        If(
+            n.key.get("regionkey").eq(_i(region)),
+            DictUpdate(Var("NR"), n.key.get("nationkey"), DictNew(None, n.key, n.val)),
         ),
     )
-    return cust  # the chain's remaining dicts (SN, Agg) share CN's stats shape
+    c2_loop = For(
+        "c",
+        Input("customer"),
+        For(
+            "x",
+            DictLookup(Var("NR"), c.key.get("nationkey")),
+            DictUpdate(
+                Var("C2"),
+                _rec(custkey=c.key.get("custkey"), nationkey=c.key.get("nationkey")),
+                c.val * x.val,
+            ),
+        ),
+    )
+    cn_loop = For(
+        "c2",
+        Var("C2"),
+        DictUpdate(Var("CN"), Var("c2").key.get("custkey"), DictNew(None, Var("c2").key, Var("c2").val)),
+    )
+    oc_loop = For(
+        "o",
+        Input("orders"),
+        For(
+            "cc",
+            DictLookup(Var("CN"), o.key.get("custkey")),
+            DictUpdate(
+                Var("OC"),
+                _rec(orderkey=o.key.get("orderkey"), c_nat=cc.key.get("nationkey")),
+                o.val * cc.val,
+            ),
+        ),
+    )
+    od_loop = For(
+        "oc", Var("OC"),
+        DictUpdate(Var("OD"), Var("oc").key.get("orderkey"), DictNew(None, Var("oc").key, Var("oc").val)),
+    )
+    lo_loop = For(
+        "l",
+        Input("lineitem"),
+        For(
+            "od",
+            DictLookup(Var("OD"), l.key.get("orderkey")),
+            DictUpdate(
+                Var("LO"),
+                _rec(
+                    suppkey=l.key.get("suppkey"),
+                    c_nat=od.key.get("c_nat"),
+                    rev=l.key.get("extendedprice") * (_c(1.0) - l.key.get("discount")),
+                ),
+                l.val * od.val,
+            ),
+        ),
+    )
+    sn_loop = For(
+        "s",
+        Input("supplier"),
+        DictUpdate(Var("SN"), Var("s").key.get("suppkey"), DictNew(None, Var("s").key, Var("s").val)),
+    )
+    agg_loop = For(
+        "y",
+        Var("LO"),
+        For(
+            "sp",
+            DictLookup(Var("SN"), y.key.get("suppkey")),
+            If(
+                sp.key.get("nationkey").eq(y.key.get("c_nat")),
+                DictUpdate(
+                    Var("Agg"),
+                    sp.key.get("nationkey"),
+                    y.key.get("rev") * y.val * sp.val,
+                ),
+            ),
+        ),
+    )
+    body = seq(nr_loop, c2_loop, cn_loop, oc_loop, od_loop, lo_loop, sn_loop,
+               agg_loop, Var("Agg"))
+    for sym in ("Agg", "SN", "LO", "OD", "OC", "CN", "C2", "NR"):
+        body = let(sym, DictNew(None), body)
+    return body
 
 
-def q5_run(db, choices, region: int = 0):
-    li, od, cu, su = db["lineitem"], db["orders"], db["customer"], db["supplier"]
-    na = db["nation"]
-    # customers in region
-    region_of = na.col("regionkey")[cu.col("nationkey")]
-    cuf = cu.with_mask(region_of == region)
-    cch = _ch(choices, "CN")
-    cidx = E.build_index(
-        cch.ds, cuf.col("custkey"), E.capacity_for(cch.ds, cu.nrows), valid=cuf.mask
-    )
-    oc = E.fk_join(od, od.col("custkey"), cu, cidx, take=["nationkey"], prefix="c_")
-    och = _ch(choices, "OD")
-    oidx = E.build_index(
-        och.ds, oc.col("orderkey"), E.capacity_for(och.ds, od.nrows), valid=oc.mask
-    )
-    li_sorted = li.sorted_on[:1] == ("orderkey",)
-    lo = E.fk_join(
-        li, li.col("orderkey"), oc, oidx, take=["c_nationkey"],
-        sorted_probes=li_sorted and och.hinted, prefix="o_",
-    )
-    sch = _ch(choices, "SN")
-    sidx = E.build_index(
-        sch.ds, su.col("suppkey"), E.capacity_for(sch.ds, su.nrows)
-    )
-    los = E.fk_join(lo, lo.col("suppkey"), su, sidx, take=["nationkey"], prefix="s_")
-    # nation of supplier must equal nation of customer
-    same = los.col("s_nationkey") == los.col("o_c_nationkey")
-    final = los.with_mask(same)
-    rev = final.col("extendedprice") * (1.0 - final.col("discount"))
-    ach = _ch(choices, "Agg")
-    g = E.groupby(final, final.col("s_nationkey"), rev, ach.ds, 256)
-    return g.items_np()
+def q5_run(db, choices):
+    return _run_llql(q5_llql(), db, choices)
 
 
 def q5_reference(db, region: int = 0):
@@ -255,44 +326,92 @@ _YEARS = 7
 
 
 def q9_llql(color: int = 3) -> L.Expr:
-    return O.partitioned_join(
-        "lineitem",
-        "part",
-        part_r=lambda r: r.key.get("partkey"),
-        part_s=lambda s: s.key.get("partkey"),
-        out_key=lambda r, s: r.key.get("suppkey"),
-        build="PX",
-        out="LP",
-        pred_s=lambda s: s.key.get("color").eq(L.Const(color, L.INT)),
+    """Chain: PX (color-filtered part index) → LP (lineitem ⋈ PX carrying the
+    profit inputs) → SN (supplier index) → LS (+nation) → OD (orders index)
+    → Agg keyed (nation, year-bucket)."""
+    p, l, pp, x, sp, o, y, oo = (Var(v) for v in
+                                 ("p", "l", "pp", "x", "sp", "o", "y", "oo"))
+    px_loop = For(
+        "p",
+        Input("part"),
+        If(
+            p.key.get("color").eq(_i(color)),
+            DictUpdate(Var("PX"), p.key.get("partkey"), DictNew(None, p.key, p.val)),
+        ),
     )
+    lp_loop = For(
+        "l",
+        Input("lineitem"),
+        For(
+            "pp",
+            DictLookup(Var("PX"), l.key.get("partkey")),
+            DictUpdate(
+                Var("LP"),
+                _rec(
+                    suppkey=l.key.get("suppkey"),
+                    orderkey=l.key.get("orderkey"),
+                    qty=l.key.get("quantity"),
+                    ep=l.key.get("extendedprice"),
+                    disc=l.key.get("discount"),
+                    retail=pp.key.get("retailprice"),
+                ),
+                l.val * pp.val,
+            ),
+        ),
+    )
+    sn_loop = For(
+        "s",
+        Input("supplier"),
+        DictUpdate(Var("SN"), Var("s").key.get("suppkey"), DictNew(None, Var("s").key, Var("s").val)),
+    )
+    ls_loop = For(
+        "x",
+        Var("LP"),
+        For(
+            "sp",
+            DictLookup(Var("SN"), x.key.get("suppkey")),
+            DictUpdate(
+                Var("LS"),
+                _rec(
+                    orderkey=x.key.get("orderkey"),
+                    nat=sp.key.get("nationkey"),
+                    qty=x.key.get("qty"),
+                    ep=x.key.get("ep"),
+                    disc=x.key.get("disc"),
+                    retail=x.key.get("retail"),
+                ),
+                x.val * sp.val,
+            ),
+        ),
+    )
+    od_loop = For(
+        "o",
+        Input("orders"),
+        DictUpdate(Var("OD"), o.key.get("orderkey"), DictNew(None, o.key, o.val)),
+    )
+    profit = y.key.get("ep") * (_c(1.0) - y.key.get("disc")) - y.key.get(
+        "qty"
+    ) * y.key.get("retail") * _c(0.01)
+    yearkey = y.key.get("nat") * _i(_YEARS) + L.UnOp(
+        "floor", oo.key.get("orderdate") * _c(float(_YEARS))
+    )
+    agg_loop = For(
+        "y",
+        Var("LS"),
+        For(
+            "oo",
+            DictLookup(Var("OD"), y.key.get("orderkey")),
+            DictUpdate(Var("Agg"), yearkey, profit * y.val * oo.val),
+        ),
+    )
+    body = seq(px_loop, lp_loop, sn_loop, ls_loop, od_loop, agg_loop, Var("Agg"))
+    for sym in ("Agg", "OD", "LS", "SN", "LP", "PX"):
+        body = let(sym, DictNew(None), body)
+    return body
 
 
-def q9_run(db, choices, color: int = 3):
-    li, pa, su, od = db["lineitem"], db["part"], db["supplier"], db["orders"]
-    paf = pa.with_mask(pa.col("color") == color)
-    pch = _ch(choices, "PX")
-    pidx = E.build_index(
-        pch.ds, paf.col("partkey"), E.capacity_for(pch.ds, pa.nrows), valid=paf.mask
-    )
-    lp = E.fk_join(li, li.col("partkey"), pa, pidx, take=["retailprice"], prefix="p_")
-    sch = _ch(choices, "SN")
-    sidx = E.build_index(sch.ds, su.col("suppkey"), E.capacity_for(sch.ds, su.nrows))
-    lps = E.fk_join(lp, lp.col("suppkey"), su, sidx, take=["nationkey"], prefix="s_")
-    och = _ch(choices, "OD")
-    oidx = E.build_index(och.ds, od.col("orderkey"), E.capacity_for(och.ds, od.nrows))
-    li_sorted = li.sorted_on[:1] == ("orderkey",)
-    full = E.fk_join(
-        lps, lps.col("orderkey"), od, oidx, take=["orderdate"],
-        sorted_probes=li_sorted and och.hinted, prefix="o_",
-    )
-    year = jnp.floor(full.col("o_orderdate") * _YEARS).astype(jnp.int32)
-    profit = full.col("extendedprice") * (1.0 - full.col("discount")) - full.col(
-        "quantity"
-    ) * full.col("p_retailprice") * 0.01
-    key = full.col("s_nationkey") * _YEARS + year
-    ach = _ch(choices, "Agg")
-    g = E.groupby(full, key, profit, ach.ds, 512)
-    return g.items_np()
+def q9_run(db, choices):
+    return _run_llql(q9_llql(), db, choices)
 
 
 def q9_reference(db, color: int = 3):
@@ -323,39 +442,45 @@ def q9_reference(db, color: int = 3):
 # ---------------------------------------------------------------------------
 
 
-def q18_llql() -> L.Expr:
-    return O.groupby(
-        "lineitem",
-        grp=lambda r: r.key.get("orderkey"),
-        aggfn=lambda r: r.key.get("quantity"),
-        out="QtyAgg",
+def q18_llql(threshold: float = 150.0) -> L.Expr:
+    """Group quantities per order, then the HAVING + join-back: scan the
+    aggregate dictionary, keep the big groups, and re-join orders for
+    totalprice — a dictionary scan feeding a probe, all in one program."""
+    l, o, g, oo = Var("l"), Var("o"), Var("g"), Var("oo")
+    qty_loop = For(
+        "l",
+        Input("lineitem"),
+        DictUpdate(Var("QtyAgg"), l.key.get("orderkey"), l.key.get("quantity") * l.val),
     )
+    od_loop = For(
+        "o",
+        Input("orders"),
+        DictUpdate(Var("OD"), o.key.get("orderkey"), DictNew(None, o.key, o.val)),
+    )
+    big_loop = For(
+        "g",
+        Var("QtyAgg"),
+        If(
+            g.val > _c(threshold),
+            For(
+                "oo",
+                DictLookup(Var("OD"), g.key),
+                DictUpdate(
+                    Var("Big"),
+                    g.key,
+                    L.record(qty=g.val, totalprice=oo.key.get("totalprice")),
+                ),
+            ),
+        ),
+    )
+    body = seq(qty_loop, od_loop, big_loop, Var("Big"))
+    for sym in ("Big", "OD", "QtyAgg"):
+        body = let(sym, DictNew(None), body)
+    return body
 
 
-def q18_run(db, choices, threshold: float = 150.0):
-    li, od = db["lineitem"], db["orders"]
-    ach = _ch(choices, "QtyAgg")
-    li_sorted = li.sorted_on[:1] == ("orderkey",)
-    cap = E.capacity_for(ach.ds, od.nrows)
-    g = E.groupby(
-        li, li.col("orderkey"), li.col("quantity"), ach.ds, cap,
-        assume_sorted=li_sorted and ach.hinted,
-    )
-    ks, vs, valid = g.arrays()
-    big = valid & (vs[:, 0] > threshold)
-    # join back to orders for totalprice (probe orders index with big keys)
-    och = _ch(choices, "OD")
-    oidx = E.build_index(och.ds, od.col("orderkey"), E.capacity_for(och.ds, od.nrows))
-    srt = g.ds.startswith("st")  # iterating an @st dict yields sorted keys
-    ovals, ofound = E.lookup_dict(oidx, ks, valid=big, sorted_probes=srt and och.hinted)
-    oid = ovals[:, 0].astype(jnp.int32)
-    tp = jnp.where(ofound, od.col("totalprice")[jnp.where(ofound, oid, 0)], 0.0)
-    out = {}
-    ksn, vsn, bign, tpn = map(np.asarray, (ks, vs, big & ofound, tp))
-    for i in range(len(ksn)):
-        if bign[i]:
-            out[int(ksn[i])] = np.array([vsn[i, 0], tpn[i]], np.float32)
-    return out
+def q18_run(db, choices):
+    return _run_llql(q18_llql(), db, choices)
 
 
 def q18_reference(db, threshold: float = 150.0):
@@ -386,21 +511,15 @@ def synthesize_choices(
     qname: str, db: Dict[str, Table], delta, extra_syms: Tuple[str, ...] = ()
 ) -> GammaDict:
     """Run Algorithm 1 on the query's LLQL against real-data statistics and
-    return per-symbol choices; symbols the LLQL form doesn't cover (chain
-    continuation indices) inherit the choice of the structurally matching
-    symbol (same key distribution), mirroring how DBFlex reuses dictionary
-    decisions across a pipeline."""
+    return per-symbol choices.  The LLQL now covers every dictionary the plan
+    materializes, so ``extra_syms`` only backfills caller-invented aliases."""
     from repro.core.synthesis import synthesize
 
     q = QUERIES[qname]
-    sigma = collect_stats(db)
+    sigma = _stats_for(db)
     res = synthesize(q.llql(), sigma, delta)
     choices = dict(res.choices)
-    if choices:
-        default = max(choices.values(), key=lambda c: 0).__class__
     for sym in extra_syms:
-        if sym not in choices:
-            # reuse the build-side decision for sibling index dictionaries
-            first = next(iter(choices.values()))
-            choices[sym] = first
+        if sym not in choices and choices:
+            choices[sym] = next(iter(choices.values()))
     return choices

@@ -59,7 +59,10 @@ def sorted_lookup(
     n = queries.shape[0]
     C = table_keys.shape[0]
     V = table_vals.shape[1]
-    log2c = max(1, (C - 1).bit_length())
+    # Binary search over [0, C) needs ceil(log2(C)) + 1 fixed rounds to shrink
+    # the bracket to a single converged index; one fewer leaves `lo` one left
+    # of the match whenever the last round would have gone right.
+    log2c = max(1, C.bit_length())
     n_pad = -n % block
     # PAD queries always miss (PAD slots hold zero values).
     qs = jnp.pad(queries, (0, n_pad), constant_values=dbase.EMPTY)

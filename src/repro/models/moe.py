@@ -26,6 +26,8 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 from repro.sharding.partition import shard_hint
 from . import common
 from .common import Params
@@ -256,7 +258,7 @@ def moe_apply_sharded(
 
     xt = x.reshape(B * T, d)
     dp = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
-    out, aux = jax.shard_map(
+    out, aux = compat.shard_map(
         region,
         mesh=mesh,
         in_specs=(
@@ -267,7 +269,6 @@ def moe_apply_sharded(
             P("model", None, dp),
         ),
         out_specs=(P(dp, None), P()),
-        check_vma=False,
     )(xt, p["router"], p["wi"], p["wg"], p["wo"])
     out = out.reshape(B, T, d)
     if "shared" in p:

@@ -1,10 +1,21 @@
-"""Dictionary backends: correctness vs Python oracle + hypothesis invariants."""
+"""Dictionary backends: correctness vs Python oracle + property invariants.
+
+Property tests use hypothesis when installed; without it they fall back to a
+seeded random sweep over the same input space, so the invariants still run
+(collection must never hard-fail on the optional dependency)."""
 import collections
+import itertools
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - env without hypothesis
+    HAVE_HYPOTHESIS = False
 
 from repro.dicts import base as dbase
 from repro.dicts import registry
@@ -75,16 +86,7 @@ def test_assume_sorted_build(ds, rng):
     np.testing.assert_allclose(np.asarray(t1.vals), np.asarray(t2.vals), rtol=1e-5)
 
 
-@settings(max_examples=25, deadline=None)
-@given(
-    data=st.lists(
-        st.tuples(st.integers(0, 40), st.floats(-5, 5, allow_nan=False)),
-        min_size=1,
-        max_size=120,
-    ),
-    ds=st.sampled_from(BACKENDS),
-)
-def test_property_lookup_after_build(data, ds):
+def _check_lookup_after_build(data, ds):
     """∀ batches: lookup(build(batch), k) == Σ of k's values (bag semantics)."""
     mod = registry.get(ds)
     keys = np.array([k for k, _ in data], np.int32)
@@ -100,12 +102,7 @@ def test_property_lookup_after_build(data, ds):
     assert int(mod.size(t)) == len(exp)
 
 
-@settings(max_examples=15, deadline=None)
-@given(
-    keys=st.lists(st.integers(0, 1000), min_size=1, max_size=80),
-    ds=st.sampled_from(BACKENDS),
-)
-def test_property_misses_never_found(keys, ds):
+def _check_misses_never_found(keys, ds):
     """Keys outside the built set are never 'found' (no false positives)."""
     mod = registry.get(ds)
     ks = np.array(keys, np.int32)
@@ -113,3 +110,46 @@ def test_property_misses_never_found(keys, ds):
     absent = np.array([k + 2000 for k in keys[:20]], np.int32)
     _, f = mod.lookup(t, jnp.asarray(absent))
     assert not bool(f.any())
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        data=st.lists(
+            st.tuples(st.integers(0, 40), st.floats(-5, 5, allow_nan=False)),
+            min_size=1,
+            max_size=120,
+        ),
+        ds=st.sampled_from(BACKENDS),
+    )
+    def test_property_lookup_after_build(data, ds):
+        _check_lookup_after_build(data, ds)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        keys=st.lists(st.integers(0, 1000), min_size=1, max_size=80),
+        ds=st.sampled_from(BACKENDS),
+    )
+    def test_property_misses_never_found(keys, ds):
+        _check_misses_never_found(keys, ds)
+
+else:  # seeded sweep over the same input space, incl. size-1 edge cases
+
+    @pytest.mark.parametrize("ds,case", itertools.product(BACKENDS, range(6)))
+    def test_property_lookup_after_build(ds, case):
+        r = np.random.default_rng(100 + case)
+        n = [1, 2, 7, 40, 119, 120][case]
+        data = list(
+            zip(
+                r.integers(0, 41, n).tolist(),
+                (r.random(n) * 10.0 - 5.0).tolist(),
+            )
+        )
+        _check_lookup_after_build(data, ds)
+
+    @pytest.mark.parametrize("ds,case", itertools.product(BACKENDS, range(4)))
+    def test_property_misses_never_found(ds, case):
+        r = np.random.default_rng(200 + case)
+        n = [1, 3, 33, 80][case]
+        _check_misses_never_found(r.integers(0, 1001, n).tolist(), ds)

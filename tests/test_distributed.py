@@ -30,7 +30,8 @@ def test_dist_groupby_and_join():
         from jax.sharding import PartitionSpec as P, NamedSharding
         from repro.exec import distributed as D
         from repro.dicts import base as dbase
-        mesh = jax.make_mesh((2,4), ("pod","data"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro import compat
+        mesh = compat.make_mesh((2,4), ("pod","data"))
         rng = np.random.default_rng(1)
         N = 8*256
         keys = rng.integers(0, 150, N).astype(np.int32)
@@ -67,7 +68,8 @@ def test_compressed_psum_and_lowcard():
         from jax.sharding import PartitionSpec as P, NamedSharding
         from repro.train.optimizer import compressed_psum
         from repro.exec import distributed as D
-        mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+        from repro import compat
+        mesh = compat.make_mesh((8,), ("data",))
         rng = np.random.default_rng(0)
         g = jnp.asarray(rng.normal(size=(8, 64)).astype(np.float32))
         gs = jax.device_put(g, NamedSharding(mesh, P("data", None)))
@@ -75,9 +77,9 @@ def test_compressed_psum_and_lowcard():
         def body(gl, ef):
             out, new_ef = compressed_psum({"g": gl}, {"g": ef}, "data")
             return out["g"], new_ef["g"]
-        summed, _ = jax.shard_map(
+        summed, _ = compat.shard_map(
             body, mesh=mesh, in_specs=(P("data", None), P("data", None)),
-            out_specs=(P("data", None), P("data", None)), check_vma=False,
+            out_specs=(P("data", None), P("data", None)),
         )(gs, jnp.zeros_like(gs))
         want = np.asarray(g).sum(axis=0)
         got = np.asarray(summed)[0]
@@ -89,8 +91,8 @@ def test_compressed_psum_and_lowcard():
         vals = jax.device_put(jnp.asarray(rng.normal(size=(8*16, 1)).astype(np.float32)),
                               NamedSharding(mesh, P("data", None)))
         fn = functools.partial(D.dist_groupby_lowcard_shard, axis="data", n_groups=6)
-        acc, cnt = jax.shard_map(fn, mesh=mesh, in_specs=(P("data"), P("data", None)),
-                                 out_specs=(P(), P()), check_vma=False)(keys, vals)
+        acc, cnt = compat.shard_map(fn, mesh=mesh, in_specs=(P("data"), P("data", None)),
+                                 out_specs=(P(), P()))(keys, vals)
         import collections
         exp = collections.defaultdict(float)
         for k, v in zip(np.asarray(keys), np.asarray(vals)[:,0]): exp[int(k)] += float(v)
@@ -131,17 +133,18 @@ def test_ring_allgather_matmul_overlap():
         import numpy as np, jax, jax.numpy as jnp, functools
         from jax.sharding import PartitionSpec as P, NamedSharding
         from repro.sharding.overlap import ring_allgather_matmul, allgather_matmul_reference
-        mesh = jax.make_mesh((8,), ("tp",), axis_types=(jax.sharding.AxisType.Auto,))
+        from repro import compat
+        mesh = compat.make_mesh((8,), ("tp",))
         rng = np.random.default_rng(0)
         X = jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32))
         W = jnp.asarray(rng.normal(size=(32, 16)).astype(np.float32))
         Xs = jax.device_put(X, NamedSharding(mesh, P("tp", None)))
-        ring = jax.shard_map(functools.partial(ring_allgather_matmul, axis="tp"),
+        ring = compat.shard_map(functools.partial(ring_allgather_matmul, axis="tp"),
                              mesh=mesh, in_specs=(P("tp", None), P(None, None)),
-                             out_specs=P(None, None), check_vma=False)(Xs, W)
-        ref = jax.shard_map(functools.partial(allgather_matmul_reference, axis="tp"),
+                             out_specs=P(None, None))(Xs, W)
+        ref = compat.shard_map(functools.partial(allgather_matmul_reference, axis="tp"),
                             mesh=mesh, in_specs=(P("tp", None), P(None, None)),
-                            out_specs=P(None, None), check_vma=False)(Xs, W)
+                            out_specs=P(None, None))(Xs, W)
         np.testing.assert_allclose(np.asarray(ring), np.asarray(ref), rtol=1e-5)
         np.testing.assert_allclose(np.asarray(ring), np.asarray(X @ W), rtol=1e-4)
         print("RING_OK")

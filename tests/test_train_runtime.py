@@ -48,10 +48,14 @@ def test_restart_is_bit_exact(tmp_path):
 
 
 def test_training_reduces_loss(tmp_path):
-    t = _trainer(str(tmp_path / "ck2"), steps=10)
+    # compare the trailing mean against the first step: single-step loss on
+    # the synthetic stream is noise-dominated (warmup pushes the first couple
+    # of steps *up*), but a working optimizer clearly trends down by step 20
+    t = _trainer(str(tmp_path / "ck2"), steps=20)
     t.init()
     log = t.run()
-    assert log[-1]["loss"] < log[0]["loss"]
+    tail = np.mean([x["loss"] for x in log[-4:]])
+    assert tail < log[0]["loss"]
 
 
 def test_compression_error_feedback():
@@ -114,7 +118,8 @@ def test_elastic_checkpoint_restore_changes_layout(tmp_path):
     d = str(tmp_path / "el")
     tree = {"w": jnp.arange(16.0).reshape(4, 4)}
     ckpt.save(d, 1, tree)
-    mesh = jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import make_mesh
+    mesh = make_mesh((1,), ("data",))
     sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec("data"))
     like = {"w": jax.ShapeDtypeStruct((4, 4), jnp.float32)}
     restored, _ = ckpt.restore(d, like, shardings={"w": sh})
