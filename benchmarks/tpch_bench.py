@@ -1,21 +1,28 @@
-"""TPC-H query benchmark — paper Fig. 11.
+"""TPC-H query benchmark — paper Fig. 11, plus the distributed realization.
 
 Runs Q1/Q3/Q5/Q9/Q18 under: (a) each single-dictionary policy (every LLQL
 dictionary forced to one implementation — the Typer-like "one hash table
 everywhere" policy and its variants), and (b) the fine-tuned plan chosen by
 Alg. 1 with the installed cost model.  Reports wall time per query and the
 tuned plan's speedup over the best and worst single policies.
+
+``python -m benchmarks.tpch_bench --shards N`` instead runs every query
+under ``execute_plan_sharded`` with the fact tables row-sharded over an
+N-way mesh (choices synthesized under Δ_net, so placements are the cost
+model's) and writes a JSON perf record (``--out BENCH_tpch_dist.json``).
+Needs N visible devices, e.g.
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 """
 from __future__ import annotations
 
 import jax
 import numpy as np
 
-from repro.core.cost import AnalyticCostModel, DictChoice
+from repro.core.cost import AnalyticCostModel, DictChoice, NetCostModel
 from repro.core.synthesis import synthesize
 from repro.data import tpch
 from repro.data.table import collect_stats
-from repro.exec.queries import QUERIES
+from repro.exec.queries import FACT_RELS, QUERIES
 from .common import bench, emit
 
 ALL_SYMS = ("Agg", "Sd", "OD", "QtyAgg", "CN", "SN", "PX", "Ragg")
@@ -49,3 +56,89 @@ def run(scale: float = 0.02, repeats: int = 3, seed: int = 0):
             f"ms={sec*1e3:.2f},vs_best={sec/best:.2f}x,vs_worst={sec/worst:.2f}x,"
             f"plan={'|'.join(f'{k}:{v}' for k, v in sorted(syn.choices.items()))}",
         )
+
+
+def run_dist(
+    scale: float = 0.005,
+    shards: int = 4,
+    repeats: int = 3,
+    seed: int = 0,
+    out: str = "BENCH_tpch_dist.json",
+):
+    """Distributed smoke: every query sharded over an N-way mesh with the
+    fact tables actually sharded, timed against the single-shard executor,
+    written as a JSON perf record."""
+    import json
+
+    from repro import compat
+    from repro.core.lower import compile as compile_plan
+    from repro.costmodel import load_model
+    from repro.exec import distributed as D
+    from repro.exec import engine as E
+
+    n_dev = jax.device_count()
+    if n_dev < shards:
+        raise SystemExit(
+            f"need {shards} devices, have {n_dev}; set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={shards}"
+        )
+    delta = load_model() or AnalyticCostModel()
+    db = tpch.generate(scale=scale, seed=seed).tables()
+    sigma = collect_stats(db)
+    mesh = compat.make_mesh((shards,), ("data",))
+    record = {
+        "bench": "tpch_dist",
+        "scale": scale,
+        "shards": shards,
+        "shard_rels": list(FACT_RELS),
+        "queries": {},
+    }
+    for qname, q in sorted(QUERIES.items()):
+        syn = synthesize(
+            q.llql(), sigma, delta,
+            net=NetCostModel(n_shards=shards), sharded_rels=FACT_RELS,
+        )
+        plan = compile_plan(q.llql(), syn.choices)
+        # time through .arrays(): the result wrappers are plain dataclasses
+        # jax.block_until_ready cannot see into.  The sharded executor is
+        # built once so repeats hit the jit trace cache (compile excluded,
+        # matching bench()'s contract).
+        sec_1 = bench(
+            lambda: E.execute_plan(plan, db, sigma=sigma).arrays(),
+            repeats=repeats,
+        )
+        run_n = D.sharded_executor(plan, db, mesh, "data", shard_rels=FACT_RELS)
+        sec_n = bench(lambda: run_n().arrays(), repeats=repeats)
+        record["queries"][qname] = {
+            "ms_single": sec_1 * 1e3,
+            "ms_sharded": sec_n * 1e3,
+            "choices": {s: str(c) for s, c in sorted(syn.choices.items())},
+        }
+        emit(
+            f"tpch_dist_{qname}/shards{shards}",
+            sec_n * 1e6,
+            f"ms={sec_n*1e3:.2f},single_ms={sec_1*1e3:.2f}",
+        )
+    with open(out, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"# wrote {out}")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.005)
+    ap.add_argument("--shards", type=int, default=0,
+                    help="run the distributed smoke over an N-way mesh")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--out", default="BENCH_tpch_dist.json")
+    args = ap.parse_args()
+    from .common import header
+
+    header()
+    if args.shards:
+        run_dist(scale=args.scale, shards=args.shards,
+                 repeats=args.repeats, out=args.out)
+    else:
+        run(scale=args.scale, repeats=args.repeats)

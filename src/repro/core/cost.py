@@ -113,9 +113,17 @@ class AnalyticCostModel:
 class DictChoice:
     ds: str = DEFAULT_DS
     hinted: bool = False  # use hinted (iterator/merge) probe & insert sites
+    # Distributed placement of a dictionary built from sharded rows:
+    # "partition" — hash-repartition the build rows by key, per-shard slices,
+    #               probes repartitioned to match (co-partitioned join);
+    # "broadcast" — all-gather the build rows, replicated copy, local probes;
+    # ""          — unplaced (single-shard plans; legalizer defaults to
+    #               "partition").  Chosen by Alg. 1 under Δ_net.
+    placement: str = ""
 
     def __str__(self) -> str:
-        return self.ds + ("<hinted>" if self.hinted else "")
+        s = self.ds + ("<hinted>" if self.hinted else "")
+        return s + (f"@{self.placement}" if self.placement else "")
 
 
 GammaDict = Dict[str, DictChoice]
@@ -148,6 +156,24 @@ class NetCostModel:
             return 0.0
         hops = math.log2(max(2.0, float(self.n_shards)))
         return self.alpha * hops + entries * self.entry_bytes(lanes) * self.beta
+
+    def repartition_seconds(self, rows: float, lanes: float = 1.0) -> float:
+        """Hash all-to-all of ``rows`` global rows: per-shard wall clock —
+        each shard sends and receives ~rows/n_shards entries."""
+        if self.n_shards <= 1 or rows <= 0:
+            return 0.0
+        hops = math.log2(max(2.0, float(self.n_shards)))
+        per_shard = rows / float(self.n_shards)
+        return self.alpha * hops + per_shard * self.entry_bytes(lanes) * self.beta
+
+    def broadcast_seconds(self, rows: float, lanes: float = 1.0) -> float:
+        """All-gather of ``rows`` global rows onto every shard: each shard
+        receives the (n-1)/n of the rows it does not already hold."""
+        if self.n_shards <= 1 or rows <= 0:
+            return 0.0
+        hops = math.log2(max(2.0, float(self.n_shards)))
+        recv = rows * (1.0 - 1.0 / float(self.n_shards))
+        return self.alpha * hops + recv * self.entry_bytes(lanes) * self.beta
 
 
 @dataclass
@@ -272,6 +298,12 @@ class _Infer:
         self.gamma_dict = dict(gamma_dict)
         self.vectorized = vectorized
         self.res = CostResult()
+        # probe provenance per lookup site: (dict, rows, kind, payload,
+        # whole_key) — kind "rel" carries the base relation the probe stream
+        # iterates, kind "dict" the DictMeta of a scanned result dictionary.
+        # The distributed pricing uses this to charge probe repartitioning
+        # only where plan.legalize would actually move rows.
+        self.probe_log: List[Tuple[str, float, str, Any, bool]] = []
 
     # -- scalar expression op counting ------------------------------------
     def _scalar_ops(self, e: L.Expr) -> float:
@@ -293,9 +325,6 @@ class _Infer:
         """Returns (iterations per invocation, env entry for loop var, rel)."""
         if isinstance(src, L.Input):
             st = self.sigma.rel(src.name)
-            inner = getattr(st, "inner_rows", 0.0)
-            if inner:
-                return st.rows, RowOf(src.name), src.name
             return st.rows, RowOf(src.name), src.name
         if isinstance(src, L.Var):
             ent = env.get(src.name)
@@ -368,6 +397,18 @@ class _Infer:
         # rows count as misses.  Paper mode uses the semantic count.
         C = calls if self.vectorized else calls * cond
         N = max(1.0, meta.card)
+        for node in L.walk(e.keyexpr):
+            if isinstance(node, L.Var):
+                ent = env.get(node.name)
+                if isinstance(ent, RowOf):
+                    self.probe_log.append((meta.name, C, "rel", ent.rel, False))
+                    break
+                if isinstance(ent, DictRowOf):
+                    whole = key_columns(e.keyexpr, node.name) == ("*",)
+                    self.probe_log.append(
+                        (meta.name, C, "dict", ent.meta, whole)
+                    )
+                    break
         dist, probe_sorted = self._probe_stats(e.keyexpr, env)
         sigma_hit = min(1.0, N / max(1.0, dist)) * (cond if self.vectorized else 1.0)
         H = sigma_hit * C
@@ -428,9 +469,20 @@ class _Infer:
                 )
         meta.card = N
         meta.elems += C
-        for node in L.walk(e.keyexpr):
-            if isinstance(node, L.Var) and isinstance(env.get(node.name), RowOf):
-                meta.build_rels.add(env[node.name].rel)  # type: ignore[union-attr]
+        # provenance: every enclosing loop's base relations feed this build —
+        # including *transitively* through derived dictionaries (a dict built
+        # while iterating another dict inherits its build relations), so the
+        # distributed pricing sees that e.g. Q5's OD descends from orders
+        for ent in env.values():
+            if isinstance(ent, RowOf):
+                meta.build_rels.add(ent.rel)
+            elif isinstance(ent, DictRowOf):
+                meta.build_rels |= ent.meta.build_rels
+            elif isinstance(ent, InnerRowOf):
+                if ent.meta is not None:
+                    meta.build_rels |= ent.meta.build_rels
+                elif ent.rel:
+                    meta.build_rels.add(ent.rel)
         for node in L.walk(e.value):
             if isinstance(node, L.RecordCtor):
                 meta.lanes = max(meta.lanes, float(len(node.fields)))
@@ -555,19 +607,68 @@ def infer_cost(
     ``DEFAULT_DS``.  ``vectorized=False`` recovers the paper's exact per-row
     rules (CPU engine semantics).
 
-    ``net`` prices the *distributed* realization of the program: every
-    dictionary built from a sharded base relation (all relations when
-    ``sharded_rels`` is None) becomes a per-shard dictionary plus an Exchange
-    (``plan.shard``), charged as wire traffic (Δ_net) plus the merge re-build
-    (Δ insert of the routed partial entries).
+    ``net`` prices the *distributed* realization of the program, mirroring
+    what ``plan.legalize`` will emit for each dictionary built from a sharded
+    base relation (all relations when ``sharded_rels`` is None):
+
+    * aggregate dictionaries (GroupBy/GroupJoin results) pay the per-shard
+      partial + shuffle-Exchange: wire traffic (Δ_net) plus the merge
+      re-build (Δ insert of the routed partial entries);
+    * join indexes (nested/partition dictionaries) pay their *placement* —
+      ``broadcast`` all-gathers the build rows (the replicated per-shard
+      build is already in the base cost), ``partition`` hash-repartitions
+      build and probe rows but builds only 1/n_shards of the dictionary per
+      shard, which is credited against the base (full) build charge.  The
+      placement comes from ``DictChoice.placement`` so Alg. 1 decides it
+      jointly with the implementation.
     """
     eng = _Infer(sigma, delta, gamma_dict or {}, vectorized=vectorized)
     eng.infer(expr, {}, calls=1.0, site="root")
     if net is not None and net.n_shards > 1:
+        # probe rows that the co-partitioned realization actually *moves*,
+        # mirroring plan.legalize's elisions: a base-relation stream moves
+        # iff that relation is sharded; a dict-scan stream probing by the
+        # scanned dictionary's whole key is already co-partitioned (or
+        # replicated and mask-partitioned) and never moves, otherwise it
+        # moves iff the scanned dictionary descends from sharded rows.
+        probes: Dict[str, float] = {}
+        for dname, n, kind, payload, whole in eng.probe_log:
+            if kind == "rel":
+                moves = sharded_rels is None or payload in sharded_rels
+            else:
+                moves = not whole and (
+                    sharded_rels is None
+                    or bool(payload.build_rels & set(sharded_rels))
+                )
+            if moves:
+                probes[dname] = probes.get(dname, 0.0) + n
         for meta in eng.res.dict_meta.values():
             if sharded_rels is not None and not (
                 meta.build_rels & set(sharded_rels)
             ):
+                continue
+            ds = meta.choice.ds
+            size = max(1.0, meta.card)
+            if meta.nested:
+                placement = meta.choice.placement or "partition"
+                if placement == "broadcast":
+                    sec = net.broadcast_seconds(meta.elems, meta.lanes)
+                else:
+                    # move every build and probe row once; the per-shard
+                    # build then inserts only 1/n of the rows, credited
+                    # against the full build the base walk already charged
+                    sec = net.repartition_seconds(meta.elems, meta.lanes)
+                    sec += net.repartition_seconds(
+                        probes.get(meta.name, 0.0), meta.lanes
+                    )
+                    full = delta.op_cost(ds, "insert", meta.elems, size, False)
+                    sec -= (1.0 - 1.0 / net.n_shards) * full
+                eng.res.add(
+                    CostItem(
+                        "placement", meta.name, ds, placement,
+                        meta.elems, size, False, sec,
+                    )
+                )
                 continue
             # each shard holds at most its own elements and at most the full
             # key set; the shuffle moves every per-shard partial entry
@@ -575,19 +676,11 @@ def infer_cost(
             if entries <= 0:
                 continue
             sec = net.shuffle_seconds(entries, meta.lanes)
-            sec += delta.op_cost(
-                meta.choice.ds, "insert", entries, max(1.0, meta.card), False
-            )
+            sec += delta.op_cost(ds, "insert", entries, size, False)
             eng.res.add(
                 CostItem(
-                    "exchange",
-                    meta.name,
-                    meta.choice.ds,
-                    "exchange",
-                    entries,
-                    max(1.0, meta.card),
-                    False,
-                    sec,
+                    "exchange", meta.name, ds, "exchange",
+                    entries, size, False, sec,
                 )
             )
     return eng.res

@@ -25,8 +25,17 @@ Node vocabulary (DESIGN.md §3):
 * ``Reduce``    — scalar aggregation into a ref, with the optional
                   interleaved lookup of Fig. 7b;
 * ``Exchange``  — cross-shard merge of a per-shard dictionary (shuffle by
-                  key hash, or all-reduce for dense low-cardinality
-                  aggregates).  Identity on a single shard.
+                  key hash, or all-reduce for scalar refs).  Identity on a
+                  single shard.
+* ``Repartition`` — cross-shard movement of *rows* (a frame): ``hash``
+                  routes every row to the shard owning ``hash(keyexpr)``,
+                  ``broadcast`` all-gathers the rows onto every shard.
+                  Identity on a single shard.
+
+Distribution is planned, not hard-coded: every symbol carries a
+*partitioning property* — :class:`Replicated`, :class:`ShardedArbitrary`, or
+:class:`HashPartitioned` — and :func:`legalize` converts between properties
+by inserting explicit ``Repartition``/``Exchange`` nodes (DESIGN.md §4).
 
 Expressions inside nodes are LLQL row expressions over the loop variables
 bound by the node chain (``Scan.var`` / ``HashProbe.inner_var``); executors
@@ -35,7 +44,7 @@ compile them to columnar jnp values.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Iterator, List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple, Union
 
 from . import llql as L
 from .cost import DictChoice, GammaDict
@@ -116,7 +125,53 @@ class Exchange(Node):
     choice: DictChoice = field(default_factory=DictChoice)
 
 
+@dataclass(frozen=True)
+class Repartition(Node):
+    """Move frame rows across shards: ``hash`` routes each row to the shard
+    owning ``hash(keyexpr)`` (the dictionaries' own mix, so a dictionary
+    built after a hash repartition is co-partitioned with every other symbol
+    hashed on the same key values); ``broadcast`` all-gathers the rows so
+    every shard holds all of them.  Identity on a single shard."""
+
+    source: str  # frame symbol to move
+    kind: str  # "hash" | "broadcast"
+    keyexpr: Optional[L.Expr] = None  # hash only: partitioning expression
+
+
 DICT_NODES = (HashBuild, GroupBy, GroupJoin)
+
+
+# ---------------------------------------------------------------------------
+# Partitioning properties
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Replicated:
+    """Every shard holds the full data (dimension tables, merged scalars)."""
+
+
+@dataclass(frozen=True)
+class ShardedArbitrary:
+    """Rows are split across shards with no key alignment; ``rel`` names the
+    sharded base relation the rows descend from ("?" when mixed/derived)."""
+
+    rel: str = "?"
+
+
+@dataclass(frozen=True)
+class HashPartitioned:
+    """Rows/entries are owned by ``hash(key) % n_shards``.
+
+    ``key`` is the partitioning witness: an LLQL expression for frames (the
+    routed key expression, compared structurally for co-partitioning), a
+    column name for relations (Project outputs), and ``None`` for
+    dictionaries — a dictionary is always partitioned by its own key."""
+
+    key: Optional[object] = None
+
+
+Partitioning = Union[Replicated, ShardedArbitrary, HashPartitioned]
 
 
 @dataclass(frozen=True)
@@ -168,7 +223,16 @@ class Plan:
                 lk = f" lookup={n.lookup_sym}" if n.lookup_sym else ""
                 lines.append(f"Reduce {n.out} <- {n.source} lanes={lanes}{lk}")
             elif isinstance(n, Exchange):
-                lines.append(f"Exchange {n.out} <- {n.source} ({n.kind})")
+                lines.append(
+                    f"Exchange {n.out} <- {n.source} ({n.kind}) [{n.choice}]"
+                )
+            elif isinstance(n, Repartition):
+                how = (
+                    f"hash {L.pretty(n.keyexpr)}"
+                    if n.kind == "hash"
+                    else n.kind
+                )
+                lines.append(f"Repartition {n.out} <- {n.source} ({how})")
             else:  # pragma: no cover
                 lines.append(repr(n))
         lines.append(f"Result {self.result}")
@@ -176,80 +240,218 @@ class Plan:
 
 
 class PlanShardError(Exception):
-    """The plan cannot be realized under the sharded executor."""
+    """The plan cannot be realized under the sharded executor.  Since the
+    partitioning-property legalizer replaced the taint-bit analysis this is
+    reserved for genuinely unknown node kinds — sharded builds, probes of
+    sharded dictionaries, and sharded groupjoins/reduce-lookups all legalize
+    into Repartition/Exchange nodes instead of raising."""
 
 
-def shard(plan: Plan, sharded_rels: Tuple[str, ...]) -> Tuple[Plan, Dict[str, bool]]:
-    """Rewrite a single-shard plan for sharded execution: every dictionary
-    built from a *sharded* source becomes a per-shard dictionary followed by
-    an ``Exchange`` that merges the partial dictionaries by key-hash routing
-    (DESIGN.md §4).  Dictionaries built from replicated sources are identical
-    on every shard and need no exchange.
+def _frame_key(var: str, col: Optional[str] = None) -> L.Expr:
+    """Partitioning witness for a frame bound by ``Scan(var)``: the key of a
+    dict scan (``var.key``) or a named column (``var.key.col``)."""
+    key = L.FieldAccess(L.Var(var), "key")
+    return key if col is None else L.FieldAccess(key, col)
 
-    Returns (plan', taint) where ``taint[sym]`` says whether the symbol's data
-    is shard-local.  Raises :class:`PlanShardError` for plans where a sharded
-    dictionary is probed downstream (would need co-partitioned probes — not
-    realized yet) or a Project output from sharded data is re-scanned (fine)
-    — only the probe case is rejected.
+
+def legalize(
+    plan: Plan, sharded_rels: Tuple[str, ...]
+) -> Tuple[Plan, Dict[str, Partitioning]]:
+    """Rewrite a single-shard plan for sharded execution by tracking a
+    partitioning property per symbol and inserting explicit conversion nodes
+    (DESIGN.md §4).  Returns ``(plan', props)``.
+
+    * A dictionary built from sharded rows is *placed*: ``partition`` (the
+      default) hash-repartitions the build rows by the build key and builds
+      per-shard slices; ``broadcast`` (``DictChoice.placement``) all-gathers
+      the rows and builds a replicated copy.  The choice is made by synthesis
+      under Δ_net, not hard-coded here.
+    * A probe of a hash-partitioned dictionary repartitions the probe side to
+      match (co-partitioned join) — unless the probe frame is already
+      partitioned on the same key expression (elided), or replicated (each
+      shard's found-mask then selects exactly the keys it owns: a
+      "mask-partitioned" probe needing no data movement).
+    * ``GroupBy``/``GroupJoin`` over sharded rows keep the per-shard partial
+      + shuffle-``Exchange`` form, but the Exchange is *elided* when the
+      input frame is already hash-partitioned on the group key.
+    * Scalar ``Reduce`` results over sharded (or mask-partitioned) rows get
+      an all-reduce ``Exchange``.
     """
-    taint: Dict[str, bool] = {}
+    props: Dict[str, Partitioning] = {}
     out_nodes: List[Node] = []
+    fresh_ctr = [0]
 
-    def src_taint(sym: str) -> bool:
-        return taint.get(sym, False)
+    def prop(sym: str) -> Partitioning:
+        return props.get(sym, Replicated())
+
+    def emit(n: Node) -> None:
+        out_nodes.append(n)
+
+    def repartitioned(frame: str, keyexpr: L.Expr) -> str:
+        """Frame symbol holding ``frame``'s rows hash-routed by ``keyexpr``."""
+        p = prop(frame)
+        if isinstance(p, HashPartitioned) and p.key == keyexpr:
+            return frame
+        out = f"{frame}#part{fresh_ctr[0]}"
+        fresh_ctr[0] += 1
+        emit(Repartition(out, source=frame, kind="hash", keyexpr=keyexpr))
+        props[out] = HashPartitioned(keyexpr)
+        return out
+
+    def broadcasted(frame: str) -> str:
+        """Frame symbol holding ``frame``'s rows gathered onto every shard."""
+        if isinstance(prop(frame), Replicated):
+            return frame
+        out = f"{frame}#bcast{fresh_ctr[0]}"
+        fresh_ctr[0] += 1
+        emit(Repartition(out, source=frame, kind="broadcast"))
+        props[out] = Replicated()
+        return out
+
+    def copartitioned(frame: str, keyexpr: L.Expr) -> bool:
+        p = prop(frame)
+        return isinstance(p, HashPartitioned) and p.key == keyexpr
+
+    def partial_with_exchange(n: Node) -> None:
+        local = _rename(n, n.out + "#local")
+        emit(local)
+        props[local.out] = ShardedArbitrary()
+        emit(Exchange(n.out, source=local.out, kind="shuffle", choice=n.choice))
+        props[n.out] = HashPartitioned()  # merged slices own their key hashes
 
     for n in plan.nodes:
         if isinstance(n, Scan):
-            taint[n.out] = n.source in sharded_rels or src_taint(n.source)
-            out_nodes.append(n)
-        elif isinstance(n, (Select, Project)):
-            taint[n.out] = src_taint(n.source)
-            out_nodes.append(n)
-        elif isinstance(n, HashBuild):
-            if src_taint(n.source):
-                raise PlanShardError(
-                    f"index {n.out} is built from sharded data; probes would "
-                    "need co-partitioning (unsupported)"
-                )
-            taint[n.out] = False
-            out_nodes.append(n)
-        elif isinstance(n, HashProbe):
-            if src_taint(n.build):
-                raise PlanShardError(f"probe of sharded dictionary {n.build}")
-            taint[n.out] = src_taint(n.source)
-            out_nodes.append(n)
-        elif isinstance(n, (GroupBy, GroupJoin)):
-            if isinstance(n, GroupJoin) and src_taint(n.build):
-                raise PlanShardError(f"groupjoin against sharded dictionary {n.build}")
-            if src_taint(n.source):
-                # per-shard partial dictionary + shuffle exchange
-                local = _rename(n, n.out + "#local")
-                out_nodes.append(local)
-                out_nodes.append(
-                    Exchange(n.out, source=local.out, kind="shuffle", choice=n.choice)
-                )
-                taint[local.out] = True
-                taint[n.out] = True  # result slices live per shard (disjoint keys)
+            if n.source in sharded_rels:
+                props[n.out] = ShardedArbitrary(n.source)
             else:
-                out_nodes.append(n)
-                taint[n.out] = False
+                p = prop(n.source)
+                if isinstance(p, HashPartitioned):
+                    # dict scan / derived relation: partitioned-by-own-key
+                    # becomes partitioned on the bound variable's key expr
+                    col = p.key if isinstance(p.key, str) else None
+                    props[n.out] = HashPartitioned(_frame_key(n.var, col))
+                else:
+                    props[n.out] = p
+            emit(n)
+        elif isinstance(n, Select):
+            props[n.out] = prop(n.source)  # masking moves no rows
+            emit(n)
+        elif isinstance(n, Project):
+            p = prop(n.source)
+            if isinstance(p, HashPartitioned):
+                # partitioned on a projected column iff some output column is
+                # exactly the partitioning expression
+                cols = [a for a, fx in n.fields if fx == p.key]
+                props[n.out] = (
+                    HashPartitioned(cols[0]) if cols else ShardedArbitrary()
+                )
+            else:
+                props[n.out] = p
+            emit(n)
+        elif isinstance(n, HashBuild):
+            p = prop(n.source)
+            if isinstance(p, Replicated):
+                props[n.out] = Replicated()
+                emit(n)
+            elif copartitioned(n.source, n.keyexpr):
+                props[n.out] = HashPartitioned()
+                emit(n)
+            elif getattr(n.choice, "placement", "") == "broadcast":
+                emit(_resrc(n, broadcasted(n.source)))
+                props[n.out] = Replicated()
+            else:  # co-partitioned placement (default)
+                emit(_resrc(n, repartitioned(n.source, n.keyexpr)))
+                props[n.out] = HashPartitioned()
+        elif isinstance(n, HashProbe):
+            bp = prop(n.build)
+            if isinstance(bp, Replicated):
+                props[n.out] = prop(n.source)
+                emit(n)
+            elif isinstance(prop(n.source), Replicated):
+                # replicated probe rows against a partitioned dict: the local
+                # found-mask keeps exactly the keys this shard owns — the
+                # result is hash-partitioned with zero data movement
+                props[n.out] = HashPartitioned(n.keyexpr)
+                emit(n)
+            else:
+                src = (
+                    n.source
+                    if copartitioned(n.source, n.keyexpr)
+                    else repartitioned(n.source, n.keyexpr)
+                )
+                props[n.out] = HashPartitioned(n.keyexpr)
+                emit(_resrc(n, src))
+        elif isinstance(n, GroupBy):
+            p = prop(n.source)
+            if isinstance(p, Replicated):
+                props[n.out] = Replicated()
+                emit(n)
+            elif copartitioned(n.source, n.keyexpr):
+                # input already owns its group keys: elide the Exchange
+                props[n.out] = HashPartitioned()
+                emit(n)
+            else:
+                partial_with_exchange(n)
+        elif isinstance(n, GroupJoin):
+            # probes ``build`` and aggregates by the *same* key expression
+            bp = prop(n.build)
+            p = prop(n.source)
+            if isinstance(bp, Replicated):
+                if isinstance(p, Replicated):
+                    props[n.out] = Replicated()
+                    emit(n)
+                elif copartitioned(n.source, n.keyexpr):
+                    props[n.out] = HashPartitioned()
+                    emit(n)
+                else:
+                    partial_with_exchange(n)
+            else:
+                # partitioned build: align the probe side (or ride the
+                # mask-partition of a replicated frame) — the aggregate is
+                # then disjoint by key and needs no Exchange
+                if isinstance(p, Replicated) or copartitioned(
+                    n.source, n.keyexpr
+                ):
+                    src = n.source
+                else:
+                    src = repartitioned(n.source, n.keyexpr)
+                props[n.out] = HashPartitioned()
+                emit(_resrc(n, src))
         elif isinstance(n, Reduce):
-            if n.lookup_sym is not None and src_taint(n.lookup_sym):
-                raise PlanShardError(f"reduce lookup of sharded dictionary {n.lookup_sym}")
-            out_nodes.append(n)
-            if src_taint(n.source):
-                out_nodes.append(Exchange(n.out + "#sum", source=n.out, kind="allreduce"))
-            taint[n.out] = False  # all-reduced: replicated scalar
-        elif isinstance(n, Exchange):
-            out_nodes.append(n)
-            taint[n.out] = True
+            src = n.source
+            lp = (
+                prop(n.lookup_sym) if n.lookup_sym is not None else Replicated()
+            )
+            if isinstance(lp, HashPartitioned) and not isinstance(
+                prop(src), Replicated
+            ):
+                # align sharded rows with the partitioned dictionary — a
+                # no-op when already co-partitioned on the lookup key;
+                # replicated rows ride the found-mask instead
+                src = repartitioned(src, n.lookup_key)
+            emit(_resrc(n, src))
+            sharded_rows = not isinstance(prop(src), Replicated)
+            mask_partitioned = isinstance(lp, HashPartitioned)
+            if sharded_rows or mask_partitioned:
+                emit(Exchange(n.out + "#sum", source=n.out, kind="allreduce"))
+            props[n.out] = Replicated()  # all-reduced scalar record
+        elif isinstance(n, (Exchange, Repartition)):
+            raise PlanShardError(f"plan already legalized at {n.out}")
         else:  # pragma: no cover
             raise PlanShardError(f"unknown node {type(n).__name__}")
 
-    return Plan(tuple(out_nodes), plan.result, plan.choices), taint
+    return Plan(tuple(out_nodes), plan.result, plan.choices), props
 
 
 def _rename(n: Node, new_out: str) -> Node:
     import dataclasses
 
     return dataclasses.replace(n, out=new_out)
+
+
+def _resrc(n: Node, new_source: str) -> Node:
+    import dataclasses
+
+    if n.source == new_source:  # type: ignore[attr-defined]
+        return n
+    return dataclasses.replace(n, source=new_source)

@@ -49,9 +49,15 @@ class SynthesisResult:
 # ---------------------------------------------------------------------------
 
 
-def dependency_order(expr: L.Expr) -> Tuple[str, ...]:
+def dependency_order(
+    expr: L.Expr, log: Optional[List[str]] = None
+) -> Tuple[str, ...]:
     """Topological order of dictionary symbols: if building/filling symbol B
-    probes symbol A, then A precedes B.  Ties broken by program order."""
+    probes symbol A, then A precedes B.  Ties broken by program order.
+
+    On a dependency cycle the remaining symbols fall back to program order;
+    the cycle is recorded in ``log`` (surfaced through
+    ``SynthesisResult.log``) so synthesis explains stay trustworthy."""
     syms = list(L.dict_symbols(expr))
     deps: Dict[str, set] = {s: set() for s in syms}
 
@@ -88,6 +94,15 @@ def dependency_order(expr: L.Expr) -> Tuple[str, ...]:
                 remaining.remove(s)
                 progress = True
         if not progress:  # cycle — fall back to program order
+            cycle = {
+                s: sorted(deps[s] - set(out)) for s in remaining
+            }
+            if log is not None:
+                log.append(
+                    "dependency cycle: "
+                    + "; ".join(f"{s} <- {', '.join(d)}" for s, d in cycle.items())
+                    + " — falling back to program order"
+                )
             out.extend(remaining)
             break
     return tuple(out)
@@ -98,14 +113,42 @@ def dependency_order(expr: L.Expr) -> Tuple[str, ...]:
 # ---------------------------------------------------------------------------
 
 
+def _placeable_syms(
+    expr: L.Expr,
+    sigma: CardModel,
+    delta: DictCostModel,
+    net,
+    sharded_rels: Optional[Tuple[str, ...]],
+) -> Optional[set]:
+    """Symbols whose distributed *placement* is a real degree of freedom:
+    index/partition dictionaries (nested values — the Fig. 6a build side,
+    probed downstream) that are built, transitively, from a sharded base
+    relation.  Dictionaries built purely from replicated inputs stay
+    replicated under the legalizer, so enumerating placements for them would
+    only double the search and stamp meaningless labels on the choices."""
+    if net is None or net.n_shards <= 1:
+        return None
+    base = infer_cost(expr, sigma, delta)
+    return {
+        name
+        for name, meta in base.dict_meta.items()
+        if meta.nested
+        and (sharded_rels is None or meta.build_rels & set(sharded_rels))
+    }
+
+
 def _candidates_for(
-    sym: str, expr: L.Expr, candidates: Sequence[str]
+    sym: str, expr: L.Expr, candidates: Sequence[str], placeable=None
 ) -> List[DictChoice]:
-    """ds × hinted variants.  ``hinted`` is only meaningful for sort-based
-    implementations, and only when the program actually contains hinted sites
-    for this symbol *or* the cost model is allowed to consider the merge form
-    (the lowering can legalise hinted probes whenever the probe sequence is
-    sorted — the `ordered` flag in Δ prices exactly that)."""
+    """ds × hinted (× placement) variants.  ``hinted`` is only meaningful for
+    sort-based implementations, and only when the program actually contains
+    hinted sites for this symbol *or* the cost model is allowed to consider
+    the merge form (the lowering can legalise hinted probes whenever the
+    probe sequence is sorted — the `ordered` flag in Δ prices exactly that).
+    Under a distributed cost realization, symbols in ``placeable``
+    additionally enumerate their placement — broadcast-build vs
+    co-partitioned — so Alg. 1 decides implementation and placement jointly.
+    """
     out = []
     for ds in candidates:
         if ds.startswith("st"):
@@ -113,6 +156,12 @@ def _candidates_for(
             out.append(DictChoice(ds, hinted=False))
         else:
             out.append(DictChoice(ds))
+    if placeable is not None and sym in placeable:
+        out = [
+            DictChoice(c.ds, c.hinted, placement)
+            for c in out
+            for placement in ("partition", "broadcast")
+        ]
     return out
 
 
@@ -133,14 +182,15 @@ def synthesize(
     to cost the *distributed* realization — each candidate then also pays the
     Exchange the sharded executor would insert for its dictionary, so choices
     account for shuffle volume, not just local op costs."""
-    order = dependency_order(expr)
+    log: List[str] = []
+    order = dependency_order(expr, log=log)
+    placeable = _placeable_syms(expr, sigma, delta, net, sharded_rels)
     gamma: GammaDict = {}
     evaluated = 0
-    log: List[str] = []
     for sym in order:
         best: Optional[DictChoice] = None
         best_cost = float("inf")
-        for choice in _candidates_for(sym, expr, candidates):
+        for choice in _candidates_for(sym, expr, candidates, placeable):
             trial = dict(gamma)
             trial[sym] = choice
             res = infer_cost(
@@ -167,7 +217,8 @@ def synthesize_exhaustive(
 ) -> SynthesisResult:
     """Exact search over the full cross product — exponential; tests only."""
     syms = L.dict_symbols(expr)
-    per_sym = [_candidates_for(s, expr, candidates) for s in syms]
+    placeable = _placeable_syms(expr, sigma, delta, net, sharded_rels)
+    per_sym = [_candidates_for(s, expr, candidates, placeable) for s in syms]
     best: Optional[GammaDict] = None
     best_res: Optional[CostResult] = None
     evaluated = 0

@@ -306,15 +306,17 @@ def execute_plan(
     db: Dict[str, "Table"],
     sigma=None,
     exchange_impl=None,
+    repartition_impl=None,
     allow_sorted: bool = True,
 ):
     """Run a physical plan (``repro.core.plan``) against a database.
 
     ``exchange_impl`` realizes Exchange nodes (the sharded executor passes the
-    all-to-all merge); on a single shard Exchange is the identity.
-    ``allow_sorted=False`` disables the sorted-input/merge fast paths —
-    the sharded executor uses it because hinted kernels assume a global sort
-    the shards no longer have.
+    all-to-all merge) and ``repartition_impl`` realizes Repartition nodes
+    (hash-route / all-gather of frame rows); on a single shard both are the
+    identity.  ``allow_sorted=False`` disables the sorted-input/merge fast
+    paths — the sharded executor uses it because hinted kernels assume a
+    global sort the shards no longer have.
     """
     from repro.core import plan as P
     from repro.core.lower import compile_rowfn_frame
@@ -499,6 +501,12 @@ def execute_plan(
                 col = _reduce_field(fx, f, node.lookup_var, lookup_vals, lanes)
                 total[name] = scalar_aggregate(f.primary, col)[0]
             refs[node.out] = total
+
+        elif isinstance(node, P.Repartition):
+            if repartition_impl is not None:
+                env[node.out] = repartition_impl(node, frame_of(node.source))
+            else:  # single shard: identity (rows already all "here")
+                env[node.out] = env[node.source]
 
         elif isinstance(node, P.Exchange):
             if exchange_impl is not None:

@@ -506,6 +506,32 @@ QUERIES: Dict[str, Query] = {
     "q18": Query("q18", q18_llql, q18_run, q18_reference),
 }
 
+# The TPC-H fact tables: row-sharded by default under the distributed
+# executor; every dimension table is replicated.  With both fact tables
+# sharded, every query exercises the partitioning-property planner —
+# Q3/Q18 build dictionaries from sharded orders, Q5/Q9 additionally probe
+# those hash-partitioned dictionaries from sharded lineitem chains.
+FACT_RELS: Tuple[str, ...] = ("lineitem", "orders")
+
+
+def run_sharded(
+    qname: str,
+    db: Dict[str, Table],
+    choices: GammaDict,
+    mesh,
+    axis,
+    shard_rels: Tuple[str, ...] = FACT_RELS,
+) -> Dict[int, np.ndarray]:
+    """Distributed twin of ``Query.run``: compile the same LLQL under the
+    same choices and execute under ``shard_map`` with ``shard_rels``
+    row-sharded over the mesh axis."""
+    from repro.core.lower import compile as compile_plan
+    from repro.exec import distributed as D
+
+    plan = compile_plan(QUERIES[qname].llql(), choices)
+    out = D.execute_plan_sharded(plan, db, mesh, axis, shard_rels=shard_rels)
+    return out.items_np()
+
 
 def synthesize_choices(
     qname: str, db: Dict[str, Table], delta, extra_syms: Tuple[str, ...] = ()

@@ -70,6 +70,36 @@ def test_groupjoin_dependency_order():
     assert order.index("Sd") < order.index("Agg")
 
 
+def _cyclic_prog():
+    """A(k) += B(k) and B(k) += A(k) in one loop: a genuine dependency
+    cycle between the two dictionaries."""
+    r = L.Var("r")
+    k = r.key.get("K")
+    body = L.For(
+        "r",
+        L.Input("R"),
+        L.seq(
+            L.DictUpdate(L.Var("A"), k, L.DictLookup(L.Var("B"), k)),
+            L.DictUpdate(L.Var("B"), k, L.DictLookup(L.Var("A"), k)),
+        ),
+    )
+    return L.let("A", L.DictNew(None), L.let("B", L.DictNew(None), body))
+
+
+def test_dependency_cycle_recorded_in_log():
+    """The fall-back to program order on a cycle is no longer silent: the
+    cycle is reported through the caller-visible log."""
+    prog = _cyclic_prog()
+    log = []
+    order = dependency_order(prog, log=log)
+    assert set(order) == {"A", "B"}  # still covers every symbol
+    assert log and "cycle" in log[0] and "A" in log[0] and "B" in log[0]
+    # and it surfaces in the synthesis explain
+    res = synthesize(prog, _sigma(), DELTA)
+    assert any("cycle" in line for line in res.log)
+    assert set(res.choices) == {"A", "B"}
+
+
 def test_cost_monotone_in_rows():
     small = infer_cost(GB, _sigma(rows=10_000), DELTA).total
     large = infer_cost(GB, _sigma(rows=10_000_000), DELTA).total

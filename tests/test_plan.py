@@ -110,36 +110,138 @@ def test_choices_parameterize_plan_not_structure():
 
 
 # ---------------------------------------------------------------------------
-# sharded rewrite
+# partitioning-property legalization
 # ---------------------------------------------------------------------------
 
 
-def test_shard_rewrite_inserts_exchange():
+def test_legalize_inserts_exchange():
     plan = compile_plan(QUERIES["q1"].llql(), {})
-    splan, taint = P.shard(plan, ("lineitem",))
+    splan, props = P.legalize(plan, ("lineitem",))
     kinds = [type(n).__name__ for n in splan.nodes]
     assert kinds == ["Scan", "Select", "GroupBy", "Exchange"]
     ex = splan.nodes[-1]
     assert isinstance(ex, P.Exchange) and ex.out == "Agg" and ex.kind == "shuffle"
     assert splan.nodes[2].out == "Agg#local"
-    assert taint["Agg"]
+    assert props["Agg"] == P.HashPartitioned()  # merged slices own their keys
 
 
-def test_shard_rewrite_replicated_build_needs_no_exchange():
+def test_legalize_replicated_build_needs_no_exchange():
     plan = compile_plan(QUERIES["q3"].llql(), {})
-    splan, taint = P.shard(plan, ("lineitem",))
+    splan, props = P.legalize(plan, ("lineitem",))
     # OD is built from (replicated) orders: no exchange; Agg gets one
-    assert not taint["OD"]
+    assert props["OD"] == P.Replicated()
     ex = [n for n in splan.nodes if isinstance(n, P.Exchange)]
     assert len(ex) == 1 and ex[0].out == "Agg"
+    assert not any(isinstance(n, P.Repartition) for n in splan.nodes)
 
 
-def test_shard_rewrite_rejects_sharded_probe():
+def test_legalize_copartitions_sharded_probe():
+    """The previously rejected shape: sharding orders makes the OD index
+    shard-local.  The legalizer now hash-repartitions the build rows by the
+    join key instead of raising, and the QtyAgg dict-scan probe — already
+    hash-partitioned by the shuffle Exchange on the same key — needs no
+    movement at all (co-partitioned join)."""
     plan = compile_plan(QUERIES["q18"].llql(), {})
-    # sharding orders makes the OD index shard-local → probes need
-    # co-partitioning, which the executor does not realize yet
+    splan, props = P.legalize(plan, ("lineitem", "orders"))
+    rep = [n for n in splan.nodes if isinstance(n, P.Repartition)]
+    assert len(rep) == 1 and rep[0].kind == "hash"  # OD build rows only
+    assert props["OD"] == P.HashPartitioned()
+    # probe side (QtyAgg scan) is co-partitioned: the HashProbe's source is
+    # NOT a repartition output
+    probe = next(n for n in splan.nodes if isinstance(n, P.HashProbe))
+    assert probe.source not in {r.out for r in rep}
+    # Big aggregates by the partition key: its Exchange is elided
+    ex_outs = {n.out for n in splan.nodes if isinstance(n, P.Exchange)}
+    assert "Big" not in ex_outs and "QtyAgg" in ex_outs
+    assert props["Big"] == P.HashPartitioned()
+
+
+def test_legalize_broadcast_placement():
+    """DictChoice.placement="broadcast" gathers the sharded build rows
+    instead of co-partitioning — the probe side then stays local."""
+    plan = compile_plan(
+        QUERIES["q18"].llql(),
+        {"OD": DictChoice("ht_linear", placement="broadcast")},
+    )
+    splan, props = P.legalize(plan, ("lineitem", "orders"))
+    rep = [n for n in splan.nodes if isinstance(n, P.Repartition)]
+    assert len(rep) == 1 and rep[0].kind == "broadcast"
+    assert props["OD"] == P.Replicated()
+
+
+def test_legalize_chain_q5_q9():
+    """Fact-table join chains legalize into co-partitioned probes: the OD
+    index is repartitioned by orderkey and the sharded probe stream is
+    repartitioned to match — no PlanShardError anywhere."""
+    for qname in ("q5", "q9"):
+        plan = compile_plan(QUERIES[qname].llql(), {})
+        splan, props = P.legalize(plan, ("lineitem", "orders"))
+        rep = [n for n in splan.nodes if isinstance(n, P.Repartition)]
+        assert len(rep) == 2 and all(r.kind == "hash" for r in rep), qname
+        assert props["OD"] == P.HashPartitioned(), qname
+        # dimension indexes stay replicated
+        for sym in ("SN",):
+            assert props[sym] == P.Replicated(), qname
+
+
+def test_legalize_describe_golden_q18():
+    """The distributed realization is pinned by the describe() rendering —
+    Exchange carries its choice, Repartition its kind and key."""
+    plan = compile_plan(QUERIES["q18"].llql(), {})
+    splan, _ = P.legalize(plan, ("lineitem", "orders"))
+    assert splan.describe() == "\n".join(
+        [
+            "Scan %0 <- lineitem as l",
+            "GroupBy QtyAgg#local <- %0 [ht_linear] lanes=_0",
+            "Exchange QtyAgg <- QtyAgg#local (shuffle) [ht_linear]",
+            "Scan %1 <- orders as o",
+            "Repartition %1#part0 <- %1 (hash o.key.orderkey)",
+            "HashBuild OD <- %1#part0 [ht_linear]",
+            "Scan %2 <- QtyAgg as g",
+            "Select %3 <- %2",
+            "HashProbe %4 <- %3 ⋈ OD as oo",
+            "GroupBy Big <- %4 [ht_linear] lanes=qty,totalprice",
+            "Result Big",
+        ]
+    )
+
+
+def test_legalize_reduce_lookup_realigns_mispartitioned_frame():
+    """A frame hash-partitioned on one key feeding a Reduce whose
+    interleaved lookup targets a dictionary partitioned on a *different*
+    key must be repartitioned on the lookup key — probing locally would
+    silently drop the rows owned by other shards."""
+    from repro.core import llql as L
+
+    def key(var, col):
+        return L.FieldAccess(L.FieldAccess(L.Var(var), "key"), col)
+
+    nodes = (
+        P.Scan("%0", source="R", var="r"),
+        P.HashBuild("IA", source="%0", keyexpr=key("r", "a"), choice=DictChoice()),
+        P.HashBuild("IB", source="%0", keyexpr=key("r", "b"), choice=DictChoice()),
+        P.Scan("%1", source="S", var="s"),
+        P.HashProbe("%2", source="%1", build="IA", keyexpr=key("s", "a"), inner_var="x"),
+        P.Reduce(
+            "out", source="%2", fields=(("t", key("s", "m")),),
+            lookup_sym="IB", lookup_key=key("s", "b"), lookup_var="rb",
+        ),
+    )
+    splan, props = P.legalize(P.Plan(nodes, None), ("R", "S"))
+    red = next(n for n in splan.nodes if isinstance(n, P.Reduce))
+    rep = {n.out: n for n in splan.nodes if isinstance(n, P.Repartition)}
+    assert red.source in rep and rep[red.source].keyexpr == key("s", "b")
+    # and the partials still all-reduce
+    assert any(
+        isinstance(n, P.Exchange) and n.kind == "allreduce" for n in splan.nodes
+    )
+
+
+def test_legalize_rejects_double_legalization():
+    plan = compile_plan(QUERIES["q1"].llql(), {})
+    splan, _ = P.legalize(plan, ("lineitem",))
     with pytest.raises(P.PlanShardError):
-        P.shard(plan, ("orders",))
+        P.legalize(splan, ("lineitem",))
 
 
 # ---------------------------------------------------------------------------
@@ -183,6 +285,64 @@ def test_exchange_only_for_sharded_build_rels(db):
     )
     ex = {it.dict for it in res.items if it.op == "exchange"}
     assert ex == {"Agg"}  # OD builds from orders (replicated): no exchange
+
+
+def _fk_join_prog():
+    """Small sharded dimension index probed by a huge sharded fact stream:
+    the shape where broadcast-build vs co-partitioned placement trades wire
+    volume against the replicated build."""
+    from repro.core import llql as L
+
+    o, l, od = L.Var("o"), L.Var("l"), L.Var("od")
+    body = L.seq(
+        L.For(
+            "o",
+            L.Input("dim"),
+            L.DictUpdate(
+                L.Var("OD"), o.key.get("k"), L.DictNew(None, o.key, o.val)
+            ),
+        ),
+        L.For(
+            "l",
+            L.Input("fact"),
+            L.For(
+                "od",
+                L.DictLookup(L.Var("OD"), l.key.get("k")),
+                L.DictUpdate(L.Var("Agg"), od.key.get("g"), l.val * od.val),
+            ),
+        ),
+        L.Var("Agg"),
+    )
+    return L.let("Agg", L.DictNew(None), L.let("OD", L.DictNew(None), body))
+
+
+def test_placement_flips_with_bandwidth():
+    """Alg. 1 decides the per-dictionary placement jointly with the
+    implementation: on a fast interconnect the co-partitioned realization
+    wins (build work splits n_shards ways), on a slow one broadcasting the
+    small build side avoids shuffling the huge probe stream."""
+    from repro.core.cardinality import CardModel, ColumnStats, RelStats
+
+    sigma = CardModel(
+        {
+            "dim": RelStats(1000.0, {"k": ColumnStats(1000.0)}),
+            "fact": RelStats(1e6, {"k": ColumnStats(1000.0)}),
+        }
+    )
+    prog = _fk_join_prog()
+    delta = AnalyticCostModel()
+    fast = synthesize(
+        prog, sigma, delta, net=NetCostModel(n_shards=8, beta=1.0 / 1e12)
+    )
+    slow = synthesize(
+        prog, sigma, delta, net=NetCostModel(n_shards=8, beta=1.0 / 1e8)
+    )
+    assert fast.choices["OD"].placement == "partition"
+    assert slow.choices["OD"].placement == "broadcast"
+    # the aggregate dictionary is not an index: placement stays unset
+    assert fast.choices["Agg"].placement == ""
+    # and both placements were actually priced
+    assert any(it.site == "placement" for it in fast.cost.items)
 
 
 # ---------------------------------------------------------------------------
