@@ -1,8 +1,18 @@
-"""Shared benchmark utilities: timing protocol + CSV emission."""
+"""Shared benchmark utilities: timing protocol, CSV emission, and the ONE
+JSON record writer every BENCH_*.json goes through — a uniform schema
+
+    {"bench": ..., "git_sha": ..., "shards": N,
+     "results": {name: {"seconds": s, ...meta}},
+     "checks":  {name: {"value": v, "min": m} | {"value": v, "max": m}}}
+
+so the CI perf gate (``benchmarks.perf_gate``) can parse and compare any
+record against its committed baseline without per-benchmark glue."""
 from __future__ import annotations
 
+import json
+import subprocess
 import time
-from typing import Callable, List
+from typing import Callable, Dict, List, Optional
 
 import jax
 import numpy as np
@@ -31,3 +41,55 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
 
 def header() -> None:
     print("name,us_per_call,derived")
+
+
+def git_sha() -> str:
+    try:
+        return (
+            subprocess.run(
+                ["git", "rev-parse", "--short", "HEAD"],
+                capture_output=True, text=True, timeout=10,
+            ).stdout.strip()
+            or "unknown"
+        )
+    except Exception:
+        return "unknown"
+
+
+def write_record(
+    path: str,
+    bench: str,
+    results: Dict[str, Dict[str, object]],
+    shards: int = 1,
+    checks: Optional[Dict[str, Dict[str, float]]] = None,
+    **extra,
+) -> None:
+    """Write one BENCH_*.json perf record.  ``results`` maps a measurement
+    name to a dict that MUST carry ``seconds`` (the gated scalar) and may
+    carry free-form metadata; ``checks`` carries absolute assertions
+    (``{"value": v, "min": m}``) the gate enforces without a baseline."""
+    for name, entry in results.items():
+        if "seconds" not in entry:
+            raise ValueError(f"result {name!r} missing 'seconds'")
+    record = {
+        "bench": bench,
+        "git_sha": git_sha(),
+        "shards": shards,
+        "results": results,
+        **({"checks": checks} if checks else {}),
+        **extra,
+    }
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {path}")
+
+
+def rows_results() -> Dict[str, Dict[str, object]]:
+    """Convert the accumulated CSV ``ROWS`` into record entries — lets the
+    CSV-emitting micro benchmarks feed the same JSON schema."""
+    out: Dict[str, Dict[str, object]] = {}
+    for row in ROWS:
+        name, us, derived = row.split(",", 2)
+        out[name] = {"seconds": float(us) * 1e-6, "derived": derived}
+    return out

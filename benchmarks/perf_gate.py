@@ -1,0 +1,96 @@
+"""CI perf-regression gate over the uniform BENCH_*.json schema.
+
+    python -m benchmarks.perf_gate --current BENCH_tpch_dist.json \
+        --baseline benchmarks/baselines/BENCH_tpch_dist.json [--threshold 1.5]
+
+Two kinds of enforcement, both fatal on violation (exit 1):
+
+* **relative** — every result named in the baseline must run within
+  ``threshold ×`` its baseline ``seconds`` in the current record (results
+  new in the current record pass; results *missing* from it fail, so a
+  benchmark silently dropping a query can't sneak through);
+* **absolute**  — ``checks`` embedded in the current record
+  (``{"value": v, "min": m}`` / ``{"value": v, "max": m}``) are asserted
+  without needing a baseline — e.g. serve_bench's warm-over-cold
+  throughput ratio ≥ 10×.
+
+Baselines are committed under ``benchmarks/baselines/`` and refreshed
+deliberately (copy the new record over the baseline in the same PR that
+justifies the regression or win).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List
+
+
+def load(path: str) -> Dict:
+    with open(path) as f:
+        record = json.load(f)
+    if "results" not in record:
+        raise SystemExit(f"{path}: not a BENCH record (no 'results')")
+    return record
+
+
+def gate(current: Dict, baseline: Dict | None, threshold: float) -> List[str]:
+    failures: List[str] = []
+    if baseline is not None:
+        base_res = baseline["results"]
+        cur_res = current["results"]
+        for name, base in sorted(base_res.items()):
+            cur = cur_res.get(name)
+            if cur is None:
+                failures.append(f"{name}: present in baseline but not measured")
+                continue
+            b, c = float(base["seconds"]), float(cur["seconds"])
+            ratio = c / b if b > 0 else float("inf")
+            status = "FAIL" if ratio > threshold else "ok"
+            print(
+                f"  {status:<4} {name:<40} {c*1e3:10.3f} ms"
+                f"  vs baseline {b*1e3:10.3f} ms  ({ratio:.2f}x)"
+            )
+            if ratio > threshold:
+                failures.append(
+                    f"{name}: {c*1e3:.3f} ms is {ratio:.2f}x baseline "
+                    f"{b*1e3:.3f} ms (threshold {threshold}x)"
+                )
+    for name, chk in sorted(current.get("checks", {}).items()):
+        v = float(chk["value"])
+        ok = True
+        bound = ""
+        if "min" in chk:
+            ok = ok and v >= float(chk["min"])
+            bound = f">= {chk['min']}"
+        if "max" in chk:
+            ok = ok and v <= float(chk["max"])
+            bound = (bound + " and " if bound else "") + f"<= {chk['max']}"
+        print(f"  {'ok' if ok else 'FAIL':<4} check {name}: {v:.3f} ({bound})")
+        if not ok:
+            failures.append(f"check {name}: {v:.3f} violates {bound}")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", required=True, help="freshly measured record")
+    ap.add_argument("--baseline", default=None, help="committed baseline record")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="max allowed seconds ratio current/baseline")
+    args = ap.parse_args()
+
+    current = load(args.current)
+    baseline = load(args.baseline) if args.baseline else None
+    print(f"perf gate: {current.get('bench')} @ {current.get('git_sha')}")
+    failures = gate(current, baseline, args.threshold)
+    if failures:
+        print(f"\nPERF GATE FAILED ({len(failures)}):", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        sys.exit(1)
+    print("perf gate passed")
+
+
+if __name__ == "__main__":
+    main()

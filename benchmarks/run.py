@@ -21,6 +21,11 @@ def main() -> None:
         "--only", default=None,
         help="comma list: micro,costmodel,groupby,tpch,indbml,moe",
     )
+    ap.add_argument(
+        "--out", default=None,
+        help="write the collected rows as a uniform BENCH_*.json record "
+        "(benchmarks.common.write_record schema, gate-parseable)",
+    )
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -61,6 +66,10 @@ def main() -> None:
         moe_dispatch_bench.run()
 
     print(f"# total {time.time()-t0:.1f}s, {len(common.ROWS)} rows", file=sys.stderr)
+    if args.out:
+        common.write_record(
+            args.out, "run:" + (args.only or "all"), common.rows_results()
+        )
 
 
 if __name__ == "__main__":

@@ -7,7 +7,10 @@
 3. collect Σ statistics from the data;
 4. load the installed dictionary cost model Δ (or the analytic prior);
 5. run Algorithm 1 — greedy per-dictionary implementation choice;
-6. execute the lowered vectorized plan and print the explain output.
+6. execute the lowered vectorized plan and print the explain output;
+7. bind-and-rerun: the query's date knob is a free ``?date`` Param, so a
+   fresh binding reuses the already-jitted executable — zero synthesis,
+   zero retracing (DESIGN.md §6).
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -60,6 +63,17 @@ def main() -> None:
     ref = q.reference(db)
     ok = all(abs(float(out[k][0]) - float(ref[k][0])) < 1e-1 for k in ref)
     print(f"   matches the numpy oracle: {ok}")
+
+    print("\n== bind-and-rerun: fresh ?date bindings, one compiled shape ...")
+    from repro.core.lower import compile as compile_plan
+    from repro.exec import engine as E
+
+    plan = compile_plan(prog, res.choices)
+    ex = E.cached_executable(plan, db, sigma=sigma)  # hit: q.run compiled it
+    for date in (0.05, 0.1, 0.2):
+        groups = len(ex(db, {"date": date}).items_np())
+        print(f"   ?date={date}: {groups} groups (traces={ex.trace_count})")
+    print(f"   executable cache: {E.exec_cache_stats()}")
 
 
 if __name__ == "__main__":

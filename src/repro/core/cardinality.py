@@ -126,13 +126,20 @@ class CardModel:
                 return min(1.0, a + b - a * b)
             cols = key_columns(cond, loopvar)
             konst = _const_of(cond)
-            if cond.op in ("<", "<=", ">", ">=") and cols and konst is not None:
-                cs = r.col(cols[0])
-                if cs.hi <= cs.lo:
+            if cond.op in ("<", "<=", ">", ">=") and cols:
+                if konst is not None:
+                    cs = r.col(cols[0])
+                    if cs.hi <= cs.lo:
+                        return 0.5
+                    frac = (float(konst) - cs.lo) / (cs.hi - cs.lo)
+                    frac = min(1.0, max(0.0, frac))
+                    return frac if cond.op in ("<", "<=") else 1.0 - frac
+                if _has_param(cond):
+                    # range predicate against a free Param: price at the
+                    # midpoint of the column bounds, so one synthesis covers
+                    # every binding (DESIGN.md §6) — the expected selectivity
+                    # of a uniformly drawn threshold over [lo, hi]
                     return 0.5
-                frac = (float(konst) - cs.lo) / (cs.hi - cs.lo)
-                frac = min(1.0, max(0.0, frac))
-                return frac if cond.op in ("<", "<=") else 1.0 - frac
             if cond.op == "==" and cols:
                 return 1.0 / max(1.0, r.col(cols[0]).distinct)
             if cond.op == "!=" and cols:
@@ -155,3 +162,7 @@ def _const_of(e: L.BinOp) -> Optional[float]:
         if isinstance(side, L.Const) and isinstance(side.value, (int, float)):
             return float(side.value)
     return None
+
+
+def _has_param(e: L.Expr) -> bool:
+    return any(isinstance(n, L.Param) for n in L.walk(e))

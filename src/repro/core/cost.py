@@ -496,7 +496,7 @@ class _Infer:
 
     # -- main walk -----------------------------------------------------------
     def infer(self, e: L.Expr, env: Dict[str, EnvEntry], calls: float, site: str, cond: float = 1.0) -> None:
-        if isinstance(e, (L.Const, L.Var, L.Input, L.Noop)):
+        if isinstance(e, (L.Const, L.Param, L.Var, L.Input, L.Noop)):
             return
         if isinstance(e, L.Seq):
             self.infer(e.first, env, calls, site)

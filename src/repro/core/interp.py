@@ -229,8 +229,13 @@ _BINOPS = {
 
 
 class Interp:
-    def __init__(self, database: Optional[Dict[str, Any]] = None) -> None:
+    def __init__(
+        self,
+        database: Optional[Dict[str, Any]] = None,
+        params: Optional[Dict[str, Any]] = None,
+    ) -> None:
         self.database = dict(database or {})
+        self.params = dict(params or {})
         self.dicts: Dict[str, LDict] = {}  # let-bound dicts, for stats readout
 
     def run(self, e: L.Expr) -> Any:
@@ -250,6 +255,10 @@ class Interp:
     def _eval(self, e: L.Expr, env: Dict[str, Any]) -> Any:
         if isinstance(e, L.Const):
             return e.value
+        if isinstance(e, L.Param):
+            if e.name not in self.params:
+                raise NameError(f"unbound parameter {e.name}")
+            return self.params[e.name]
         if isinstance(e, L.Var):
             if e.name not in env:
                 raise NameError(f"unbound variable {e.name}")
@@ -388,5 +397,9 @@ def relation(rows: List[Dict[str, Any]], name: str = "<rel>") -> LDict:
     return d
 
 
-def run(e: L.Expr, database: Optional[Dict[str, Any]] = None) -> Any:
-    return Interp(database).run(e)
+def run(
+    e: L.Expr,
+    database: Optional[Dict[str, Any]] = None,
+    params: Optional[Dict[str, Any]] = None,
+) -> Any:
+    return Interp(database, params=params).run(e)

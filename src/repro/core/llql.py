@@ -177,6 +177,18 @@ class Const(Expr):
 
 
 @dataclass(frozen=True)
+class Param(Expr):
+    """A free query parameter (``?name``): a scalar whose value is supplied at
+    execution time, not synthesis time.  Parameterization is what makes the
+    compile-once/execute-many split possible — synthesis and lowering see one
+    program per query *shape*, and ``Plan.bind`` substitutes fresh values
+    without re-synthesizing or re-tracing (DESIGN.md §6)."""
+
+    name: str
+    type: Type
+
+
+@dataclass(frozen=True)
 class Var(Expr):
     name: str
 
@@ -367,6 +379,37 @@ def dict_symbols(e: Expr) -> Tuple[str, ...]:
     return tuple(out)
 
 
+def params_of(e: Expr) -> Tuple["Param", ...]:
+    """Free parameters of a program, in first-occurrence order, deduped by
+    name.  A name appearing with two different types is a program error."""
+    seen: dict = {}
+    for n in walk(e):
+        if isinstance(n, Param):
+            prev = seen.get(n.name)
+            if prev is not None and prev != n:
+                raise TypeError(
+                    f"parameter {n.name!r} declared with conflicting types"
+                )
+            seen.setdefault(n.name, n)
+    return tuple(seen.values())
+
+
+def bind_params(e: Expr, bindings: dict) -> Expr:
+    """Substitute ``Param`` nodes with ``Const`` values — the const-baked
+    program a non-parameterized pipeline would have written.  Used by tests
+    to check bound plans against the one-program-per-value path; the fast
+    path never rewrites (``Plan.bind`` passes values at runtime)."""
+
+    def fn(n: Expr) -> Expr:
+        if isinstance(n, Param):
+            if n.name not in bindings:
+                raise KeyError(f"unbound parameter {n.name!r}")
+            return Const(bindings[n.name], n.type)
+        return n
+
+    return rewrite(e, fn)
+
+
 def annotate(e: Expr, choices: dict) -> Expr:
     """Replace the ``@ds`` annotation of each let-bound dictionary symbol with
     the synthesis choice (Alg. 1 line 9: ChooseDictDS)."""
@@ -394,6 +437,8 @@ def pretty(e: Expr, indent: int = 0) -> str:
 
     if isinstance(e, Const):
         return repr(e.value)
+    if isinstance(e, Param):
+        return f"?{e.name}"
     if isinstance(e, Var):
         return e.name
     if isinstance(e, Input):

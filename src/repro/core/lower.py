@@ -78,16 +78,24 @@ class _Unsupported(Exception):
     pass
 
 
-def compile_rowfn_frame(e: L.Expr, tables: Dict[str, Table]):
+def compile_rowfn_frame(
+    e: L.Expr, tables: Dict[str, Table], params: Optional[Dict[str, object]] = None
+):
     """Compile a row-level expression over one or more loop variables into a
     columnar jnp value; ``tables`` maps each bound variable to its (aligned)
     table.  ``v.key.a`` reads column ``a`` of v's table; ``v.val`` is the
     dictionary value lane for dict scans and the bag multiplicity otherwise;
-    ``v.key`` (whole) is the key column of a dict scan."""
+    ``v.key`` (whole) is the key column of a dict scan.  ``params`` maps free
+    ``L.Param`` names to runtime scalars — traced jit arguments on the cached
+    executable path, so rebinding never re-traces."""
 
     def go(x: L.Expr):
         if isinstance(x, L.Const):
             return x.value
+        if isinstance(x, L.Param):
+            if params is None or x.name not in params:
+                raise _Unsupported(f"unbound parameter ?{x.name}")
+            return params[x.name]
         if isinstance(x, L.FieldAccess):
             base = x.rec
             if (
@@ -347,7 +355,11 @@ def compile(
 
     stmt(expr)
     choice_items = tuple((s, choice_of(s)) for s in dict_ann)
-    return P.Plan(tuple(nodes), result[0], choice_items)
+    plan_params = tuple(
+        (p.name, p.type.kind if isinstance(p.type, L.ScalarT) else str(p.type))
+        for p in L.params_of(expr)
+    )
+    return P.Plan(tuple(nodes), result[0], choice_items, plan_params)
 
 
 def _value_fields(val: L.Expr) -> Tuple[Tuple[str, L.Expr], ...]:
@@ -420,6 +432,7 @@ def execute(
     db: Dict[str, Table],
     choices: Optional[GammaDict] = None,
     sigma: Optional[CardModel] = None,
+    params: Optional[Dict[str, object]] = None,
 ):
     """Compile and run.  Returns the program result: a ``DictResult`` for
     dictionary-valued programs, a ``Table`` for relation results, or a dict
@@ -429,13 +442,15 @@ def execute(
 
     try:
         plan = compile(expr, choices)
-        return E.execute_plan(plan, db, sigma=sigma)
+        return E.execute_plan(plan, db, sigma=sigma, params=params)
     except _Unsupported as why:
         warnings.warn(f"LLQL lowering fell back to interpreter: {why}")
-        return _interpret_fallback(expr, db)
+        return _interpret_fallback(expr, db, params=params)
 
 
-def _interpret_fallback(expr: L.Expr, db: Dict[str, Table]):
+def _interpret_fallback(
+    expr: L.Expr, db: Dict[str, Table], params: Optional[Dict[str, object]] = None
+):
     from . import interp as I
     import numpy as np
 
@@ -449,4 +464,4 @@ def _interpret_fallback(expr: L.Expr, db: Dict[str, Table]):
             if mask[i]
         ]
         pydb[name] = I.relation(rows, name)
-    return I.run(expr, pydb)
+    return I.run(expr, pydb, params=params)

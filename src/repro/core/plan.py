@@ -179,9 +179,40 @@ class Plan:
     nodes: Tuple[Node, ...]
     result: Optional[str]  # symbol of the program result (None: ref record)
     choices: Tuple[Tuple[str, DictChoice], ...] = ()
+    # free query parameters: (name, scalar kind) — row expressions inside
+    # nodes may reference them as ``L.Param``; executors receive the values
+    # at call time (as traced jit arguments, so rebinding never re-traces)
+    params: Tuple[Tuple[str, str], ...] = ()
 
     def choice_map(self) -> GammaDict:
         return dict(self.choices)
+
+    def param_names(self) -> Tuple[str, ...]:
+        return tuple(n for n, _ in self.params)
+
+    def bind(self, bindings: Optional[Dict[str, object]] = None, **kw) -> "BoundPlan":
+        """Attach parameter values — a cheap substitution, not a recompile.
+        The returned ``BoundPlan`` is accepted everywhere a ``Plan`` is; the
+        values are passed to the (cached) executable as runtime arrays."""
+        vals = {**(bindings or {}), **kw}
+        unknown = set(vals) - set(self.param_names())
+        if unknown:
+            raise KeyError(f"unknown parameters {sorted(unknown)}")
+        missing = set(self.param_names()) - set(vals)
+        if missing:
+            raise KeyError(f"missing bindings for {sorted(missing)}")
+        return BoundPlan(self, tuple(sorted(vals.items())))
+
+    def fingerprint(self) -> str:
+        """Stable structural identity of the plan — node tree (including row
+        expressions and baked constants), result symbol, per-dictionary
+        choices, and free parameters.  Two plans with equal fingerprints
+        compute the same function of (database, parameter values); the
+        executable cache keys on it."""
+        import hashlib
+
+        blob = repr((self.nodes, self.result, self.choices, self.params))
+        return hashlib.sha1(blob.encode()).hexdigest()
 
     def node_defining(self, sym: str) -> Optional[Node]:
         for n in self.nodes:
@@ -237,6 +268,18 @@ class Plan:
                 lines.append(repr(n))
         lines.append(f"Result {self.result}")
         return "\n".join(lines)
+
+
+@dataclass(frozen=True)
+class BoundPlan:
+    """A plan plus parameter values: the unit of a serving request.  Binding
+    is O(#params) — no synthesis, no lowering, no tracing happens here."""
+
+    plan: Plan
+    bindings: Tuple[Tuple[str, object], ...]
+
+    def binding_map(self) -> Dict[str, object]:
+        return dict(self.bindings)
 
 
 class PlanShardError(Exception):
@@ -440,7 +483,7 @@ def legalize(
         else:  # pragma: no cover
             raise PlanShardError(f"unknown node {type(n).__name__}")
 
-    return Plan(tuple(out_nodes), plan.result, plan.choices), props
+    return Plan(tuple(out_nodes), plan.result, plan.choices, plan.params), props
 
 
 def _rename(n: Node, new_out: str) -> Node:

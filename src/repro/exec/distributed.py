@@ -123,7 +123,7 @@ def broadcast_cols(
     return g(mask), {c: g(a) for c, a in cols.items()}
 
 
-def _plan_repartition(node, frame, *, axis: Axis):
+def _plan_repartition(node, frame, *, axis: Axis, params=None):
     """Realize a ``Repartition`` plan node on an executor Frame: move the
     rows of every bound loop variable's table together (they share row order
     and mask), preserving the variable bindings."""
@@ -140,7 +140,7 @@ def _plan_repartition(node, frame, *, axis: Axis):
         new_mask, new_flat = broadcast_cols(mask, flat, axis)
     else:
         keys = jnp.asarray(
-            compile_rowfn_frame(node.keyexpr, frame.tables), jnp.int32
+            compile_rowfn_frame(node.keyexpr, frame.tables, params), jnp.int32
         )
         new_mask, new_flat = repartition_cols(keys, mask, flat, axis)
     n_new = new_mask.shape[0]
@@ -243,6 +243,12 @@ def sharded_executor(
     from repro.data.table import Table
     from repro.exec import engine as E
 
+    if isinstance(plan, cplan.BoundPlan):
+        default_params = plan.binding_map()
+        plan = plan.plan
+    else:
+        default_params = None
+
     splan, props = cplan.legalize(plan, tuple(shard_rels))
     axes = (axis,) if isinstance(axis, str) else tuple(axis)
     n_sh = 1
@@ -270,7 +276,15 @@ def sharded_executor(
         mask_specs[rel] = spec
         sorted_meta[rel] = t.sorted_on
 
-    def run_local(cols, masks):
+    # parameter values are replicated scalars; stable dtypes keep the trace
+    param_specs = {name: PSpec() for name in plan.param_names()}
+    trace_counter = [0]
+
+    def coerce(params):
+        return E.coerce_bindings(plan, params, defaults=default_params)
+
+    def run_local(cols, masks, pvals):
+        trace_counter[0] += 1  # python side effect: fires per trace only
         local_db = {}
         for rel in cols:
             n = next(iter(cols[rel].values())).shape[0]
@@ -284,6 +298,7 @@ def sharded_executor(
             exchange_impl=functools.partial(_plan_exchange, axis=axis),
             repartition_impl=functools.partial(_plan_repartition, axis=axis),
             allow_sorted=False,
+            params=pvals,
         )
 
     result_node = (
@@ -292,21 +307,26 @@ def sharded_executor(
     if result_node is None or isinstance(result_node, cplan.Reduce):
         # scalar ref-record result: per-shard partials were already psum-ed
         # by the allreduce Exchange, so every shard holds the global answer
-        def body_scalar(cols, masks):
-            return run_local(cols, masks)
+        def body_scalar(cols, masks, pvals):
+            return run_local(cols, masks, pvals)
 
         wrapped_scalar = jax.jit(
             compat.shard_map(
                 body_scalar,
                 mesh=mesh,
-                in_specs=(col_specs, mask_specs),
+                in_specs=(col_specs, mask_specs, param_specs),
                 out_specs=PSpec(),
             )
         )
-        return lambda: wrapped_scalar(cols_in, masks_in)
 
-    def body(cols, masks):
-        ks, vs, valid = run_local(cols, masks).arrays()
+        def run_scalar(params=None):
+            return wrapped_scalar(cols_in, masks_in, coerce(params))
+
+        run_scalar.trace_counter = trace_counter
+        return run_scalar
+
+    def body(cols, masks, pvals):
+        ks, vs, valid = run_local(cols, masks, pvals).arrays()
         return ks, vs, valid.astype(jnp.int32)
 
     # a Replicated result dictionary is identical on every shard — take one
@@ -318,18 +338,19 @@ def sharded_executor(
         compat.shard_map(
             body,
             mesh=mesh,
-            in_specs=(col_specs, mask_specs),
+            in_specs=(col_specs, mask_specs, param_specs),
             out_specs=(spec_k, spec_v, spec_k),
         )
     )
     ds = getattr(result_node, "choice", None)
 
-    def run():
-        ks, vs, valid = wrapped(cols_in, masks_in)
+    def run(params=None):
+        ks, vs, valid = wrapped(cols_in, masks_in, coerce(params))
         return ShardedDictResult(
             ds.ds if ds is not None else "ht_linear", ks, vs, valid.astype(bool)
         )
 
+    run.trace_counter = trace_counter
     return run
 
 
@@ -339,11 +360,71 @@ def execute_plan_sharded(
     mesh: jax.sharding.Mesh,
     axis: Axis,
     shard_rels: Tuple[str, ...] = ("lineitem",),
+    params=None,
 ):
     """Build-and-run convenience over :func:`sharded_executor` (which see).
-    Callers timing repeated executions should hold on to the executor
-    instead — each ``execute_plan_sharded`` call re-traces."""
-    return sharded_executor(plan, db, mesh, axis, shard_rels)()
+    Callers timing repeated executions should hold on to the executor (or go
+    through :func:`cached_sharded_executor`) — each ``execute_plan_sharded``
+    call builds a fresh shard_map wrapper."""
+    return sharded_executor(plan, db, mesh, axis, shard_rels)(params)
+
+
+_SHARDED_CACHE: Dict[tuple, Tuple[object, object]] = {}
+_SHARDED_CACHE_STATS = {"hits": 0, "misses": 0}
+_SHARDED_CACHE_MAX = 32
+
+
+def cached_sharded_executor(
+    plan,
+    db,
+    mesh: jax.sharding.Mesh,
+    axis: Axis,
+    shard_rels: Tuple[str, ...] = ("lineitem",),
+):
+    """Distributed twin of ``engine.cached_executable``: the built (jitted
+    shard_map) executor is cached by (plan fingerprint, DictChoice tuple,
+    table schema, database identity, mesh shape, axis, sharded relations),
+    so repeated requests with fresh parameter bindings reuse the existing
+    trace.  Unlike the single-shard executable (which takes the arrays per
+    call), the sharded executor closes over the build-time column arrays —
+    so the db rides in the key by *identity*, held strongly and re-verified
+    on hit (a bare ``id()`` could alias a recycled address)."""
+    from repro.core import plan as cplan
+    from repro.exec import engine as E
+
+    bound = None
+    if isinstance(plan, cplan.BoundPlan):
+        bound = plan.binding_map()
+        plan = plan.plan
+    key = (
+        plan.fingerprint(),
+        plan.choices,
+        id(db),
+        E._db_signature(db),
+        tuple(sorted(mesh.shape.items())),
+        axis if isinstance(axis, str) else tuple(axis),
+        tuple(shard_rels),
+    )
+    hit = _SHARDED_CACHE.get(key)
+    if hit is not None and hit[0] is db:
+        _SHARDED_CACHE_STATS["hits"] += 1
+        run = hit[1]
+    else:
+        _SHARDED_CACHE_STATS["misses"] += 1
+        run = sharded_executor(plan, db, mesh, axis, shard_rels)
+        if len(_SHARDED_CACHE) >= _SHARDED_CACHE_MAX:
+            _SHARDED_CACHE.pop(next(iter(_SHARDED_CACHE)))
+        _SHARDED_CACHE[key] = (db, run)
+    if bound is None:
+        return run
+
+    # a BoundPlan shares the underlying plan's cached trace; its bindings
+    # become call-time defaults
+    def bound_run(params=None):
+        return run({**bound, **(params or {})})
+
+    bound_run.trace_counter = run.trace_counter
+    return bound_run
 
 
 # ---------------------------------------------------------------------------

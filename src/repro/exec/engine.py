@@ -308,6 +308,7 @@ def execute_plan(
     exchange_impl=None,
     repartition_impl=None,
     allow_sorted: bool = True,
+    params: Optional[Dict[str, object]] = None,
 ):
     """Run a physical plan (``repro.core.plan``) against a database.
 
@@ -316,10 +317,18 @@ def execute_plan(
     (hash-route / all-gather of frame rows); on a single shard both are the
     identity.  ``allow_sorted=False`` disables the sorted-input/merge fast
     paths — the sharded executor uses it because hinted kernels assume a
-    global sort the shards no longer have.
+    global sort the shards no longer have.  ``params`` supplies values for
+    the plan's free ``L.Param``s (a ``BoundPlan`` carries its own).
     """
     from repro.core import plan as P
-    from repro.core.lower import compile_rowfn_frame
+    from repro.core.lower import compile_rowfn_frame as _rowfn_frame
+
+    if isinstance(plan, P.BoundPlan):
+        params = {**plan.binding_map(), **(params or {})}
+        plan = plan.plan
+
+    def compile_rowfn_frame(x, tables):
+        return _rowfn_frame(x, tables, params)
 
     env: Dict[str, object] = {}
     refs: Dict[str, object] = {}
@@ -498,13 +507,17 @@ def execute_plan(
                 f = f.with_mask(found)
             total = {}
             for name, fx in node.fields:
-                col = _reduce_field(fx, f, node.lookup_var, lookup_vals, lanes)
+                col = _reduce_field(
+                    fx, f, node.lookup_var, lookup_vals, lanes, params=params
+                )
                 total[name] = scalar_aggregate(f.primary, col)[0]
             refs[node.out] = total
 
         elif isinstance(node, P.Repartition):
             if repartition_impl is not None:
-                env[node.out] = repartition_impl(node, frame_of(node.source))
+                env[node.out] = repartition_impl(
+                    node, frame_of(node.source), params=params
+                )
             else:  # single shard: identity (rows already all "here")
                 env[node.out] = env[node.source]
 
@@ -533,7 +546,7 @@ def execute_plan(
     return out
 
 
-def _reduce_field(fx, frame: Frame, lookup_var, lookup_vals, lane_names):
+def _reduce_field(fx, frame: Frame, lookup_var, lookup_vals, lane_names, params=None):
     """One field of a scalar-agg record; lookup-value accesses (``ra.m``)
     resolve into the looked-up value lanes by name (Fig. 7b's Ragg record)."""
     from repro.core import llql as L
@@ -554,9 +567,264 @@ def _reduce_field(fx, frame: Frame, lookup_var, lookup_vals, lane_names):
             return _UN[x.op](go(x.operand))
         if isinstance(x, L.Const):
             return x.value
-        return compile_rowfn_frame(x, frame.tables)
+        return compile_rowfn_frame(x, frame.tables, params)
 
     return jnp.asarray(go(fx), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# executable cache: compile once per query shape, execute many bindings
+# ---------------------------------------------------------------------------
+#
+# The paper pays synthesis + code generation once per query; with
+# parameterization (L.Param) the same split applies per query *shape*: the
+# whole plan execution is traced into ONE jitted function of
+# (columns, masks, parameter values), cached by
+# (plan fingerprint, DictChoice tuple, table schema, Σ signature).  A fresh
+# binding is just a new runtime scalar — zero synthesis, zero retracing
+# (DESIGN.md §6).
+
+
+@dataclass
+class PlanResult:
+    """Array view of a dictionary-valued plan result coming out of the jitted
+    executable (the backend table object never crosses the jit boundary)."""
+
+    ds: str
+    keys: jax.Array
+    vals: jax.Array
+    valid: jax.Array
+
+    def arrays(self) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        return self.keys, self.vals, self.valid
+
+    def items_np(self) -> Dict[int, np.ndarray]:
+        ks, vs, valid = map(np.asarray, (self.keys, self.vals, self.valid))
+        return {int(k): vs[i] for i, k in enumerate(ks) if valid[i]}
+
+    def size(self) -> int:
+        return int(np.asarray(self.valid).sum())
+
+
+_KIND_DTYPES = {
+    "int": jnp.int32,
+    "bool": jnp.bool_,
+    "double": jnp.float32,
+    "string": jnp.int32,  # dictionary-encoded
+}
+
+
+def coerce_bindings(plan, params, defaults=None):
+    """Validate a parameter binding against ``plan.params`` and coerce every
+    value to its declared scalar dtype — stable dtypes keep the jit avals
+    identical across rebinds.  Shared by the single-shard executable and the
+    sharded executor, so validation semantics can't drift."""
+    params = {**(defaults or {}), **(params or {})}
+    declared = dict(plan.params)
+    unknown = set(params) - set(declared)
+    if unknown:
+        raise KeyError(f"unknown parameters {sorted(unknown)}")
+    missing = set(declared) - set(params)
+    if missing:
+        raise KeyError(f"missing bindings for {sorted(missing)}")
+    return {
+        name: jnp.asarray(params[name], _KIND_DTYPES.get(kind, jnp.float32))
+        for name, kind in plan.params
+    }
+
+
+class Executable:
+    """A compiled query shape: one jitted function over (db arrays, params).
+
+    ``trace_count`` increments only when jax actually (re)traces the body —
+    the no-retrace-on-rebind guarantee is asserted against it in tests.  A
+    vmapped twin serves micro-batched execution (one stacked run for B
+    same-shape requests); each batch-size bucket traces once.
+    """
+
+    def __init__(self, plan, db: Dict[str, "Table"], sigma=None):
+        from repro.core import plan as P
+
+        self._default_params = None
+        if isinstance(plan, P.BoundPlan):
+            self._default_params = plan.binding_map()
+            plan = plan.plan
+        self.plan = plan
+        self.sigma = sigma
+        self.trace_count = 0
+        self.calls = 0
+        self._meta: Optional[Tuple[str, object]] = None
+        self._sorted_meta = {rel: t.sorted_on for rel, t in db.items()}
+
+        def _run(cols, masks, pvals):
+            self.trace_count += 1  # python side effect: fires per trace only
+            local = {}
+            for rel, rc in cols.items():
+                n = next(iter(rc.values())).shape[0]
+                local[rel] = Table(
+                    rc, n, mask=masks[rel], sorted_on=self._sorted_meta[rel]
+                )
+            out = execute_plan(self.plan, local, sigma=self.sigma, params=pvals)
+            if isinstance(out, DictResult):
+                self._meta = ("dict", out.ds)
+                return out.arrays()
+            if isinstance(out, Table):
+                self._meta = ("table", out.sorted_on)
+                return out.columns, out.live_mask()
+            if not isinstance(out, dict):
+                raise TypeError(
+                    f"executable cache supports dictionary, relation, and "
+                    f"scalar-record results, got {type(out).__name__}"
+                )
+            self._meta = ("refs", None)  # scalar ref record (plain pytree)
+            return out
+
+        self._fn = jax.jit(_run)
+        self._vfn = jax.jit(jax.vmap(_run, in_axes=(None, None, 0)))
+
+    # -- parameter handling -------------------------------------------------
+    def coerce_params(self, params: Optional[Dict[str, object]]):
+        return coerce_bindings(self.plan, params, defaults=self._default_params)
+
+    @staticmethod
+    def _db_arrays(db: Dict[str, "Table"]):
+        cols = {rel: dict(t.columns) for rel, t in db.items()}
+        masks = {rel: t.live_mask() for rel, t in db.items()}
+        return cols, masks
+
+    def _wrap(self, out):
+        kind, aux = self._meta
+        if kind == "dict":
+            return PlanResult(aux, *out)
+        if kind == "table":
+            c, m = out
+            n = next(iter(c.values())).shape[0]
+            return Table(dict(c), n, mask=m, sorted_on=aux)
+        return out
+
+    # -- execution ----------------------------------------------------------
+    def __call__(self, db: Dict[str, "Table"], params=None):
+        self.calls += 1
+        cols, masks = self._db_arrays(db)
+        return self._wrap(self._fn(cols, masks, self.coerce_params(params)))
+
+    def call_batched(self, db: Dict[str, "Table"], params_list):
+        """One stacked (vmapped) execution of B same-shape requests.  The
+        batch is padded to a power-of-two bucket so the number of distinct
+        traces stays logarithmic in the largest batch ever seen."""
+        if not params_list:
+            return []
+        if not self.plan.params:  # nothing to vmap over: one run fits all
+            one = self(db, None)
+            return [one for _ in params_list]
+        b = len(params_list)
+        bucket = 1
+        while bucket < b:
+            bucket *= 2
+        coerced = [self.coerce_params(p) for p in params_list]
+        coerced += [coerced[-1]] * (bucket - b)  # pad, outputs discarded
+        stacked = {
+            name: jnp.stack([c[name] for c in coerced])
+            for name in coerced[0]
+        }
+        self.calls += 1
+        cols, masks = self._db_arrays(db)
+        out = self._vfn(cols, masks, stacked)
+        return [
+            self._wrap(jax.tree.map(lambda a: a[i], out)) for i in range(b)
+        ]
+
+
+@dataclass
+class BoundExecutable:
+    """A cached executable viewed through a ``BoundPlan``'s bindings: the
+    underlying ``Executable`` (and its trace) is shared across bindings;
+    call-time params override the bound ones."""
+
+    executable: Executable
+    bindings: Dict[str, object]
+
+    def __call__(self, db, params=None):
+        return self.executable(db, {**self.bindings, **(params or {})})
+
+    def call_batched(self, db, params_list):
+        return self.executable.call_batched(
+            db, [{**self.bindings, **(p or {})} for p in params_list]
+        )
+
+    @property
+    def trace_count(self) -> int:
+        return self.executable.trace_count
+
+    @property
+    def plan(self):
+        return self.executable.plan
+
+
+_EXEC_CACHE: Dict[tuple, Executable] = {}
+_EXEC_CACHE_STATS = {"hits": 0, "misses": 0}
+_EXEC_CACHE_MAX = 64  # evict oldest beyond this (long-running servers)
+
+
+def _db_signature(db: Dict[str, "Table"]) -> tuple:
+    return tuple(
+        (
+            rel,
+            t.nrows,
+            t.mask is None,
+            t.sorted_on,
+            tuple((c, str(a.dtype)) for c, a in sorted(t.columns.items())),
+        )
+        for rel, t in sorted(db.items())
+    )
+
+
+def _sigma_signature(sigma) -> tuple:
+    if sigma is None:
+        return ()
+    return tuple(
+        (rel, st.rows, tuple(sorted((c, cs.distinct) for c, cs in st.columns.items())))
+        for rel, st in sorted(sigma.rels.items())
+    )
+
+
+def cached_executable(plan, db: Dict[str, "Table"], sigma=None):
+    """The executable cache: keyed by (plan fingerprint, DictChoice tuple,
+    table schema, Σ signature).  A repeated call with a fresh parameter
+    binding — or even a freshly re-compiled but structurally identical plan —
+    hits the already-jitted function.  A ``BoundPlan`` shares the underlying
+    plan's cache entry; its bindings ride along as call-time defaults."""
+    from repro.core import plan as P
+
+    bound = None
+    if isinstance(plan, P.BoundPlan):
+        bound = plan.binding_map()
+        plan = plan.plan
+    key = (
+        plan.fingerprint(),
+        plan.choices,
+        _db_signature(db),
+        _sigma_signature(sigma),
+    )
+    ex = _EXEC_CACHE.get(key)
+    if ex is None:
+        _EXEC_CACHE_STATS["misses"] += 1
+        ex = Executable(plan, db, sigma=sigma)
+        if len(_EXEC_CACHE) >= _EXEC_CACHE_MAX:
+            _EXEC_CACHE.pop(next(iter(_EXEC_CACHE)))
+        _EXEC_CACHE[key] = ex
+    else:
+        _EXEC_CACHE_STATS["hits"] += 1
+    return ex if bound is None else BoundExecutable(ex, bound)
+
+
+def exec_cache_stats() -> Dict[str, int]:
+    return dict(_EXEC_CACHE_STATS, entries=len(_EXEC_CACHE))
+
+
+def clear_exec_cache() -> None:
+    _EXEC_CACHE.clear()
+    _EXEC_CACHE_STATS.update(hits=0, misses=0)
 
 
 # ---------------------------------------------------------------------------

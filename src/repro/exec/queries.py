@@ -2,13 +2,18 @@
 
 Each query exposes:
 
-* ``llql()``   — the **complete** LLQL program (open ``@ds`` annotations).
-  This is the single source of truth: cost inference and synthesis read it,
-  and ``run`` is *derived* from it — there is no hand-written physical plan
-  anywhere (the pre-plan-IR engine kept a parallel ``run()`` per query);
-* ``run(db, choices)`` — ``lower.compile(llql(), choices)`` → physical plan
-  → ``engine.execute_plan``;
-* ``reference(db)`` — a numpy oracle for correctness tests.
+* ``llql()``   — the **complete** LLQL program (open ``@ds`` annotations),
+  with its selectivity knobs declared as free ``L.Param``s (Q1/Q3's date,
+  Q5's region, Q9's color, Q18's quantity threshold).  This is the single
+  source of truth: cost inference and synthesis read it — once per query
+  *shape*, covering every binding — and ``run`` is *derived* from it;
+* ``run(db, choices, **params)`` — ``lower.compile(llql(), choices)`` →
+  physical plan → ``engine.cached_executable``: the first call per (plan,
+  schema) jits the whole plan, later calls with fresh parameter bindings
+  reuse the trace (zero synthesis, zero retracing — DESIGN.md §6);
+* ``reference(db, **params)`` — a numpy oracle for correctness tests;
+* ``defaults`` — the binding used when a knob is not supplied (the former
+  baked-in constants).
 
 The queries are structurally faithful simplifications (same joins, same
 group-bys, same selectivity knobs); text/date predicates act on the encoded
@@ -73,23 +78,34 @@ def _stats_for(db: Dict[str, Table]):
     return _STATS_CACHE[key][1]
 
 
-def _run_llql(prog: L.Expr, db: Dict[str, Table], choices: GammaDict):
+def _run_llql(
+    prog: L.Expr,
+    db: Dict[str, Table],
+    choices: GammaDict,
+    params: Dict[str, object],
+):
     """The derived physical plan: compile the LLQL under the synthesized
-    choices and execute — the paper's generate-then-run, with the plan IR in
-    the middle."""
+    choices and execute through the executable cache — the paper's
+    generate-then-run, with compile-once/execute-many on top: recompiling
+    the same (program, choices) is a cache hit, and the binding is passed
+    as runtime scalars."""
     from repro.core.lower import compile as compile_plan
 
     plan = compile_plan(prog, choices)
-    out = E.execute_plan(plan, db, sigma=_stats_for(db))
-    return out.items_np()
+    ex = E.cached_executable(plan, db, sigma=_stats_for(db))
+    return ex(db, params).items_np()
 
 
 @dataclass
 class Query:
     name: str
     llql: Callable[[], L.Expr]
-    run: Callable[[Dict[str, Table], GammaDict], Dict[int, np.ndarray]]
-    reference: Callable[[Dict[str, Table]], Dict[int, np.ndarray]]
+    run: Callable[..., Dict[int, np.ndarray]]
+    reference: Callable[..., Dict[int, np.ndarray]]
+    defaults: Dict[str, object] = None  # free-Param fallback binding
+
+    def bind_defaults(self, params: Dict[str, object]) -> Dict[str, object]:
+        return {**(self.defaults or {}), **params}
 
 
 # ---------------------------------------------------------------------------
@@ -97,7 +113,7 @@ class Query:
 # ---------------------------------------------------------------------------
 
 
-def q1_llql(date: float = 0.9) -> L.Expr:
+def q1_llql() -> L.Expr:
     r = L.Var("r")
     key = r.key.get("returnflag") * _i(2) + r.key.get("linestatus")
     val = L.record(
@@ -113,13 +129,13 @@ def q1_llql(date: float = 0.9) -> L.Expr:
         "lineitem",
         grp=lambda rr: key,
         aggfn=lambda rr: val,
-        pred=lambda rr: rr.key.get("shipdate") <= _c(date),
+        pred=lambda rr: rr.key.get("shipdate") <= L.Param("date", L.DOUBLE),
         out="Agg",
     )
 
 
-def q1_run(db, choices):
-    return _run_llql(q1_llql(), db, choices)
+def q1_run(db, choices, **params):
+    return _run_llql(q1_llql(), db, choices, QUERIES["q1"].bind_defaults(params))
 
 
 def q1_reference(db, date: float = 0.9):
@@ -151,7 +167,7 @@ def q1_reference(db, date: float = 0.9):
 # ---------------------------------------------------------------------------
 
 
-def q3_llql(date: float = 0.05) -> L.Expr:
+def q3_llql() -> L.Expr:
     return O.groupjoin(
         "lineitem",
         "orders",
@@ -159,14 +175,14 @@ def q3_llql(date: float = 0.05) -> L.Expr:
         key_s=lambda s: s.key.get("orderkey"),
         g=lambda s: _c(1.0),
         f=lambda r: r.key.get("extendedprice") * (_c(1.0) - r.key.get("discount")),
-        pred_s=lambda s: s.key.get("orderdate") < _c(date),
+        pred_s=lambda s: s.key.get("orderdate") < L.Param("date", L.DOUBLE),
         build="OD",
         out="Agg",
     )
 
 
-def q3_run(db, choices):
-    return _run_llql(q3_llql(), db, choices)
+def q3_run(db, choices, **params):
+    return _run_llql(q3_llql(), db, choices, QUERIES["q3"].bind_defaults(params))
 
 
 def q3_reference(db, date: float = 0.05):
@@ -187,7 +203,7 @@ def q3_reference(db, date: float = 0.05):
 # ---------------------------------------------------------------------------
 
 
-def q5_llql(region: int = 0) -> L.Expr:
+def q5_llql() -> L.Expr:
     """The full chain, dictionaries innermost-first:
 
     * ``NR``  — nationkey index over region-filtered nation (semijoin side);
@@ -205,7 +221,7 @@ def q5_llql(region: int = 0) -> L.Expr:
         "n",
         Input("nation"),
         If(
-            n.key.get("regionkey").eq(_i(region)),
+            n.key.get("regionkey").eq(L.Param("region", L.INT)),
             DictUpdate(Var("NR"), n.key.get("nationkey"), DictNew(None, n.key, n.val)),
         ),
     )
@@ -289,8 +305,8 @@ def q5_llql(region: int = 0) -> L.Expr:
     return body
 
 
-def q5_run(db, choices):
-    return _run_llql(q5_llql(), db, choices)
+def q5_run(db, choices, **params):
+    return _run_llql(q5_llql(), db, choices, QUERIES["q5"].bind_defaults(params))
 
 
 def q5_reference(db, region: int = 0):
@@ -325,7 +341,7 @@ def q5_reference(db, region: int = 0):
 _YEARS = 7
 
 
-def q9_llql(color: int = 3) -> L.Expr:
+def q9_llql() -> L.Expr:
     """Chain: PX (color-filtered part index) → LP (lineitem ⋈ PX carrying the
     profit inputs) → SN (supplier index) → LS (+nation) → OD (orders index)
     → Agg keyed (nation, year-bucket)."""
@@ -335,7 +351,7 @@ def q9_llql(color: int = 3) -> L.Expr:
         "p",
         Input("part"),
         If(
-            p.key.get("color").eq(_i(color)),
+            p.key.get("color").eq(L.Param("color", L.INT)),
             DictUpdate(Var("PX"), p.key.get("partkey"), DictNew(None, p.key, p.val)),
         ),
     )
@@ -410,8 +426,8 @@ def q9_llql(color: int = 3) -> L.Expr:
     return body
 
 
-def q9_run(db, choices):
-    return _run_llql(q9_llql(), db, choices)
+def q9_run(db, choices, **params):
+    return _run_llql(q9_llql(), db, choices, QUERIES["q9"].bind_defaults(params))
 
 
 def q9_reference(db, color: int = 3):
@@ -442,7 +458,7 @@ def q9_reference(db, color: int = 3):
 # ---------------------------------------------------------------------------
 
 
-def q18_llql(threshold: float = 150.0) -> L.Expr:
+def q18_llql() -> L.Expr:
     """Group quantities per order, then the HAVING + join-back: scan the
     aggregate dictionary, keep the big groups, and re-join orders for
     totalprice — a dictionary scan feeding a probe, all in one program."""
@@ -461,7 +477,7 @@ def q18_llql(threshold: float = 150.0) -> L.Expr:
         "g",
         Var("QtyAgg"),
         If(
-            g.val > _c(threshold),
+            g.val > L.Param("threshold", L.DOUBLE),
             For(
                 "oo",
                 DictLookup(Var("OD"), g.key),
@@ -479,8 +495,8 @@ def q18_llql(threshold: float = 150.0) -> L.Expr:
     return body
 
 
-def q18_run(db, choices):
-    return _run_llql(q18_llql(), db, choices)
+def q18_run(db, choices, **params):
+    return _run_llql(q18_llql(), db, choices, QUERIES["q18"].bind_defaults(params))
 
 
 def q18_reference(db, threshold: float = 150.0):
@@ -499,11 +515,11 @@ def q18_reference(db, threshold: float = 150.0):
 
 
 QUERIES: Dict[str, Query] = {
-    "q1": Query("q1", q1_llql, q1_run, q1_reference),
-    "q3": Query("q3", q3_llql, q3_run, q3_reference),
-    "q5": Query("q5", q5_llql, q5_run, q5_reference),
-    "q9": Query("q9", q9_llql, q9_run, q9_reference),
-    "q18": Query("q18", q18_llql, q18_run, q18_reference),
+    "q1": Query("q1", q1_llql, q1_run, q1_reference, {"date": 0.9}),
+    "q3": Query("q3", q3_llql, q3_run, q3_reference, {"date": 0.05}),
+    "q5": Query("q5", q5_llql, q5_run, q5_reference, {"region": 0}),
+    "q9": Query("q9", q9_llql, q9_run, q9_reference, {"color": 3}),
+    "q18": Query("q18", q18_llql, q18_run, q18_reference, {"threshold": 150.0}),
 }
 
 # The TPC-H fact tables: row-sharded by default under the distributed
@@ -521,16 +537,19 @@ def run_sharded(
     mesh,
     axis,
     shard_rels: Tuple[str, ...] = FACT_RELS,
+    **params,
 ) -> Dict[int, np.ndarray]:
     """Distributed twin of ``Query.run``: compile the same LLQL under the
     same choices and execute under ``shard_map`` with ``shard_rels``
-    row-sharded over the mesh axis."""
+    row-sharded over the mesh axis.  Goes through the sharded-executor
+    cache, so repeated calls with fresh bindings reuse the trace."""
     from repro.core.lower import compile as compile_plan
     from repro.exec import distributed as D
 
-    plan = compile_plan(QUERIES[qname].llql(), choices)
-    out = D.execute_plan_sharded(plan, db, mesh, axis, shard_rels=shard_rels)
-    return out.items_np()
+    q = QUERIES[qname]
+    plan = compile_plan(q.llql(), choices)
+    run = D.cached_sharded_executor(plan, db, mesh, axis, shard_rels=shard_rels)
+    return run(q.bind_defaults(params)).items_np()
 
 
 def synthesize_choices(

@@ -1,0 +1,231 @@
+"""Batched analytical serving: compile-once/execute-many over parameterized
+plans.
+
+The LM serving loop (``serve_loop.Server``) amortizes one compiled decode
+step across a batch of concurrent sequences; this is the same machinery
+pointed at the analytical path.  A ``QueryServer`` owns a database and a
+request queue; requests are ``(query name, parameter binding)`` pairs.  Per
+query *shape* the server pays the paper's pipeline exactly once — Σ stats,
+Algorithm 1 synthesis, plan lowering, and the whole-plan jit — via
+``engine.cached_executable``; every later request with a fresh binding is a
+warm hit: zero synthesis, zero retracing, parameters passed as runtime
+scalars (DESIGN.md §6).
+
+Micro-batching: each ``step()`` drains up to ``max_batch`` queued requests
+for the *same* query shape and runs them as a single vmapped execution
+(``Executable.call_batched``), padded to power-of-two buckets so the number
+of distinct traces stays logarithmic.  Warm/cold latency and throughput
+counters are exposed through ``stats()`` — ``benchmarks/serve_bench.py``
+turns them into the BENCH_serve.json record the CI perf gate enforces.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.cost import AnalyticCostModel
+from repro.core.synthesis import synthesize
+from repro.data.table import collect_stats
+from repro.exec import engine as E
+from repro.exec.queries import QUERIES, Query
+
+
+@dataclass
+class QueryRequest:
+    rid: int
+    qname: str
+    params: Dict[str, object]
+    t_submit: float = 0.0
+
+
+@dataclass
+class QueryResponse:
+    rid: int
+    qname: str
+    params: Dict[str, object]
+    result: Dict[int, np.ndarray]
+    latency_s: float
+    warm: bool  # shape was already compiled when this request ran
+    batch_size: int = 1
+
+
+@dataclass
+class _Shape:
+    """One compiled query shape: choices + cached executable + bookkeeping."""
+
+    query: Query
+    executable: E.Executable
+    choices: Dict[str, object]
+    compile_s: float  # cold cost actually paid: synthesis + lowering + jit
+    served: int = 0
+    busy_s: float = 0.0  # execution wall attributed to this shape
+
+
+class QueryServer:
+    def __init__(
+        self,
+        db,
+        delta=None,
+        queries: Optional[Dict[str, Query]] = None,
+        max_batch: int = 8,
+    ):
+        self.db = db
+        self.delta = delta or AnalyticCostModel()
+        self.queries = dict(queries or QUERIES)
+        self.max_batch = max_batch
+        self.sigma = collect_stats(db)
+        self.queue: List[QueryRequest] = []
+        self.finished: List[QueryResponse] = []
+        self._shapes: Dict[str, _Shape] = {}
+        self._next_rid = 0
+        self.counters = {
+            "requests": 0,
+            "responses": 0,
+            "batches": 0,
+            "cold_compiles": 0,
+            "synth_runs": 0,
+            "warm_hits": 0,
+        }
+        self._lat = {"warm": [], "cold": []}
+        self._busy = {"warm": 0.0, "cold": 0.0}
+
+    # -- cold path: once per query shape ------------------------------------
+    def _shape(self, qname: str) -> _Shape:
+        shape = self._shapes.get(qname)
+        if shape is not None:
+            self.counters["warm_hits"] += 1
+            return shape
+        q = self.queries[qname]
+        t0 = time.perf_counter()
+        res = synthesize(q.llql(), self.sigma, self.delta)
+        self.counters["synth_runs"] += 1
+        from repro.core.lower import compile as compile_plan
+
+        plan = compile_plan(q.llql(), res.choices)
+        ex = E.cached_executable(plan, self.db, sigma=self.sigma)
+        # trigger the trace now so the first serve measures warm execution
+        ex(self.db, q.bind_defaults({}))
+        shape = _Shape(q, ex, dict(res.choices), time.perf_counter() - t0)
+        self._shapes[qname] = shape
+        self.counters["cold_compiles"] += 1
+        return shape
+
+    def warm_up(self, qnames=None, batch_buckets: bool = True) -> None:
+        """Precompile shapes so first requests hit the warm path.  With
+        ``batch_buckets`` the vmapped power-of-two micro-batch buckets up to
+        ``max_batch`` are traced too — after this, no request mix can
+        trigger a compile."""
+        for qname in qnames or sorted(self.queries):
+            shape = self._shape(qname)
+            if not batch_buckets:
+                continue
+            binding = shape.query.bind_defaults({})
+            b = 2
+            while b < self.max_batch:
+                shape.executable.call_batched(self.db, [binding] * b)
+                b *= 2
+            # a full batch pads to ceil-pow2(max_batch) — trace that bucket
+            # too, so a non-power-of-two max_batch can't compile mid-serve
+            if self.max_batch > 1:
+                shape.executable.call_batched(
+                    self.db, [binding] * self.max_batch
+                )
+
+    # -- request intake ------------------------------------------------------
+    def submit(self, qname: str, **params) -> int:
+        if qname not in self.queries:
+            raise KeyError(f"unknown query {qname!r}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(
+            QueryRequest(rid, qname, dict(params), t_submit=time.perf_counter())
+        )
+        self.counters["requests"] += 1
+        return rid
+
+    # -- serving loop --------------------------------------------------------
+    def _take_batch(self) -> List[QueryRequest]:
+        """Drain up to ``max_batch`` queued requests of the head request's
+        query shape, preserving the arrival order of everything else."""
+        if not self.queue:
+            return []
+        qname = self.queue[0].qname
+        batch, rest = [], []
+        for req in self.queue:
+            if req.qname == qname and len(batch) < self.max_batch:
+                batch.append(req)
+            else:
+                rest.append(req)
+        self.queue = rest
+        return batch
+
+    def step(self) -> List[QueryResponse]:
+        """Serve one micro-batch; returns its responses ([] when idle)."""
+        batch = self._take_batch()
+        if not batch:
+            return []
+        qname = batch[0].qname
+        warm = qname in self._shapes
+        t0 = time.perf_counter()  # cold batches count compile in busy time
+        shape = self._shape(qname)
+        bindings = [shape.query.bind_defaults(r.params) for r in batch]
+        if len(batch) == 1:
+            results = [shape.executable(self.db, bindings[0])]
+        else:
+            results = shape.executable.call_batched(self.db, bindings)
+        out = []
+        done = time.perf_counter()
+        self._busy["warm" if warm else "cold"] += done - t0
+        shape.busy_s += done - t0
+        for req, res in zip(batch, results):
+            resp = QueryResponse(
+                rid=req.rid,
+                qname=req.qname,
+                params=req.params,
+                result=res.items_np(),
+                latency_s=done - req.t_submit,
+                warm=warm,
+                batch_size=len(batch),
+            )
+            self._lat["warm" if warm else "cold"].append(resp.latency_s)
+            self.finished.append(resp)
+            out.append(resp)
+        shape.served += len(batch)
+        self.counters["responses"] += len(batch)
+        self.counters["batches"] += 1
+        return out
+
+    def run_until_done(self, max_steps: int = 100_000) -> List[QueryResponse]:
+        for _ in range(max_steps):
+            if not self.step():
+                break
+        return self.finished
+
+    # -- observability -------------------------------------------------------
+    def stats(self) -> Dict[str, object]:
+        def pct(xs: List[float], p: float) -> float:
+            return float(np.percentile(xs, p)) if xs else 0.0
+
+        warm_n, cold_n = len(self._lat["warm"]), len(self._lat["cold"])
+        return {
+            **self.counters,
+            "queued": len(self.queue),
+            "warm_p50_ms": pct(self._lat["warm"], 50) * 1e3,
+            "warm_p99_ms": pct(self._lat["warm"], 99) * 1e3,
+            "cold_p50_ms": pct(self._lat["cold"], 50) * 1e3,
+            "cold_p99_ms": pct(self._lat["cold"], 99) * 1e3,
+            "busy_s": self._busy["warm"] + self._busy["cold"],
+            "warm_rps": warm_n / self._busy["warm"] if self._busy["warm"] else 0.0,
+            "cold_rps": cold_n / self._busy["cold"] if self._busy["cold"] else 0.0,
+            "shapes": {
+                q: {
+                    "served": s.served,
+                    "compile_s": s.compile_s,
+                    "busy_s": s.busy_s,
+                }
+                for q, s in self._shapes.items()
+            },
+        }

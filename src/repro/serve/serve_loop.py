@@ -10,6 +10,11 @@ recycling their slots.  Greedy or temperature sampling.
 The decode caches are per-model-kind pytrees (KV for transformers, O(1)
 recurrent state for rwkv/jamba) — the same ``init_cache`` contract the
 dry-run lowers at the assigned decode shapes.
+
+The same queue/step/drain machinery serves the *analytical* path in
+``repro.serve.query_server``: there the compiled artifact being amortized
+is a parameterized plan executable instead of a decode step, and the batch
+axis is a stack of parameter bindings instead of cache slots.
 """
 from __future__ import annotations
 

@@ -46,10 +46,12 @@ def test_tpch_sharded_matches_single_shard(shards):
             q = QUERIES[qname]
             plan = compile_plan(q.llql(), {{}})
             # ONE plan object, both executors — distribution is legalized by
-            # the executor, never hand-planned
-            single = E.execute_plan(plan, db, sigma=sigma).items_np()
+            # the executor, never hand-planned; defaults bind the free Params
+            single = E.execute_plan(
+                plan, db, sigma=sigma, params=q.defaults
+            ).items_np()
             dist = D.execute_plan_sharded(
-                plan, db, mesh, "data", shard_rels=FACT_RELS
+                plan, db, mesh, "data", shard_rels=FACT_RELS, params=q.defaults
             ).items_np()
             assert set(dist) == set(single), qname
             for k in single:
@@ -90,9 +92,12 @@ def test_tpch_sharded_with_synthesized_placements():
                 net=NetCostModel(n_shards=4), sharded_rels=FACT_RELS,
             )
             plan = compile_plan(QUERIES[qname].llql(), res.choices)
-            single = E.execute_plan(plan, db, sigma=sigma).items_np()
+            defaults = QUERIES[qname].defaults
+            single = E.execute_plan(
+                plan, db, sigma=sigma, params=defaults
+            ).items_np()
             dist = D.execute_plan_sharded(
-                plan, db, mesh, "data", shard_rels=FACT_RELS
+                plan, db, mesh, "data", shard_rels=FACT_RELS, params=defaults
             ).items_np()
             assert set(dist) == set(single), qname
             for k in single:

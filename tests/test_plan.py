@@ -44,7 +44,8 @@ def db():
 def test_plan_roundtrip_matches_reference(qname, ci, db):
     q = QUERIES[qname]
     plan = compile_plan(q.llql(), CHOICE_SETS[ci])
-    got = E.execute_plan(plan, db, sigma=collect_stats(db)).items_np()
+    # plans carry free Params; bind() attaches the values without recompiling
+    got = E.execute_plan(plan.bind(q.defaults), db, sigma=collect_stats(db)).items_np()
     ref = q.reference(db)
     assert set(got) == set(ref)
     for k in ref:
@@ -390,8 +391,12 @@ def test_plan_distributed_matches_reference_q1_q3():
                 q = QUERIES[qname]
                 plan = compile_plan(q.llql(), ch)
                 # ONE plan object, both executors
-                single = E.execute_plan(plan, db, sigma=sigma).items_np()
-                dist = D.execute_plan_sharded(plan, db, mesh, axis).items_np()
+                single = E.execute_plan(
+                    plan, db, sigma=sigma, params=q.defaults
+                ).items_np()
+                dist = D.execute_plan_sharded(
+                    plan, db, mesh, axis, params=q.defaults
+                ).items_np()
                 ref = q.reference(db)
                 assert set(single) == set(ref), qname
                 assert set(dist) == set(ref), qname

@@ -1,0 +1,91 @@
+"""The batched analytical serving loop: per-shape compile-once, warm-path
+zero synthesis / zero retrace, micro-batching, and counters."""
+import numpy as np
+import pytest
+
+from repro.data import tpch
+from repro.exec.queries import QUERIES
+from repro.serve.query_server import QueryServer
+
+
+@pytest.fixture(scope="module")
+def db():
+    return tpch.generate(scale=0.002, seed=3).tables()
+
+
+def _subset(*names):
+    return {n: QUERIES[n] for n in names}
+
+
+def test_mixed_workload_matches_references(db):
+    srv = QueryServer(db, queries=_subset("q1", "q18"), max_batch=4)
+    reqs = [
+        ("q18", {"threshold": 150.0}),
+        ("q18", {"threshold": 80.0}),
+        ("q1", {"date": 0.5}),
+        ("q18", {"threshold": 200.0}),
+        ("q1", {}),  # defaults
+    ]
+    for qname, params in reqs:
+        srv.submit(qname, **params)
+    done = srv.run_until_done()
+    assert len(done) == len(reqs)
+    assert [r.rid for r in done] != []
+    for r in done:
+        ref = QUERIES[r.qname].reference(db, **r.params)
+        assert set(r.result) == set(ref), (r.qname, r.params)
+        for k in ref:
+            np.testing.assert_allclose(r.result[k], ref[k], rtol=3e-3, atol=3e-2)
+
+
+def test_warm_path_zero_synthesis_zero_retrace(db):
+    srv = QueryServer(db, queries=_subset("q3"), max_batch=2)
+    srv.warm_up(batch_buckets=True)
+    assert srv.counters["synth_runs"] == 1
+    ex = srv._shapes["q3"].executable
+    traces = ex.trace_count
+    for date in (0.05, 0.1, 0.15, 0.2):
+        srv.submit("q3", date=date)
+        srv.step()
+    assert srv.counters["synth_runs"] == 1  # zero synthesis on requests
+    assert ex.trace_count == traces  # zero retracing on requests
+    assert all(r.warm for r in srv.finished)
+
+
+def test_microbatches_group_same_shape_requests(db):
+    srv = QueryServer(db, queries=_subset("q1", "q18"), max_batch=4)
+    for t in (150.0, 120.0, 90.0, 60.0, 200.0):
+        srv.submit("q18", threshold=t)
+    srv.submit("q1", date=0.5)
+    first = srv.step()
+    assert len(first) == 4 and all(r.qname == "q18" for r in first)
+    assert all(r.batch_size == 4 for r in first)
+    second = srv.step()  # the q18 straggler, not blocked by the q1 arrival
+    assert len(second) == 1 and second[0].qname == "q18"
+    third = srv.step()
+    assert len(third) == 1 and third[0].qname == "q1"
+    assert not srv.step()
+
+
+def test_counters_and_stats(db):
+    srv = QueryServer(db, queries=_subset("q1"), max_batch=2)
+    srv.submit("q1", date=0.7)  # cold: pays synthesis + compile
+    srv.step()
+    srv.submit("q1", date=0.4)
+    srv.step()
+    s = srv.stats()
+    assert s["requests"] == 2 and s["responses"] == 2
+    assert s["cold_compiles"] == 1 and s["synth_runs"] == 1
+    assert s["batches"] == 2 and s["queued"] == 0
+    assert s["cold_p50_ms"] > 0 and s["warm_p50_ms"] > 0
+    assert s["warm_rps"] > 0
+    assert s["shapes"]["q1"]["served"] == 2
+    lat = [r.latency_s for r in srv.finished]
+    # the cold request paid compile; the warm one must be far cheaper
+    assert lat[1] < lat[0]
+
+
+def test_unknown_query_rejected(db):
+    srv = QueryServer(db, queries=_subset("q1"))
+    with pytest.raises(KeyError):
+        srv.submit("q99")
