@@ -70,6 +70,7 @@ def run_dist(
     written as a uniform BENCH record (``common.write_record``) the CI perf
     gate diffs against ``benchmarks/baselines/BENCH_tpch_dist.json``."""
     from repro import compat
+    from repro.core import plan as cplan
     from repro.core.lower import compile as compile_plan
     from repro.costmodel import load_model
     from repro.exec import distributed as D
@@ -95,11 +96,13 @@ def run_dist(
         # time through .arrays(): the result wrappers are plain dataclasses
         # jax.block_until_ready cannot see into.  Both paths go through the
         # executable caches so repeats hit the existing traces (compile
-        # excluded, matching bench()'s contract).
-        ex1 = E.cached_executable(plan, db, sigma=sigma)
+        # excluded, matching bench()'s contract).  Both run the fused
+        # production form: the single-shard plan is fused here, the sharded
+        # executor fuses its legalized plan internally (DESIGN.md §7).
+        ex1 = E.cached_executable(cplan.fuse(plan, sigma=sigma), db, sigma=sigma)
         sec_1 = bench(lambda: ex1(db, q.defaults).arrays(), repeats=repeats)
         run_n = D.cached_sharded_executor(
-            plan, db, mesh, "data", shard_rels=FACT_RELS
+            plan, db, mesh, "data", shard_rels=FACT_RELS, sigma=sigma
         )
         sec_n = bench(lambda: run_n(q.defaults).arrays(), repeats=repeats)
         results[f"tpch_dist/{qname}"] = {

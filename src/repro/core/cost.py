@@ -176,6 +176,62 @@ class NetCostModel:
         return self.alpha * hops + recv * self.entry_bytes(lanes) * self.beta
 
 
+# ---------------------------------------------------------------------------
+# Δ_fuse — the fuse-vs-materialize term for pipeline regions (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class FusionCostModel:
+    """Prices the per-region fuse/materialize decision of ``plan.fuse``.
+
+    Fusing a ``Scan → Select* → HashProbe* → GroupBy/Reduce`` chain into one
+    streaming kernel saves the HBM round-trips of every elided intermediate
+    (masks written+reread by the next operator, probe-gathered build-side
+    columns materialized at probe-stream width) at the price of keeping the
+    probed dictionaries *and* their gather payloads co-resident in VMEM for
+    the whole pass.  Δ_fuse is therefore
+
+        saved_bytes / hbm_bytes_per_sec      if resident ≤ vmem_budget
+        -inf                                 otherwise (must split)
+
+    — a fused region is profitable whenever it elides any intermediate and
+    its working set fits; a region that does not fit is split at probe
+    boundaries (the overflowing probe materializes, the rest stays fused).
+    Constants are deliberately coarse: only the *sign* and the budget
+    comparison drive planning, mirroring how Δ_net only needs relative
+    ordering.
+    """
+
+    hbm_bytes_per_sec: float = 8.0e11  # ~TPU HBM stream bandwidth
+    vmem_budget: int = 8 << 20  # bytes for co-resident dicts + payloads
+    mask_bytes: float = 2.0  # bool intermediate: write + reread
+    col_bytes: float = 8.0  # f32/int32 intermediate: write + reread
+    key_bytes: float = 4.0
+    lane_bytes: float = 4.0
+    default_rows: float = float(1 << 16)  # unknown-source fallback
+    default_cols: float = 4.0  # unknown build-side width fallback
+
+    def dict_bytes(self, capacity: float, lanes: float) -> float:
+        """VMEM footprint of a resident dictionary slab."""
+        return float(capacity) * (
+            self.key_bytes + self.lane_bytes * max(1.0, float(lanes))
+        )
+
+    def payload_bytes(self, capacity: float, ncols: float) -> float:
+        """VMEM footprint of the gather payload a fused probe keeps resident
+        (build-side columns re-keyed to dictionary slots — see
+        ``kernels.fused_pipeline``)."""
+        return float(capacity) * self.lane_bytes * max(0.0, float(ncols))
+
+    def delta_fuse(self, saved_bytes: float, resident_bytes: float) -> float:
+        """Seconds saved by fusing the region; ``-inf`` when the region's
+        resident working set cannot fit the VMEM budget."""
+        if resident_bytes > self.vmem_budget:
+            return float("-inf")
+        return float(saved_bytes) / self.hbm_bytes_per_sec
+
+
 @dataclass
 class DictMeta:
     name: str

@@ -434,14 +434,17 @@ def execute(
     sigma: Optional[CardModel] = None,
     params: Optional[Dict[str, object]] = None,
 ):
-    """Compile and run.  Returns the program result: a ``DictResult`` for
-    dictionary-valued programs, a ``Table`` for relation results, or a dict
-    of scalars for Ref results.  Falls back to the interpreter on
-    unrecognized structure."""
+    """Compile, fuse, and run.  Returns the program result: a ``DictResult``
+    for dictionary-valued programs, a ``Table`` for relation results, or a
+    dict of scalars for Ref results.  Row-parallel regions are grouped into
+    fused ``Pipeline`` nodes under Δ_fuse when Σ is available (DESIGN.md §7
+    — fusion is a costed choice, and fused plans are result-identical to
+    materialized ones).  Falls back to the interpreter on unrecognized
+    structure."""
     from repro.exec import engine as E
 
     try:
-        plan = compile(expr, choices)
+        plan = P.fuse(compile(expr, choices), sigma=sigma)
         return E.execute_plan(plan, db, sigma=sigma, params=params)
     except _Unsupported as why:
         warnings.warn(f"LLQL lowering fell back to interpreter: {why}")

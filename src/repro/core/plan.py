@@ -126,6 +126,27 @@ class Exchange(Node):
 
 
 @dataclass(frozen=True)
+class Pipeline(Node):
+    """A fused region: a maximal chain of row-parallel nodes
+    (``Scan → Select* → HashProbe* → GroupBy/GroupJoin/Reduce/HashBuild/
+    Project``) executed as ONE streaming pass — fact rows travel
+    HBM→VMEM once, predicates become in-register masks, probed dictionaries
+    stay resident, and only the terminal node's output is materialized
+    (DESIGN.md §7).  Formed by :func:`fuse` as a *costed* choice under
+    ``cost.FusionCostModel`` (Δ_fuse), never by default.
+
+    ``source`` is the symbol the first stage consumes: a base relation or
+    dictionary symbol when ``stages[0]`` is a ``Scan``, otherwise a frame
+    symbol produced by an (unfused) upstream node — the latter is how a
+    region *split* at a probe boundary re-enters the plan.  ``out`` equals
+    ``stages[-1].out``; intermediate stage symbols are private to the
+    region and never materialize."""
+
+    source: str
+    stages: Tuple[Node, ...] = ()
+
+
+@dataclass(frozen=True)
 class Repartition(Node):
     """Move frame rows across shards: ``hash`` routes each row to the shard
     owning ``hash(keyexpr)`` (the dictionaries' own mix, so a dictionary
@@ -226,48 +247,48 @@ class Plan:
                 yield n
 
     def describe(self) -> str:
-        """Stable one-line-per-node rendering (golden tests, explain)."""
+        """Stable rendering (golden tests, explain): one line per node, with
+        ``Pipeline`` regions rendering their fused stages indented."""
         lines = []
         for n in self.nodes:
-            if isinstance(n, Scan):
-                lines.append(f"Scan {n.out} <- {n.source} as {n.var}")
-            elif isinstance(n, Select):
-                lines.append(f"Select {n.out} <- {n.source}")
-            elif isinstance(n, Project):
-                cols = ",".join(a for a, _ in n.fields)
-                lines.append(f"Project {n.out} <- {n.source} [{cols}]")
-            elif isinstance(n, HashBuild):
-                lines.append(f"HashBuild {n.out} <- {n.source} [{n.choice}]")
-            elif isinstance(n, GroupBy):
-                lanes = ",".join(a for a, _ in n.values)
+            if isinstance(n, Pipeline):
                 lines.append(
-                    f"GroupBy {n.out} <- {n.source} [{n.choice}] lanes={lanes}"
+                    f"Pipeline {n.out} <- {n.source} [{len(n.stages)} stages]"
                 )
-            elif isinstance(n, HashProbe):
-                lines.append(
-                    f"HashProbe {n.out} <- {n.source} ⋈ {n.build} as {n.inner_var}"
-                )
-            elif isinstance(n, GroupJoin):
-                lines.append(f"GroupJoin {n.out} <- {n.source} ⋈ {n.build} [{n.choice}]")
-            elif isinstance(n, Reduce):
-                lanes = ",".join(a for a, _ in n.fields)
-                lk = f" lookup={n.lookup_sym}" if n.lookup_sym else ""
-                lines.append(f"Reduce {n.out} <- {n.source} lanes={lanes}{lk}")
-            elif isinstance(n, Exchange):
-                lines.append(
-                    f"Exchange {n.out} <- {n.source} ({n.kind}) [{n.choice}]"
-                )
-            elif isinstance(n, Repartition):
-                how = (
-                    f"hash {L.pretty(n.keyexpr)}"
-                    if n.kind == "hash"
-                    else n.kind
-                )
-                lines.append(f"Repartition {n.out} <- {n.source} ({how})")
-            else:  # pragma: no cover
-                lines.append(repr(n))
+                lines.extend("  | " + _describe_node(s) for s in n.stages)
+            else:
+                lines.append(_describe_node(n))
         lines.append(f"Result {self.result}")
         return "\n".join(lines)
+
+
+def _describe_node(n: Node) -> str:
+    if isinstance(n, Scan):
+        return f"Scan {n.out} <- {n.source} as {n.var}"
+    if isinstance(n, Select):
+        return f"Select {n.out} <- {n.source}"
+    if isinstance(n, Project):
+        cols = ",".join(a for a, _ in n.fields)
+        return f"Project {n.out} <- {n.source} [{cols}]"
+    if isinstance(n, HashBuild):
+        return f"HashBuild {n.out} <- {n.source} [{n.choice}]"
+    if isinstance(n, GroupBy):
+        lanes = ",".join(a for a, _ in n.values)
+        return f"GroupBy {n.out} <- {n.source} [{n.choice}] lanes={lanes}"
+    if isinstance(n, HashProbe):
+        return f"HashProbe {n.out} <- {n.source} ⋈ {n.build} as {n.inner_var}"
+    if isinstance(n, GroupJoin):
+        return f"GroupJoin {n.out} <- {n.source} ⋈ {n.build} [{n.choice}]"
+    if isinstance(n, Reduce):
+        lanes = ",".join(a for a, _ in n.fields)
+        lk = f" lookup={n.lookup_sym}" if n.lookup_sym else ""
+        return f"Reduce {n.out} <- {n.source} lanes={lanes}{lk}"
+    if isinstance(n, Exchange):
+        return f"Exchange {n.out} <- {n.source} ({n.kind}) [{n.choice}]"
+    if isinstance(n, Repartition):
+        how = f"hash {L.pretty(n.keyexpr)}" if n.kind == "hash" else n.kind
+        return f"Repartition {n.out} <- {n.source} ({how})"
+    return repr(n)  # pragma: no cover
 
 
 @dataclass(frozen=True)
@@ -478,12 +499,375 @@ def legalize(
             if sharded_rows or mask_partitioned:
                 emit(Exchange(n.out + "#sum", source=n.out, kind="allreduce"))
             props[n.out] = Replicated()  # all-reduced scalar record
+        elif isinstance(n, Pipeline):
+            # fusion happens per executor, after legalization: the sharded
+            # executor legalizes the unfused plan and fuses the result (the
+            # per-shard partial phase), so regions never straddle the
+            # Repartition/Exchange boundaries legalization inserts
+            raise PlanShardError(
+                f"cannot legalize fused plan (Pipeline {n.out}); "
+                "legalize first, then fuse"
+            )
         elif isinstance(n, (Exchange, Repartition)):
             raise PlanShardError(f"plan already legalized at {n.out}")
         else:  # pragma: no cover
             raise PlanShardError(f"unknown node {type(n).__name__}")
 
     return Plan(tuple(out_nodes), plan.result, plan.choices, plan.params), props
+
+
+# ---------------------------------------------------------------------------
+# Data-centric pipeline fusion (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+_CHAIN_NODES = (Select, HashProbe)
+_TERMINAL_NODES = (GroupBy, GroupJoin, Reduce, HashBuild, Project)
+
+
+def _node_exprs(n: Node):
+    """Row expressions a node evaluates (column-liveness analysis)."""
+    if isinstance(n, Select):
+        yield n.pred
+    elif isinstance(n, Project):
+        for _, fx in n.fields:
+            yield fx
+    elif isinstance(n, HashBuild):
+        yield n.keyexpr
+    elif isinstance(n, HashProbe):
+        yield n.keyexpr
+    elif isinstance(n, GroupBy):
+        yield n.keyexpr
+        for _, fx in n.values:
+            yield fx
+    elif isinstance(n, GroupJoin):
+        yield n.keyexpr
+        yield n.f_expr
+    elif isinstance(n, Reduce):
+        for _, fx in n.fields:
+            yield fx
+        if n.lookup_key is not None:
+            yield n.lookup_key
+    elif isinstance(n, Repartition):
+        if n.keyexpr is not None:
+            yield n.keyexpr
+
+
+def _node_refs(n: Node):
+    """Symbols a node consumes (beyond its ``source``)."""
+    yield n.source  # type: ignore[attr-defined]
+    if isinstance(n, (HashProbe, GroupJoin)):
+        yield n.build
+    elif isinstance(n, Reduce) and n.lookup_sym is not None:
+        yield n.lookup_sym
+
+
+def needed_columns(stages: Tuple[Node, ...]) -> Dict[str, Tuple[str, ...]]:
+    """Per loop variable, the columns a fused region actually reads — what a
+    probe must gather (everything else is pruned) and what the streaming
+    kernel keeps of the fact tile.  ``__key__``/``__val__`` stand for
+    whole-key / value-lane accesses of dictionary scans (``lower.DICT_KEY``
+    / ``DICT_VAL``)."""
+    out: Dict[str, Dict[str, None]] = {}
+
+    def add(var: str, col: str) -> None:
+        out.setdefault(var, {})[col] = None
+
+    def scan(x: L.Expr) -> None:
+        if isinstance(x, L.FieldAccess):
+            b = x.rec
+            if (
+                isinstance(b, L.FieldAccess)
+                and b.name == "key"
+                and isinstance(b.rec, L.Var)
+            ):
+                add(b.rec.name, x.name)  # v.key.col
+                return
+            if isinstance(b, L.Var):
+                if x.name == "val":
+                    add(b.name, "__val__")
+                    return
+                if x.name == "key":
+                    add(b.name, "__key__")
+                    return
+        for c in x.children():
+            scan(c)
+
+    for n in stages:
+        for e in _node_exprs(n):
+            scan(e)
+    return {v: tuple(cols) for v, cols in out.items()}
+
+
+@dataclass
+class _DictInfo:
+    """Static estimate of a dictionary symbol's fused-execution footprint."""
+
+    cap: float  # estimated static capacity (engine's 2×-slack pow2 rule)
+    lanes: float  # value arity
+    src_rows: float  # rows of the frame it was built from
+    src_ncols: float  # columns of the build-side source (gather width)
+    ds: str = "ht_linear"
+
+
+def _pow2cap(n: float) -> float:
+    from repro.dicts.base import default_capacity
+
+    return float(default_capacity(int(max(n, 1.0))))
+
+
+class _Shape:
+    """Static shadow of the executor's frame bookkeeping: rows per frame
+    symbol, base relation per loop variable, vars per frame — enough to
+    mirror ``engine._capacity`` without touching data."""
+
+    def __init__(self, plan: Plan, sigma, fusion) -> None:
+        self.sigma = sigma
+        self.fusion = fusion
+        self.rows: Dict[str, float] = {}  # frame/relation sym -> est rows
+        self.frame_vars: Dict[str, Tuple[str, ...]] = {}
+        self.var_rel: Dict[str, Optional[str]] = {}
+        self.dicts: Dict[str, _DictInfo] = {}
+        defined = set()
+        for n in plan.nodes:
+            self._visit(n, defined)
+            defined.add(n.out)
+
+    def _rel_rows(self, rel: str) -> float:
+        if self.sigma is not None:
+            try:
+                return float(self.sigma.rel(rel).rows)
+            except KeyError:
+                pass
+        return self.fusion.default_rows
+
+    def _rel_ncols(self, rel: Optional[str]) -> float:
+        if rel is not None and self.sigma is not None:
+            try:
+                return float(len(self.sigma.rel(rel).columns))
+            except KeyError:
+                pass
+        return self.fusion.default_cols
+
+    def _key_dist(self, frame: str, keyexpr: L.Expr) -> float:
+        """Distinct-count estimate of a key expression over a frame —
+        ``engine._capacity``'s Σ path, statically."""
+        from .cardinality import key_columns
+
+        for var in self.frame_vars.get(frame, ()):
+            cols = key_columns(keyexpr, var)
+            if not cols:
+                continue
+            rel = self.var_rel.get(var)
+            if rel is not None and self.sigma is not None and "*" not in cols:
+                try:
+                    return float(self.sigma.dist(rel, cols))
+                except KeyError:
+                    pass
+            break
+        return self.rows.get(frame, self.fusion.default_rows)
+
+    def _visit(self, n: Node, defined: set) -> None:
+        if isinstance(n, Scan):
+            if n.source in self.dicts:
+                rows = self.dicts[n.source].cap
+                rel = None
+            elif n.source in defined:
+                rows = self.rows.get(n.source, self.fusion.default_rows)
+                rel = None
+            else:
+                rows = self._rel_rows(n.source)
+                rel = n.source
+            self.rows[n.out] = rows
+            self.frame_vars[n.out] = (n.var,)
+            self.var_rel[n.var] = rel
+        elif isinstance(n, (Select, Repartition)):
+            self.rows[n.out] = self.rows.get(n.source, self.fusion.default_rows)
+            self.frame_vars[n.out] = self.frame_vars.get(n.source, ())
+        elif isinstance(n, HashProbe):
+            self.rows[n.out] = self.rows.get(n.source, self.fusion.default_rows)
+            self.frame_vars[n.out] = self.frame_vars.get(n.source, ()) + (
+                n.inner_var,
+            )
+            self.var_rel[n.inner_var] = None
+        elif isinstance(n, Project):
+            self.rows[n.out] = self.rows.get(n.source, self.fusion.default_rows)
+        elif isinstance(n, (HashBuild, GroupBy, GroupJoin)):
+            rows = self.rows.get(n.source, self.fusion.default_rows)
+            cap = _pow2cap(self._key_dist(n.source, n.keyexpr))
+            if isinstance(n, GroupBy):
+                lanes = float(len(n.values))
+            elif isinstance(n, GroupJoin):
+                lanes = self.dicts.get(
+                    n.build, _DictInfo(cap, 1.0, rows, 0.0)
+                ).lanes
+            else:
+                lanes = 1.0
+            rel = None
+            vars_ = self.frame_vars.get(n.source, ())
+            if vars_:
+                rel = self.var_rel.get(vars_[0])
+            self.dicts[n.out] = _DictInfo(
+                cap, lanes, rows, self._rel_ncols(rel), n.choice.ds
+            )
+        elif isinstance(n, Exchange):
+            src = self.dicts.get(n.source)
+            if src is not None:
+                self.dicts[n.out] = src
+
+
+def fuse(plan: Plan, sigma=None, fusion=None) -> Plan:
+    """Group maximal chains of row-parallel nodes into :class:`Pipeline`
+    regions — a *costed* choice under Δ_fuse (``cost.FusionCostModel``), not
+    a default (DESIGN.md §7).
+
+    Region grammar: ``Scan → (Select | HashProbe)* → terminal`` where the
+    terminal is a materializing node (``GroupBy``/``GroupJoin``/``Reduce``/
+    ``HashBuild``/``Project``) and every intermediate symbol is consumed
+    only inside the region.  For each candidate the pass estimates, from Σ:
+
+    * **saved HBM bytes** — elided Select masks and probe-gathered build
+      columns, written+reread by the unfused executor at probe-stream
+      width;
+    * **resident VMEM bytes** — every probed dictionary slab plus its
+      gather payload, plus the terminal's accumulator.
+
+    A region is fused iff ``Δ_fuse > 0`` and the working set fits the VMEM
+    budget; an over-budget region is **split** at probe boundaries — the
+    leading stages through the overflowing probe stay materialized and the
+    remainder re-enters as a frame-sourced region — until it fits or no
+    probes remain (then it stays unfused).  ``Exchange``/``Repartition``
+    nodes are natural region boundaries: they are not chain members, and
+    fusing a legalized plan fuses exactly the per-shard partial phase.
+    """
+    from .cost import FusionCostModel
+
+    fusion = fusion or FusionCostModel()
+    shape = _Shape(plan, sigma, fusion)
+
+    # symbols referenced by each node, for the single-consumer safety check
+    all_refs: List[Tuple[int, str]] = []
+    for i, n in enumerate(plan.nodes):
+        for s in _node_refs(n):
+            all_refs.append((i, s))
+    if plan.result is not None:
+        all_refs.append((len(plan.nodes), plan.result))
+
+    def consumed_outside(syms: set, lo: int, hi: int) -> bool:
+        return any(
+            s in syms for i, s in all_refs if not (lo <= i < hi)
+        )
+
+    out_nodes: List[Node] = []
+    i = 0
+    nodes = plan.nodes
+    while i < len(nodes):
+        chain = _match_chain(nodes, i)
+        if chain is None:
+            out_nodes.append(nodes[i])
+            i += 1
+            continue
+        hi = i + len(chain)
+        inner = {n.out for n in chain[:-1]}
+        if consumed_outside(inner, i, hi):
+            out_nodes.append(nodes[i])
+            i += 1
+            continue
+        out_nodes.extend(_decide_region(chain, shape, fusion))
+        i = hi
+    return Plan(tuple(out_nodes), plan.result, plan.choices, plan.params)
+
+
+def _match_chain(nodes: Tuple[Node, ...], i: int) -> Optional[List[Node]]:
+    if not isinstance(nodes[i], Scan):
+        return None
+    chain: List[Node] = [nodes[i]]
+    k = i + 1
+    while k < len(nodes) and isinstance(nodes[k], _CHAIN_NODES):
+        if nodes[k].source != chain[-1].out:  # type: ignore[attr-defined]
+            return None
+        chain.append(nodes[k])
+        k += 1
+    if (
+        k < len(nodes)
+        and isinstance(nodes[k], _TERMINAL_NODES)
+        and nodes[k].source == chain[-1].out  # type: ignore[attr-defined]
+    ):
+        chain.append(nodes[k])
+        return chain
+    return None
+
+
+def _region_cost(
+    stages: List[Node], shape: _Shape, fusion
+) -> Tuple[float, float]:
+    """(saved_bytes, resident_bytes) of fusing ``stages`` as one region."""
+    rows = shape.rows.get(stages[0].out, fusion.default_rows)
+    need = needed_columns(tuple(stages))
+    saved = 0.0
+    resident = 0.0
+    for n in stages:
+        if isinstance(n, Select):
+            saved += rows * fusion.mask_bytes
+        elif isinstance(n, HashProbe):
+            info = shape.dicts.get(n.build)
+            ncols = info.src_ncols if info else fusion.default_cols
+            # the unfused executor materializes EVERY build-side column at
+            # probe-stream width plus the found mask; fused gathers stay in
+            # registers
+            saved += rows * (fusion.col_bytes * ncols + fusion.mask_bytes)
+            cap = info.cap if info else fusion.default_rows
+            resident += fusion.dict_bytes(cap, 1.0)
+            resident += fusion.payload_bytes(
+                cap, len(need.get(n.inner_var, ()))
+            )
+        elif isinstance(n, GroupJoin):
+            info = shape.dicts.get(n.build)
+            cap = info.cap if info else fusion.default_rows
+            lanes = info.lanes if info else 1.0
+            # fused probe+aggregate: the looked-up g-values and found mask
+            # never round-trip between the probe and the aggregate
+            saved += rows * (fusion.col_bytes * lanes + fusion.mask_bytes)
+            resident += fusion.dict_bytes(cap, lanes)
+        elif isinstance(n, Reduce) and n.lookup_sym is not None:
+            info = shape.dicts.get(n.lookup_sym)
+            cap = info.cap if info else fusion.default_rows
+            lanes = info.lanes if info else 1.0
+            saved += rows * (fusion.col_bytes * lanes + fusion.mask_bytes)
+            resident += fusion.dict_bytes(cap, lanes)
+    term = stages[-1]
+    info = shape.dicts.get(term.out)
+    if info is not None:  # dictionary-valued terminal: the VMEM accumulator
+        resident += fusion.dict_bytes(info.cap, info.lanes)
+    return saved, resident
+
+
+def _decide_region(chain: List[Node], shape: _Shape, fusion) -> List[Node]:
+    """Fuse, split, or keep ``chain`` materialized; returns emitted nodes."""
+    prefix: List[Node] = []
+    stages = list(chain)
+    while True:
+        saved, resident = _region_cost(stages, shape, fusion)
+        if resident <= fusion.vmem_budget:
+            break
+        # over budget: split — peel leading stages through the first probe
+        # (its dictionary + payload leave the working set; the peeled nodes
+        # materialize exactly as the unfused executor would run them)
+        k = next(
+            (j for j, s in enumerate(stages) if isinstance(s, HashProbe)),
+            None,
+        )
+        if k is None or len(stages) - (k + 1) < 2:
+            return prefix + stages  # cannot fit: stay materialized
+        prefix += stages[: k + 1]
+        stages = stages[k + 1:]
+    if len(stages) < 2 or fusion.delta_fuse(saved, resident) <= 0.0:
+        return prefix + stages
+    pipe = Pipeline(
+        stages[-1].out,
+        source=stages[0].source,  # type: ignore[attr-defined]
+        stages=tuple(stages),
+    )
+    return prefix + [pipe]
 
 
 def _rename(n: Node, new_out: str) -> Node:

@@ -321,3 +321,12 @@ def next_pow2(x: int) -> int:
     while c < x:
         c <<= 1
     return c
+
+
+def default_capacity(n_distinct: int) -> int:
+    """The static capacity rule — 2× slack over the estimated distinct
+    count, 256-slot floor, power of two.  The ONE definition shared by the
+    executor (``engine.capacity_for``) and the fusion cost model
+    (``plan.fuse``'s VMEM estimates), so planning footprints cannot drift
+    from the capacities the executor actually allocates."""
+    return next_pow2(max(2 * int(n_distinct), 256))

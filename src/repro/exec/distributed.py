@@ -218,6 +218,8 @@ def sharded_executor(
     mesh: jax.sharding.Mesh,
     axis: Axis,
     shard_rels: Tuple[str, ...] = ("lineitem",),
+    sigma=None,
+    fuse: bool = True,
 ):
     """Build the distributed realization of a compiled physical plan
     (``repro.core.plan``) with ``shard_rels`` row-sharded over ``axis`` and
@@ -250,6 +252,15 @@ def sharded_executor(
         default_params = None
 
     splan, props = cplan.legalize(plan, tuple(shard_rels))
+    if fuse:
+        # fuse the per-shard partial phase of the legalized plan: the
+        # Repartition/Exchange nodes legalization inserted are natural
+        # region boundaries, so every fused region is a purely shard-local
+        # streaming pass (DESIGN.md §7).  Σ here carries *global* rows — a
+        # conservative over-estimate of the per-shard working set for the
+        # VMEM budget.  ``fuse=False`` keeps the materialized node-by-node
+        # form (benchmarks, fusion-equivalence tests).
+        splan = cplan.fuse(splan, sigma=sigma)
     axes = (axis,) if isinstance(axis, str) else tuple(axis)
     n_sh = 1
     for a in axes:
@@ -361,12 +372,16 @@ def execute_plan_sharded(
     axis: Axis,
     shard_rels: Tuple[str, ...] = ("lineitem",),
     params=None,
+    sigma=None,
+    fuse: bool = True,
 ):
     """Build-and-run convenience over :func:`sharded_executor` (which see).
     Callers timing repeated executions should hold on to the executor (or go
     through :func:`cached_sharded_executor`) — each ``execute_plan_sharded``
     call builds a fresh shard_map wrapper."""
-    return sharded_executor(plan, db, mesh, axis, shard_rels)(params)
+    return sharded_executor(
+        plan, db, mesh, axis, shard_rels, sigma=sigma, fuse=fuse
+    )(params)
 
 
 _SHARDED_CACHE: Dict[tuple, Tuple[object, object]] = {}
@@ -380,12 +395,13 @@ def cached_sharded_executor(
     mesh: jax.sharding.Mesh,
     axis: Axis,
     shard_rels: Tuple[str, ...] = ("lineitem",),
+    sigma=None,
 ):
     """Distributed twin of ``engine.cached_executable``: the built (jitted
     shard_map) executor is cached by (plan fingerprint, DictChoice tuple,
-    table schema, database identity, mesh shape, axis, sharded relations),
-    so repeated requests with fresh parameter bindings reuse the existing
-    trace.  Unlike the single-shard executable (which takes the arrays per
+    table schema, database identity, Σ signature, mesh shape, axis, sharded
+    relations), so repeated requests with fresh parameter bindings reuse the
+    existing trace.  Unlike the single-shard executable (which takes the arrays per
     call), the sharded executor closes over the build-time column arrays —
     so the db rides in the key by *identity*, held strongly and re-verified
     on hit (a bare ``id()`` could alias a recycled address)."""
@@ -401,6 +417,7 @@ def cached_sharded_executor(
         plan.choices,
         id(db),
         E._db_signature(db),
+        E._sigma_signature(sigma),  # Σ drives the fuse pass
         tuple(sorted(mesh.shape.items())),
         axis if isinstance(axis, str) else tuple(axis),
         tuple(shard_rels),
@@ -411,7 +428,7 @@ def cached_sharded_executor(
         run = hit[1]
     else:
         _SHARDED_CACHE_STATS["misses"] += 1
-        run = sharded_executor(plan, db, mesh, axis, shard_rels)
+        run = sharded_executor(plan, db, mesh, axis, shard_rels, sigma=sigma)
         if len(_SHARDED_CACHE) >= _SHARDED_CACHE_MAX:
             _SHARDED_CACHE.pop(next(iter(_SHARDED_CACHE)))
         _SHARDED_CACHE[key] = (db, run)

@@ -50,9 +50,10 @@ class DictResult:
 
 
 def capacity_for(ds: str, n_distinct: int) -> int:
-    """Static capacity: 2× slack for hash load factor / merge headroom."""
-    c = dbase.next_pow2(max(2 * int(n_distinct), 256))
-    return c
+    """Static capacity: 2× slack for hash load factor / merge headroom
+    (the rule itself lives in ``dicts.base.default_capacity`` — shared with
+    the fusion cost model's VMEM estimates)."""
+    return dbase.default_capacity(n_distinct)
 
 
 # ---------------------------------------------------------------------------
@@ -513,6 +514,9 @@ def execute_plan(
                 total[name] = scalar_aggregate(f.primary, col)[0]
             refs[node.out] = total
 
+        elif isinstance(node, P.Pipeline):
+            _run_pipeline(node, env, refs, db, sigma, allow_sorted, params)
+
         elif isinstance(node, P.Repartition):
             if repartition_impl is not None:
                 env[node.out] = repartition_impl(
@@ -544,6 +548,558 @@ def execute_plan(
     if isinstance(out, BuiltDict):
         return out.res
     return out
+
+
+# ---------------------------------------------------------------------------
+# fused pipeline regions (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+
+def _run_pipeline(pipe, env, refs, db, sigma, allow_sorted, params):
+    """Execute a fused ``Pipeline`` region as one streaming pass.
+
+    XLA path: the whole region runs as ONE compiled computation (a jitted
+    region function cached per region structure — data-centric execution,
+    vs. the node-by-node interpretation of the unfused plan) with *pruned*
+    probe gathers: only build-side columns that later stages actually read
+    are gathered, and the full-width intermediate frames, masks, and unused
+    gather columns the materialized executor writes out never exist.  The
+    computations that remain are op-for-op identical to the unfused
+    executor's, so fused and materialized plans produce bitwise-identical
+    results (asserted in tests/test_fusion.py).
+
+    On TPU (or ``REPRO_FORCE_PALLAS=1``), regions whose dictionaries are all
+    ``ht_linear`` and VMEM-sizable instead dispatch to the
+    ``kernels.fused_pipeline`` Pallas kernel: fact tiles stream HBM→VMEM
+    once per tile, dictionaries (and their gather payloads, re-keyed to
+    dictionary slots) stay VMEM-resident across grid steps, and partial
+    aggregates accumulate in VMEM scratch written back only by the final
+    grid step.
+    """
+    from repro.core import plan as P
+
+    need = P.needed_columns(pipe.stages)
+
+    # -- region input: a fresh Scan or an upstream frame (split region) -----
+    stages = pipe.stages
+    if isinstance(stages[0], P.Scan):
+        sc = stages[0]
+        if sc.source in env:
+            src = env[sc.source]
+            if isinstance(src, BuiltDict):
+                t, rel = _dict_scan_table(src), None
+            elif isinstance(src, Table):
+                t, rel = src, None
+            else:
+                raise TypeError(f"cannot scan {sc.source}")
+        else:
+            t, rel = db[sc.source], sc.source
+        f = Frame({sc.var: t}, (sc.var,), {sc.var: rel})
+        rest = stages[1:]
+    else:
+        f = env[pipe.source]
+        assert isinstance(f, Frame), pipe.source
+        rest = stages
+
+    if _kernel_pipeline(rest, f, env, refs, sigma, allow_sorted, params, need):
+        return
+
+    # -- referenced dictionaries and pruned gather sources ------------------
+    dict_syms = []
+    for node in rest:
+        if isinstance(node, (P.HashProbe, P.GroupJoin)):
+            dict_syms.append(node.build)
+        elif isinstance(node, P.Reduce) and node.lookup_sym is not None:
+            dict_syms.append(node.lookup_sym)
+    dict_syms = tuple(dict.fromkeys(dict_syms))
+    builts = {s: env[s] for s in dict_syms}
+    src_cols: Dict[str, Dict[str, jax.Array]] = {}
+    for node in rest:
+        if isinstance(node, P.HashProbe):
+            b = builts[node.build]
+            want = need.get(node.inner_var, ())
+            src_cols[node.out] = {
+                c: b.src.col(c) for c in b.src.names() if c in want
+            }
+
+    # -- one compiled computation per region structure ----------------------
+    statics = (
+        repr((pipe.source, pipe.stages)),
+        tuple(
+            (
+                v,
+                f.tables[v].sorted_on,
+                f.tables[v].nrows,
+                f.rels.get(v),
+                f.tables[v].mask is not None,
+                tuple(sorted(f.tables[v].columns)),
+            )
+            for v in f.order
+        ),
+        tuple(
+            (s, builts[s].res.ds, builts[s].kind, builts[s].lanes,
+             builts[s].choice)
+            for s in dict_syms
+        ),
+        tuple((o, tuple(sorted(cs))) for o, cs in src_cols.items()),
+        bool(allow_sorted),
+        _sigma_signature(sigma),
+    )
+    entry = _REGION_CACHE.get(statics)
+    if entry is None:
+        entry = _make_region_fn(
+            rest, f, builts, src_cols, sigma, allow_sorted, need
+        )
+        if len(_REGION_CACHE) >= _REGION_CACHE_MAX:
+            _REGION_CACHE.pop(next(iter(_REGION_CACHE)))
+        _REGION_CACHE[statics] = entry
+    fn, holder = entry
+
+    frame_cols = {v: dict(f.tables[v].columns) for v in f.order}
+    frame_masks = {
+        v: f.tables[v].mask for v in f.order if f.tables[v].mask is not None
+    }
+    dict_tables = {s: builts[s].res.table for s in dict_syms}
+    out = fn(frame_cols, frame_masks, dict_tables, src_cols, dict(params or {}))
+
+    term = rest[-1]
+    kind = holder[0]
+    if kind == "refs":
+        refs[term.out] = out
+    elif kind == "table":
+        cols, mask = out
+        n = f.tables[f.order[0]].nrows
+        env[term.out] = Table(dict(cols), n, mask=mask, sorted_on=holder[1])
+    elif kind == "index":
+        env[term.out] = BuiltDict(
+            DictResult(term.choice.ds, out), term.choice, kind="index",
+            src=f.primary,
+        )
+    else:  # aggregate dictionary
+        lanes = (
+            tuple(a for a, _ in term.values)
+            if isinstance(term, P.GroupBy)
+            else ("_0",)
+        )
+        env[term.out] = BuiltDict(
+            DictResult(term.choice.ds, out), term.choice, lanes=lanes
+        )
+
+
+_REGION_CACHE: Dict[tuple, tuple] = {}
+_REGION_CACHE_MAX = 256
+
+
+def _make_region_fn(rest, f0, builts, src_cols0, sigma, allow_sorted, need):
+    """Build the jitted pure function executing a region's stages.  Static
+    structure (stage list, frame layout, dictionary metadata, Σ) is closed
+    over; arrays (frame columns/masks, dictionary tables, pruned gather
+    sources, params) are traced arguments, so parameter rebinds re-enter
+    the compiled computation."""
+    from repro.core import plan as P
+
+    order = f0.order
+    rels = dict(f0.rels)
+    sorted_ons = {v: f0.tables[v].sorted_on for v in order}
+    nrows = {v: f0.tables[v].nrows for v in order}
+    dict_meta = {
+        s: (b.res.ds, b.kind, b.lanes, b.choice) for s, b in builts.items()
+    }
+    holder = [None, None]
+
+    def run(frame_cols, frame_masks, dict_tables, src_cols, pvals):
+        from repro.core import llql as L
+        from repro.core.lower import compile_rowfn_frame as _rowfn_frame
+
+        def rowfn(x, tables):
+            return _rowfn_frame(x, tables, pvals)
+
+        f = Frame(
+            {
+                v: Table(
+                    dict(frame_cols[v]),
+                    nrows[v],
+                    mask=frame_masks.get(v),
+                    sorted_on=sorted_ons[v],
+                )
+                for v in order
+            },
+            order,
+            rels,
+        )
+        denv = {
+            s: BuiltDict(
+                DictResult(ds, dict_tables[s]), choice, lanes=lanes, kind=kind
+            )
+            for s, (ds, kind, lanes, choice) in dict_meta.items()
+        }
+
+        for node in rest:
+            if isinstance(node, P.Select):
+                m = rowfn(node.pred, f.tables)
+                f = f.with_mask(jnp.asarray(m, bool))
+
+            elif isinstance(node, P.HashProbe):
+                b = denv[node.build]
+                keys = jnp.asarray(rowfn(node.keyexpr, f.tables), jnp.int32)
+                _, _, srt = _key_info(f, node.keyexpr)
+                srt = srt and allow_sorted
+                vals, found = lookup_dict(
+                    b.res,
+                    keys,
+                    valid=f.primary.mask,
+                    sorted_probes=srt and (node.hinted or b.choice.hinted),
+                )
+                ridx = jnp.where(found, vals[:, 0].astype(jnp.int32), 0)
+                gcols = {
+                    c: jnp.where(
+                        found, a[ridx], jnp.zeros((), a.dtype)
+                    )  # pruned: only columns later stages read are gathered
+                    for c, a in src_cols[node.out].items()
+                }
+                gathered = Table(gcols, f.primary.nrows, mask=found)
+                masked = f.with_mask(found)
+                f = Frame(
+                    {**masked.tables, node.inner_var: gathered},
+                    masked.order + (node.inner_var,),
+                    {**masked.rels, node.inner_var: None},
+                )
+
+            elif isinstance(node, P.Project):
+                n = f.primary.nrows
+                cols = {}
+                sorted_on: Tuple[str, ...] = ()
+                for name, fx in node.fields:
+                    col = jnp.asarray(rowfn(fx, f.tables))
+                    cols[name] = jnp.broadcast_to(col, (n,))
+                    if (
+                        not sorted_on
+                        and isinstance(fx, L.FieldAccess)
+                        and isinstance(fx.rec, L.FieldAccess)
+                        and fx.rec.name == "key"
+                        and isinstance(fx.rec.rec, L.Var)
+                        and fx.rec.rec.name in f.tables
+                        and f.tables[fx.rec.rec.name].sorted_on[:1]
+                        == (fx.name,)
+                    ):
+                        sorted_on = (name,)
+                holder[0], holder[1] = "table", sorted_on
+                return cols, f.primary.mask
+
+            elif isinstance(node, P.HashBuild):
+                keys = jnp.asarray(rowfn(node.keyexpr, f.tables), jnp.int32)
+                _, _, srt = _key_info(f, node.keyexpr)
+                srt = srt and allow_sorted
+                cap = _capacity(f, node.keyexpr, node.choice.ds, sigma)
+                d = build_index(
+                    node.choice.ds,
+                    keys,
+                    cap,
+                    valid=f.primary.mask,
+                    assume_sorted=srt and (node.choice.hinted or node.hinted),
+                )
+                holder[0] = "index"
+                return d.table
+
+            elif isinstance(node, P.GroupBy):
+                n = f.primary.nrows
+                keys = jnp.asarray(rowfn(node.keyexpr, f.tables), jnp.int32)
+                _, _, srt = _key_info(f, node.keyexpr)
+                srt = srt and allow_sorted
+                lanes = [
+                    jnp.broadcast_to(
+                        jnp.asarray(rowfn(fx, f.tables), jnp.float32), (n,)
+                    )
+                    for _, fx in node.values
+                ]
+                vals = jnp.stack(lanes, axis=1)
+                cap = _capacity(f, node.keyexpr, node.choice.ds, sigma)
+                d = groupby(
+                    f.primary,
+                    keys,
+                    vals,
+                    node.choice.ds,
+                    cap,
+                    assume_sorted=srt and (node.choice.hinted or node.hinted),
+                )
+                holder[0] = "dict"
+                return d.table
+
+            elif isinstance(node, P.GroupJoin):
+                b = denv[node.build]
+                n = f.primary.nrows
+                keys = jnp.asarray(rowfn(node.keyexpr, f.tables), jnp.int32)
+                _, _, srt = _key_info(f, node.keyexpr)
+                srt = srt and allow_sorted
+                f_vals = jnp.broadcast_to(
+                    jnp.asarray(rowfn(node.f_expr, f.tables), jnp.float32),
+                    (n,),
+                )
+                cap = _capacity(f, node.keyexpr, node.choice.ds, sigma)
+                d = groupjoin(
+                    f.primary,
+                    keys,
+                    f_vals[:, None],
+                    b.res,
+                    node.choice.ds,
+                    cap,
+                    sorted_probes=srt and (node.hinted or b.choice.hinted),
+                    assume_sorted=srt and node.choice.hinted,
+                )
+                holder[0] = "dict"
+                return d.table
+
+            elif isinstance(node, P.Reduce):
+                lanes: Tuple[str, ...] = ("m", "c", "c_c")
+                lookup_vals = None
+                if node.lookup_sym is not None:
+                    b = denv[node.lookup_sym]
+                    lanes = b.lanes or lanes
+                    keys = jnp.asarray(
+                        rowfn(node.lookup_key, f.tables), jnp.int32
+                    )
+                    _, _, srt = _key_info(f, node.lookup_key)
+                    srt = srt and allow_sorted
+                    lookup_vals, found = lookup_dict(
+                        b.res,
+                        keys,
+                        valid=f.primary.mask,
+                        sorted_probes=srt and b.choice.hinted,
+                    )
+                    f = f.with_mask(found)
+                total = {}
+                for name, fx in node.fields:
+                    col = _reduce_field(
+                        fx, f, node.lookup_var, lookup_vals, lanes,
+                        params=pvals,
+                    )
+                    total[name] = scalar_aggregate(f.primary, col)[0]
+                holder[0] = "refs"
+                return total
+
+            else:  # pragma: no cover
+                raise AssertionError(node)
+        raise AssertionError("region has no terminal")  # pragma: no cover
+
+    return jax.jit(run), holder
+
+
+def _kernel_pipeline(rest, f, env, refs, sigma, allow_sorted, params, need):
+    """Try the fused Pallas kernel for the (already input-resolved) region;
+    returns True when it ran and stored the terminal's result.  Falls back
+    (returns False) whenever the region shape is outside the kernel's
+    contract: every probed/looked-up dictionary and the terminal's output
+    must be ``ht_linear`` (the kernel probes and accumulates with the linear
+    scheme in VMEM) with capacity ≤ 64k, and the terminal must be a
+    GroupBy/GroupJoin/Reduce."""
+    from repro.core import plan as P
+    from repro.kernels import ops as _kops
+
+    use_pallas, interpret = _kops.fused_pipeline_policy()
+    if not use_pallas:
+        return False
+    term = rest[-1] if rest else None
+    if not isinstance(term, (P.GroupBy, P.GroupJoin, P.Reduce)):
+        return False
+    MAX_C = 1 << 16
+
+    def _resident_ok(b) -> bool:
+        return (
+            isinstance(b, BuiltDict)
+            and b.res.ds == "ht_linear"
+            and isinstance(b.res.table, dbase.HashTable)
+            and b.res.table.capacity <= MAX_C
+        )
+
+    # resident slabs are keyed by build symbol: two probes of the same
+    # dictionary would alias each other's gather payloads — take the exact
+    # XLA path for that (rare) shape instead
+    probe_builds = [n.build for n in rest if isinstance(n, P.HashProbe)]
+    if len(set(probe_builds)) != len(probe_builds):
+        return False
+    dicts = {}  # sym -> (keys [C], float_vals [C, Vf], int_vals [C, Vi])
+    probe_meta = {}  # probe node out -> ((float cols, dtypes), (int cols, dtypes))
+    for node in rest:
+        if isinstance(node, P.HashProbe):
+            b = env[node.build]
+            if not (_resident_ok(b) and b.kind == "index"):
+                return False
+            src_t = b.src
+            want = tuple(c for c in src_t.names() if c in need.get(node.inner_var, ()))
+            ht = b.res.table
+            slot_ok = ht.keys != dbase.EMPTY
+            rowidx = jnp.where(slot_ok, ht.vals[:, 0].astype(jnp.int32), 0)
+            # gather payload re-keyed to dictionary slots: the probe then
+            # yields the needed build columns directly, C-bounded in VMEM.
+            # Integer columns ride a separate int32 slab — a float32
+            # round-trip would corrupt values above 2^24.
+            want_f = tuple(
+                c for c in want if jnp.issubdtype(src_t.col(c).dtype, jnp.floating)
+            )
+            want_i = tuple(c for c in want if c not in want_f)
+            gathered = {
+                c: jnp.where(
+                    slot_ok, src_t.col(c)[rowidx], jnp.zeros((), src_t.col(c).dtype)
+                )
+                for c in want
+            }
+            fv = (
+                jnp.stack([gathered[c].astype(jnp.float32) for c in want_f], axis=1)
+                if want_f
+                else jnp.zeros((ht.capacity, 0), jnp.float32)
+            )
+            iv = (
+                jnp.stack([gathered[c].astype(jnp.int32) for c in want_i], axis=1)
+                if want_i
+                else jnp.zeros((ht.capacity, 0), jnp.int32)
+            )
+            dicts[node.build] = (ht.keys, fv, iv)
+            probe_meta[node.out] = (
+                (want_f, tuple(src_t.col(c).dtype for c in want_f)),
+                (want_i, tuple(src_t.col(c).dtype for c in want_i)),
+            )
+        elif isinstance(node, P.GroupJoin):
+            b = env[node.build]
+            if not _resident_ok(b):
+                return False
+            ht = b.res.table
+            dicts[node.build] = (
+                ht.keys, ht.vals, jnp.zeros((ht.capacity, 0), jnp.int32)
+            )
+        elif isinstance(node, P.Reduce) and node.lookup_sym is not None:
+            b = env[node.lookup_sym]
+            if not _resident_ok(b):
+                return False
+            ht = b.res.table
+            dicts[node.lookup_sym] = (
+                ht.keys, ht.vals, jnp.zeros((ht.capacity, 0), jnp.int32)
+            )
+    if isinstance(term, (P.GroupBy, P.GroupJoin)):
+        if term.choice.ds != "ht_linear":
+            return False
+        out_cap = _capacity(f, term.keyexpr, term.choice.ds, sigma)
+        if out_cap > MAX_C:
+            return False
+        n_lanes = len(term.values) if isinstance(term, P.GroupBy) else (
+            env[term.build].res.table.vals.shape[1]
+        )
+        out_spec = ("dict", out_cap, n_lanes)
+    else:
+        if isinstance(env.get(term.lookup_sym), BuiltDict):
+            lanes = env[term.lookup_sym].lanes or ("m", "c", "c_c")
+        else:
+            lanes = ("m", "c", "c_c")
+        out_spec = ("sum", len(term.fields))
+
+    # flatten the streamed columns (pruned to what the region reads)
+    cols = {}
+    for var in f.order:
+        t = f.tables[var]
+        for c in t.names():
+            if c in need.get(var, ()):
+                cols[f"{var}\0{c}"] = t.col(c)
+    live = f.primary.live_mask()
+    scalars = {
+        k: jnp.asarray(v).reshape(1) for k, v in (params or {}).items()
+    }
+
+    def row_fn(tile_cols, tile_live, lookups, tile_scalars):
+        from repro.core.lower import compile_rowfn_frame as _rf
+
+        B = tile_live.shape[0]
+        tabs = {}
+        for var in f.order:
+            pre = f"{var}\0"
+            tabs[var] = {
+                k[len(pre):]: a for k, a in tile_cols.items() if k.startswith(pre)
+            }
+        cur_live = tile_live
+
+        def frame_tables():
+            return {
+                v: Table(dict(c), B, mask=cur_live) for v, c in tabs.items()
+            }
+
+        def rf(x):
+            return _rf(x, frame_tables(), tile_scalars)
+
+        out_keys = out_vals = None
+        for node in rest:
+            if isinstance(node, P.Select):
+                cur_live = cur_live & jnp.asarray(rf(node.pred), bool)
+            elif isinstance(node, P.HashProbe):
+                qs = jnp.asarray(rf(node.keyexpr), jnp.int32)
+                pf, pi, pfound = lookups[node.build](qs)
+                cur_live = cur_live & pfound
+                (want_f, f_dts), (want_i, i_dts) = probe_meta[node.out]
+                tabs[node.inner_var] = {
+                    **{
+                        c: pf[:, i].astype(dt)
+                        for i, (c, dt) in enumerate(zip(want_f, f_dts))
+                    },
+                    **{
+                        c: pi[:, i].astype(dt)
+                        for i, (c, dt) in enumerate(zip(want_i, i_dts))
+                    },
+                }
+            elif isinstance(node, P.GroupBy):
+                out_keys = jnp.asarray(rf(node.keyexpr), jnp.int32)
+                lanes_v = [
+                    jnp.broadcast_to(
+                        jnp.asarray(rf(fx), jnp.float32), (B,)
+                    )
+                    for _, fx in node.values
+                ]
+                out_vals = jnp.stack(lanes_v, axis=1)
+            elif isinstance(node, P.GroupJoin):
+                out_keys = jnp.asarray(rf(node.keyexpr), jnp.int32)
+                g_vals, _, g_found = lookups[node.build](out_keys)
+                cur_live = cur_live & g_found
+                f_v = jnp.broadcast_to(
+                    jnp.asarray(rf(node.f_expr), jnp.float32), (B,)
+                )
+                out_vals = f_v[:, None] * g_vals
+            elif isinstance(node, P.Reduce):
+                lookup_vals = None
+                if node.lookup_sym is not None:
+                    qs = jnp.asarray(rf(node.lookup_key), jnp.int32)
+                    lookup_vals, _, lfound = lookups[node.lookup_sym](qs)
+                    cur_live = cur_live & lfound
+                frame = Frame(frame_tables(), tuple(tabs), {})
+                cols_v = [
+                    jnp.broadcast_to(
+                        _reduce_field(
+                            fx, frame, node.lookup_var, lookup_vals,
+                            lanes, params=tile_scalars,
+                        ),
+                        (B,),
+                    )
+                    for _, fx in node.fields
+                ]
+                out_vals = jnp.stack(cols_v, axis=1)
+        return out_keys, out_vals, cur_live
+
+    from repro.kernels import fused_pipeline as _fp
+
+    out = _fp.fused_pipeline(
+        cols, live, dicts, scalars, row_fn, out_spec, interpret=interpret
+    )
+    if out_spec[0] == "dict":
+        tk, tv = out
+        res = DictResult(
+            "ht_linear", dbase.HashTable(tk, tv, jnp.int32(_fp.MAX_PROBES))
+        )
+        if isinstance(term, P.GroupBy):
+            env[term.out] = BuiltDict(
+                res, term.choice, lanes=tuple(a for a, _ in term.values)
+            )
+        else:
+            env[term.out] = BuiltDict(res, term.choice, lanes=("_0",))
+    else:
+        refs[term.out] = {
+            name: out[i] for i, (name, _) in enumerate(term.fields)
+        }
+    return True
 
 
 def _reduce_field(fx, frame: Frame, lookup_var, lookup_vals, lane_names, params=None):

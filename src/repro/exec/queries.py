@@ -85,14 +85,17 @@ def _run_llql(
     params: Dict[str, object],
 ):
     """The derived physical plan: compile the LLQL under the synthesized
-    choices and execute through the executable cache — the paper's
+    choices, fuse the row-parallel regions (a costed choice under Δ_fuse —
+    DESIGN.md §7), and execute through the executable cache — the paper's
     generate-then-run, with compile-once/execute-many on top: recompiling
     the same (program, choices) is a cache hit, and the binding is passed
     as runtime scalars."""
+    from repro.core import plan as P
     from repro.core.lower import compile as compile_plan
 
-    plan = compile_plan(prog, choices)
-    ex = E.cached_executable(plan, db, sigma=_stats_for(db))
+    sigma = _stats_for(db)
+    plan = P.fuse(compile_plan(prog, choices), sigma=sigma)
+    ex = E.cached_executable(plan, db, sigma=sigma)
     return ex(db, params).items_np()
 
 
@@ -548,7 +551,9 @@ def run_sharded(
 
     q = QUERIES[qname]
     plan = compile_plan(q.llql(), choices)
-    run = D.cached_sharded_executor(plan, db, mesh, axis, shard_rels=shard_rels)
+    run = D.cached_sharded_executor(
+        plan, db, mesh, axis, shard_rels=shard_rels, sigma=_stats_for(db)
+    )
     return run(q.bind_defaults(params)).items_np()
 
 

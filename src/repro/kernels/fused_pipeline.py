@@ -1,0 +1,268 @@
+"""Pallas TPU kernel: data-centric pipeline fusion (DESIGN.md §7).
+
+One kernel executes a whole ``Pipeline`` region — the paper's data-centric
+codegen story (rows flow scan → filter → probe → aggregate without
+materializing intermediates) mapped onto the TPU grid:
+
+* **fact tiles stream HBM→VMEM once per grid step** (one BlockSpec per
+  pruned input column — only columns the region reads are streamed);
+* **predicates evaluate to in-register masks** — no mask column ever
+  round-trips through HBM;
+* **probed dictionaries stay VMEM-resident across grid steps** (constant
+  index maps, reusing the ``hash_probe`` layout and its C ≤ 64k guarantee);
+  join gathers ride a *payload* slab re-keyed to dictionary slots, so the
+  probe yields the needed build-side columns directly;
+* **partial aggregates accumulate into VMEM scratch** (the ``hash_build``
+  round-insert for dictionary terminals, a running [1, V] sum for scalar
+  Reduce) that only the final grid step writes back.
+
+The region's row-level semantics arrive as ``row_fn`` — a traced callable
+the executor assembles from the plan stages (``exec.engine._kernel_pipeline``)
+— so this module stays a pure execution substrate: it owns tiling,
+residency, probing, and accumulation, nothing query-specific.  Probing and
+accumulation use the ``ht_linear`` scheme; the executor only dispatches
+regions whose dictionaries are all ``ht_linear`` (anything else takes the
+pruned XLA path).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.dicts import base as dbase
+from repro.dicts.ht_linear import MAX_PROBES  # the XLA builder's probe bound:
+# tables arrive built by dicts.ht_linear (chains up to MAX_PROBES), so the
+# kernel must probe at least as deep or it would silently miss displaced
+# keys.  Early termination makes the deep bound free on healthy tables.
+from .hash_probe import gather_slots, probe_slots
+
+ROW_BLOCK = 1024
+
+
+def probe_resident(
+    tk: jax.Array,
+    tv: jax.Array,
+    ti: jax.Array,
+    qs: jax.Array,
+    max_probes: int = MAX_PROBES,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One probe (``hash_probe.probe_slots`` — the shared early-terminating
+    loop) against a VMEM-resident dictionary, gathering BOTH payload slabs:
+    ``tv`` carries float lanes, ``ti`` int32 lanes.  Integer build-side
+    columns ride the int slab so gathered values stay exact — a float32
+    round-trip would corrupt values above 2^24.  Returns
+    ``(float_vals, int_vals, found)`` with misses zeroed."""
+    slot, found = probe_slots(tk, qs, max_probes)
+    return gather_slots(tv, slot, found), gather_slots(ti, slot, found), found
+
+
+def _insert_rounds(tk, tv, ks, vs, pending, capacity: int, max_probes: int):
+    """``hash_build``'s round-insert over the scratch accumulator: claim via
+    scatter-max arbitration, aggregate duplicates, advance survivors.
+    Early-terminating (rounds stop once every pending row has written), so
+    the deep ``max_probes`` bound costs nothing on healthy tables."""
+    B = ks.shape[0]
+    ids = lax.broadcasted_iota(jnp.int32, (B,), 0)
+    h0 = dbase.hash1(ks, capacity)
+
+    def round_body(carry):
+        t, tk, tv, pending = carry
+        slot = (h0 + t) & (capacity - 1)
+        cur = jnp.take(tk, slot, axis=0)
+        hit = pending & (cur == ks)
+        want = pending & (cur == dbase.EMPTY)
+        claim = jnp.full((capacity,), -1, jnp.int32).at[
+            jnp.where(want, slot, capacity)
+        ].max(ids, mode="drop")
+        won = want & (jnp.take(claim, slot, axis=0) == ids)
+        tk = tk.at[jnp.where(won, slot, capacity)].set(ks, mode="drop")
+        cur2 = jnp.take(tk, slot, axis=0)
+        hit2 = pending & ~hit & ~won & (cur2 == ks)
+        write = hit | won | hit2
+        tv = tv.at[jnp.where(write, slot, capacity)].add(vs, mode="drop")
+        return t + 1, tk, tv, pending & ~write
+
+    def cond(carry):
+        t, _, _, pending = carry
+        return jnp.any(pending) & (t < max_probes)
+
+    _, tk, tv, _ = lax.while_loop(
+        cond, round_body, (jnp.int32(0), tk, tv, pending)
+    )
+    return tk, tv
+
+
+def _kernel(
+    *refs,
+    col_names,
+    dict_syms,
+    scalar_names,
+    row_fn,
+    out_spec,
+    n_tiles,
+    max_probes,
+):
+    # refs layout: col tiles | live | (keys, fvals, ivals) per dict |
+    #              scalars | outputs | scratch
+    nc, nd, ns = len(col_names), len(dict_syms), len(scalar_names)
+    col_refs = refs[:nc]
+    live_ref = refs[nc]
+    dict_refs = refs[nc + 1 : nc + 1 + 3 * nd]
+    scalar_refs = refs[nc + 1 + 3 * nd : nc + 1 + 3 * nd + ns]
+    rest = refs[nc + 1 + 3 * nd + ns :]
+
+    g = pl.program_id(0)
+    cols = {name: r[...] for name, r in zip(col_names, col_refs)}
+    live = live_ref[...] != 0
+
+    lookups: Dict[str, Callable] = {}
+    for i, sym in enumerate(dict_syms):
+        tk = dict_refs[3 * i][...]
+        tv = dict_refs[3 * i + 1][...]
+        ti = dict_refs[3 * i + 2][...]
+        lookups[sym] = functools.partial(
+            probe_resident, tk, tv, ti, max_probes=max_probes
+        )
+    scalars = {name: r[0] for name, r in zip(scalar_names, scalar_refs)}
+
+    keys, vals, live = row_fn(cols, live, lookups, scalars)
+
+    if out_spec[0] == "dict":
+        out_keys_ref, out_vals_ref, tk_scr, tv_scr = rest
+        capacity = out_spec[1]
+
+        @pl.when(g == 0)
+        def _init():
+            tk_scr[...] = jnp.full_like(tk_scr, dbase.EMPTY)
+            tv_scr[...] = jnp.zeros_like(tv_scr)
+
+        ks = jnp.where(live, keys, dbase.PAD)
+        tk, tv = _insert_rounds(
+            tk_scr[...], tv_scr[...], ks, vals, live, capacity, max_probes
+        )
+        tk_scr[...] = tk
+        tv_scr[...] = tv
+
+        @pl.when(g == n_tiles - 1)
+        def _finish():
+            out_keys_ref[...] = tk_scr[...]
+            out_vals_ref[...] = tv_scr[...]
+
+    else:  # scalar reduce: running [1, V] sum in scratch
+        out_ref, sum_scr = rest
+
+        @pl.when(g == 0)
+        def _init_sum():
+            sum_scr[...] = jnp.zeros_like(sum_scr)
+
+        sum_scr[...] += jnp.sum(
+            jnp.where(live[:, None], vals, 0.0), axis=0, keepdims=True
+        )
+
+        @pl.when(g == n_tiles - 1)
+        def _finish_sum():
+            out_ref[...] = sum_scr[...]
+
+
+def fused_pipeline(
+    cols: Dict[str, jax.Array],  # [n] aligned streamed (pruned) columns
+    live: jax.Array,  # [n] bool initial row mask
+    dicts: Dict[str, Tuple[jax.Array, jax.Array, jax.Array]],  # resident slabs
+    scalars: Dict[str, jax.Array],  # param name -> [1] runtime scalar
+    row_fn: Callable,  # (cols, live, lookups, scalars) -> (keys, vals, live)
+    out_spec: Tuple,  # ("dict", capacity, V) | ("sum", V)
+    *,
+    block: int = ROW_BLOCK,
+    max_probes: int = MAX_PROBES,
+    interpret: bool = True,
+):
+    """Run one fused region.  ``dicts`` maps each symbol to its resident
+    ``(keys [C], float_vals [C, Vf], int_vals [C, Vi])`` slabs (either slab
+    may be lane-padded; ``row_fn``'s lookups return both).  Returns
+    ``(table_keys [C], table_vals [C, V])`` for dictionary terminals
+    (``ht_linear`` layout — duplicate keys aggregated) or ``sums [V]`` for
+    scalar Reduce terminals."""
+    n = live.shape[0]
+    pad = -n % block
+    col_names = tuple(sorted(cols))
+    cols_p = [
+        jnp.pad(jnp.asarray(cols[c]), (0, pad)) for c in col_names
+    ]
+    live_p = jnp.pad(live.astype(jnp.int32), (0, pad))
+    n_tiles = (n + pad) // block
+
+    dict_syms = tuple(sorted(dicts))
+    dict_args = []
+    dict_specs = []
+    for sym in dict_syms:
+        tk, tv, ti = dicts[sym]
+        C = tk.shape[0]
+        assert C & (C - 1) == 0, "capacity must be a power of two"
+        if tv.shape[1] == 0:  # pallas rejects zero-width blocks: pad a lane
+            tv = jnp.zeros((C, 1), tv.dtype)
+        if ti.shape[1] == 0:
+            ti = jnp.zeros((C, 1), ti.dtype)
+        dict_args += [tk, tv, ti]
+        dict_specs += [
+            pl.BlockSpec((C,), lambda i: (0,)),  # resident across steps
+            pl.BlockSpec((C, tv.shape[1]), lambda i: (0, 0)),
+            pl.BlockSpec((C, ti.shape[1]), lambda i: (0, 0)),
+        ]
+
+    scalar_names = tuple(sorted(scalars))
+    scalar_args = [scalars[s] for s in scalar_names]
+    scalar_specs = [pl.BlockSpec((1,), lambda i: (0,)) for _ in scalar_names]
+
+    if out_spec[0] == "dict":
+        _, capacity, V = out_spec
+        assert capacity & (capacity - 1) == 0
+        out_specs = [
+            pl.BlockSpec((capacity,), lambda i: (0,)),
+            pl.BlockSpec((capacity, V), lambda i: (0, 0)),
+        ]
+        out_shape = [
+            jax.ShapeDtypeStruct((capacity,), jnp.int32),
+            jax.ShapeDtypeStruct((capacity, V), jnp.float32),
+        ]
+        scratch = [
+            pltpu.VMEM((capacity,), jnp.int32),
+            pltpu.VMEM((capacity, V), jnp.float32),
+        ]
+    else:
+        _, V = out_spec
+        out_specs = [pl.BlockSpec((1, V), lambda i: (0, 0))]
+        out_shape = [jax.ShapeDtypeStruct((1, V), jnp.float32)]
+        scratch = [pltpu.VMEM((1, V), jnp.float32)]
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel,
+            col_names=col_names,
+            dict_syms=dict_syms,
+            scalar_names=scalar_names,
+            row_fn=row_fn,
+            out_spec=out_spec,
+            n_tiles=n_tiles,
+            max_probes=max_probes,
+        ),
+        grid=(n_tiles,),
+        in_specs=(
+            [pl.BlockSpec((block,), lambda i: (i,)) for _ in col_names]
+            + [pl.BlockSpec((block,), lambda i: (i,))]
+            + dict_specs
+            + scalar_specs
+        ),
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(*cols_p, live_p, *dict_args, *scalar_args)
+    if out_spec[0] == "dict":
+        return out[0], out[1]
+    return out[0][0]

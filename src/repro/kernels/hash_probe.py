@@ -27,34 +27,63 @@ from jax.experimental import pallas as pl
 from repro.dicts import base as dbase
 
 QUERY_BLOCK = 512
-MAX_PROBES = 32
+# Must cover the deepest probe chain the XLA builder can create
+# (dicts.ht_linear.MAX_PROBES) — a shallower bound would silently miss
+# displaced keys on skewed tables.  Early termination (probe_slots) makes
+# the deep bound free on healthy tables.
+MAX_PROBES = 128
+
+
+def probe_slots(
+    table_keys: jax.Array, queries: jax.Array, max_probes: int = MAX_PROBES
+) -> Tuple[jax.Array, jax.Array]:
+    """The linear-probe slot search over a VMEM-resident key array, with
+    early termination: rounds stop as soon as every lane has hit or reached
+    an EMPTY slot, so probes on low-occupancy tables finish in 1–2 rounds
+    instead of always paying ``max_probes``.  Returns ``(slot [B] int32, -1
+    on miss; found [B] bool)``.  The ONE probe-loop definition — shared by
+    this kernel and ``kernels.fused_pipeline``."""
+    tk = table_keys
+    C = tk.shape[0]
+    B = queries.shape[0]
+    h0 = dbase.hash1(queries, C)
+
+    def body(carry):
+        t, active, slot_found = carry
+        slot = (h0 + t) & (C - 1)
+        cur = jnp.take(tk, slot, axis=0)  # vector gather within VMEM
+        hit = active & (cur == queries)
+        miss = active & (cur == dbase.EMPTY)
+        slot_found = jnp.where(hit, slot, slot_found)
+        active = active & ~hit & ~miss
+        return t + 1, active, slot_found
+
+    def cond(carry):
+        t, active, _ = carry
+        return jnp.any(active) & (t < max_probes)
+
+    _, _, slot_found = jax.lax.while_loop(
+        cond,
+        body,
+        (jnp.int32(0), jnp.ones((B,), bool), jnp.full((B,), -1, jnp.int32)),
+    )
+    return slot_found, slot_found >= 0
+
+
+def gather_slots(
+    table_vals: jax.Array, slot: jax.Array, found: jax.Array
+) -> jax.Array:
+    """Gather value rows at probed slots, zeroing misses (dtype-exact)."""
+    vals = jnp.take(table_vals, jnp.where(found, slot, 0), axis=0)
+    return jnp.where(found[:, None], vals, jnp.zeros((), table_vals.dtype))
 
 
 def _kernel(keys_ref, vals_ref, q_ref, out_vals_ref, out_found_ref, *, max_probes):
     tk = keys_ref[...]  # [C] int32 — VMEM resident
     tv = vals_ref[...]  # [C, V]
     q = q_ref[...]  # [B]
-    C = tk.shape[0]
-    B = q.shape[0]
-
-    h0 = dbase.hash1(q, C)
-
-    def body(t, carry):
-        active, slot_found = carry
-        slot = (h0 + t) & (C - 1)
-        cur = jnp.take(tk, slot, axis=0)  # vector gather within VMEM
-        hit = active & (cur == q)
-        miss = active & (cur == dbase.EMPTY)
-        slot_found = jnp.where(hit, slot, slot_found)
-        active = active & ~hit & ~miss
-        return active, slot_found
-
-    active0 = jnp.ones((B,), bool)
-    slot0 = jnp.full((B,), -1, jnp.int32)
-    _, slot_found = jax.lax.fori_loop(0, max_probes, body, (active0, slot0))
-    found = slot_found >= 0
-    vals = jnp.take(tv, jnp.where(found, slot_found, 0), axis=0)
-    out_vals_ref[...] = jnp.where(found[:, None], vals, 0.0)
+    slot, found = probe_slots(tk, q, max_probes)
+    out_vals_ref[...] = gather_slots(tv, slot, found)
     out_found_ref[...] = found.astype(jnp.int32)
 
 

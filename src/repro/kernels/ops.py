@@ -37,6 +37,14 @@ def _interpret() -> bool:
     return not _on_tpu()
 
 
+def fused_pipeline_policy() -> Tuple[bool, bool]:
+    """(use_pallas, interpret) for the fused Pipeline-region kernel — the
+    executor (``exec.engine._kernel_pipeline``) consults this before
+    dispatching a region to ``kernels.fused_pipeline``; on CPU the pruned
+    XLA path is both the oracle and the faster choice."""
+    return _use_pallas(), _interpret()
+
+
 def hash_probe(table_keys, table_vals, queries) -> Tuple[jax.Array, jax.Array]:
     if _use_pallas():
         return _hp.hash_probe(
@@ -72,8 +80,12 @@ def segment_reduce(keys, vals) -> Tuple[jax.Array, jax.Array]:
 
 def flash_attention(q, k, v, *, causal=True, window=0, kv_valid=None) -> jax.Array:
     if _use_pallas() and kv_valid is None:
-        # dynamic kv_valid masks take the XLA path (kernel support: TODO via
-        # scalar prefetch; only the serve path uses it)
+        # dynamic kv_valid masks take the XLA path (the Pallas kernel has no
+        # scalar-prefetch mask; only the serve path passes kv_valid).  The
+        # fallback's contract — masking kv slots >= kv_valid is identical to
+        # attending over k[:, :, :kv_valid] — is pinned against the kernel
+        # path by tests/test_kernels.py::test_kv_valid_fallback_matches_kernel
+        # so the two paths cannot silently diverge.
         return _fa.flash_attention(
             q, k, v, causal=causal, window=window, interpret=_interpret()
         )

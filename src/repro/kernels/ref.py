@@ -21,7 +21,7 @@ def hash_probe(
     table_keys: jax.Array,  # [C] int32, EMPTY sentinel
     table_vals: jax.Array,  # [C, V] float32
     queries: jax.Array,  # [N] int32
-    max_probes: int = 32,
+    max_probes: int = 128,  # covers dicts.ht_linear.MAX_PROBES build chains
 ) -> Tuple[jax.Array, jax.Array]:
     C = table_keys.shape[0]
     t = dbase.HashTable(table_keys, table_vals, jnp.int32(max_probes))

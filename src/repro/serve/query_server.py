@@ -102,9 +102,11 @@ class QueryServer:
         t0 = time.perf_counter()
         res = synthesize(q.llql(), self.sigma, self.delta)
         self.counters["synth_runs"] += 1
+        from repro.core import plan as P
         from repro.core.lower import compile as compile_plan
 
-        plan = compile_plan(q.llql(), res.choices)
+        # the served shape is the fused production form (DESIGN.md §7)
+        plan = P.fuse(compile_plan(q.llql(), res.choices), sigma=self.sigma)
         ex = E.cached_executable(plan, self.db, sigma=self.sigma)
         # trigger the trace now so the first serve measures warm execution
         ex(self.db, q.bind_defaults({}))

@@ -1,0 +1,370 @@
+"""Data-centric pipeline fusion (DESIGN.md §7): region formation under
+Δ_fuse, VMEM-budget splitting, fused-vs-materialized result equivalence
+(bitwise, single-shard and sharded), param rebinds through the executable
+cache with the trace count flat, and the fused Pallas kernel path."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import llql as L
+from repro.core import plan as P
+from repro.core.cardinality import CardModel, ColumnStats, RelStats
+from repro.core.cost import DictChoice, FusionCostModel
+from repro.core.lower import compile as compile_plan
+from repro.data import tpch
+from repro.data.table import collect_stats, from_numpy
+from repro.exec import engine as E
+from repro.exec.queries import QUERIES
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+BINDINGS = {
+    "q1": [{"date": 0.9}, {"date": 0.5}],
+    "q3": [{"date": 0.05}, {"date": 0.15}],
+    "q5": [{"region": 0}, {"region": 2}],
+    "q9": [{"color": 3}, {"color": 7}],
+    "q18": [{"threshold": 150.0}, {"threshold": 80.0}],
+}
+
+
+@pytest.fixture(scope="module")
+def db():
+    return tpch.generate(scale=0.002, seed=3).tables()
+
+
+@pytest.fixture(scope="module")
+def sigma(db):
+    return collect_stats(db)
+
+
+# ---------------------------------------------------------------------------
+# region formation
+# ---------------------------------------------------------------------------
+
+
+def test_fuse_forms_regions_on_all_queries(sigma):
+    """Every TPC-H query's hot row-parallel chain becomes a Pipeline; chains
+    with nothing to elide (bare Scan→build) stay materialized."""
+    expected = {
+        "q1": ["Pipeline"],
+        "q3": ["Pipeline", "Pipeline"],
+        "q18": ["Scan", "GroupBy", "Scan", "HashBuild", "Pipeline"],
+    }
+    for qname, kinds in expected.items():
+        fplan = P.fuse(compile_plan(QUERIES[qname].llql(), {}), sigma=sigma)
+        assert [type(n).__name__ for n in fplan.nodes] == kinds, qname
+    for qname in ("q5", "q9"):
+        fplan = P.fuse(compile_plan(QUERIES[qname].llql(), {}), sigma=sigma)
+        assert any(isinstance(n, P.Pipeline) for n in fplan.nodes), qname
+
+
+def test_fuse_describe_golden_q18(sigma):
+    fplan = P.fuse(compile_plan(QUERIES["q18"].llql(), {}), sigma=sigma)
+    assert fplan.describe() == "\n".join(
+        [
+            "Scan %0 <- lineitem as l",
+            "GroupBy QtyAgg <- %0 [ht_linear] lanes=_0",
+            "Scan %1 <- orders as o",
+            "HashBuild OD <- %1 [ht_linear]",
+            "Pipeline Big <- QtyAgg [4 stages]",
+            "  | Scan %2 <- QtyAgg as g",
+            "  | Select %3 <- %2",
+            "  | HashProbe %4 <- %3 ⋈ OD as oo",
+            "  | GroupBy Big <- %4 [ht_linear] lanes=qty,totalprice",
+            "Result Big",
+        ]
+    )
+
+
+def test_fuse_is_a_costed_choice(sigma):
+    """Δ_fuse drives the decision: a zero VMEM budget materializes every
+    region, and fingerprints distinguish fused from unfused plans (the
+    executable cache must not conflate them)."""
+    plan = compile_plan(QUERIES["q1"].llql(), {})
+    none = P.fuse(plan, sigma=sigma, fusion=FusionCostModel(vmem_budget=0))
+    assert none.nodes == plan.nodes
+    fused = P.fuse(plan, sigma=sigma)
+    assert any(isinstance(n, P.Pipeline) for n in fused.nodes)
+    assert fused.fingerprint() != plan.fingerprint()
+
+
+def test_fuse_idempotent_and_legalize_order(sigma):
+    fused = P.fuse(compile_plan(QUERIES["q1"].llql(), {}), sigma=sigma)
+    assert P.fuse(fused, sigma=sigma).nodes == fused.nodes
+    with pytest.raises(P.PlanShardError):
+        P.legalize(fused, ("lineitem",))
+
+
+# ---------------------------------------------------------------------------
+# VMEM-budget split
+# ---------------------------------------------------------------------------
+
+
+def _key(var, col):
+    return L.FieldAccess(L.FieldAccess(L.Var(var), "key"), col)
+
+
+def _two_probe_plan():
+    ch = DictChoice()
+    nodes = (
+        P.Scan("%r", source="R", var="r"),
+        P.HashBuild("IA", source="%r", keyexpr=_key("r", "a"), choice=ch),
+        P.Scan("%r2", source="R", var="r2"),
+        P.HashBuild("IB", source="%r2", keyexpr=_key("r2", "b"), choice=ch),
+        P.Scan("%s", source="S", var="s"),
+        P.HashProbe("%p1", source="%s", build="IA", keyexpr=_key("s", "a"),
+                    inner_var="x"),
+        P.HashProbe("%p2", source="%p1", build="IB", keyexpr=_key("s", "b"),
+                    inner_var="y"),
+        P.GroupBy("Agg", source="%p2", keyexpr=_key("s", "g"),
+                  values=(("t", _key("s", "m")),), choice=ch),
+    )
+    return P.Plan(nodes, "Agg")
+
+
+def _two_probe_sigma():
+    return CardModel(
+        {
+            "R": RelStats(
+                50000.0,
+                {"a": ColumnStats(30000.0), "b": ColumnStats(100.0)},
+            ),
+            "S": RelStats(
+                10000.0,
+                {
+                    "a": ColumnStats(30000.0),
+                    "b": ColumnStats(100.0),
+                    "g": ColumnStats(50.0),
+                    "m": ColumnStats(10000.0),
+                },
+            ),
+        }
+    )
+
+
+def test_fuse_splits_region_over_vmem_budget():
+    """An oversized probed dictionary (IA: ~30k distinct → 64k slots ≈ 512 KiB)
+    must not ride along: under a tight budget the region is SPLIT at the
+    probe boundary — the oversized probe materializes, the rest stays fused
+    — and under a budget too small for even the terminal accumulator the
+    whole chain stays materialized."""
+    plan = _two_probe_plan()
+    sigma = _two_probe_sigma()
+
+    fused = P.fuse(plan, sigma=sigma)  # default 8 MiB: everything fits
+    pipe = next(n for n in fused.nodes if isinstance(n, P.Pipeline))
+    assert [type(s).__name__ for s in pipe.stages] == [
+        "Scan", "HashProbe", "HashProbe", "GroupBy",
+    ]
+
+    split = P.fuse(plan, sigma=sigma, fusion=FusionCostModel(vmem_budget=100_000))
+    kinds = [type(n).__name__ for n in split.nodes]
+    assert kinds == [
+        "Scan", "HashBuild", "Scan", "HashBuild",  # builds, unfused
+        "Scan", "HashProbe",  # peeled: the oversized IA probe materializes
+        "Pipeline",  # the fitting remainder stays fused
+    ]
+    tail = split.nodes[-1]
+    assert isinstance(tail, P.Pipeline) and tail.source == "%p1"
+    assert [type(s).__name__ for s in tail.stages] == ["HashProbe", "GroupBy"]
+
+    none = P.fuse(plan, sigma=sigma, fusion=FusionCostModel(vmem_budget=1_000))
+    assert not any(isinstance(n, P.Pipeline) for n in none.nodes)
+
+
+def test_split_region_executes_bitwise_identically():
+    """A frame-sourced Pipeline (the post-split shape) runs through the
+    executor and matches the materialized plan exactly."""
+    rng = np.random.default_rng(7)
+    R = from_numpy(
+        {
+            "a": np.arange(5000, dtype=np.int32),
+            "b": (np.arange(5000) % 100).astype(np.int32),
+        }
+    )
+    S = from_numpy(
+        {
+            "a": rng.integers(0, 6000, 2000).astype(np.int32),
+            "b": rng.integers(0, 120, 2000).astype(np.int32),
+            "g": rng.integers(0, 50, 2000).astype(np.int32),
+            "m": rng.normal(size=2000).astype(np.float32),
+        }
+    )
+    db = {"R": R, "S": S}
+    plan = _two_probe_plan()
+    sigma = _two_probe_sigma()
+    split = P.fuse(plan, sigma=sigma, fusion=FusionCostModel(vmem_budget=100_000))
+    assert any(isinstance(n, P.Pipeline) for n in split.nodes)
+    a = E.execute_plan(plan, db).items_np()
+    b = E.execute_plan(split, db).items_np()
+    assert set(a) == set(b)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+
+
+# ---------------------------------------------------------------------------
+# fused == materialized, bitwise (single shard)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("qname", sorted(QUERIES))
+def test_fused_matches_materialized_bitwise(qname, db, sigma):
+    """Both plans through the production executable path (fully compiled):
+    results must be bit-for-bit identical — fusion is an execution-strategy
+    choice, never a numerics choice."""
+    q = QUERIES[qname]
+    plan = compile_plan(q.llql(), {})
+    fplan = P.fuse(plan, sigma=sigma)
+    assert any(isinstance(n, P.Pipeline) for n in fplan.nodes), qname
+    a = E.cached_executable(plan, db, sigma=sigma)(db, q.defaults).items_np()
+    b = E.cached_executable(fplan, db, sigma=sigma)(db, q.defaults).items_np()
+    assert set(a) == set(b)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k], err_msg=f"{qname}/{k}")
+
+
+@pytest.mark.parametrize("qname", sorted(QUERIES))
+def test_fused_matches_reference(qname, db, sigma):
+    q = QUERIES[qname]
+    fplan = P.fuse(compile_plan(q.llql(), {}), sigma=sigma)
+    got = E.execute_plan(fplan, db, sigma=sigma, params=q.defaults).items_np()
+    ref = q.reference(db)
+    assert set(got) == set(ref)
+    for k in ref:
+        np.testing.assert_allclose(got[k], ref[k], rtol=3e-3, atol=3e-2)
+
+
+# ---------------------------------------------------------------------------
+# param rebind through the executable cache: zero retracing
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("qname", sorted(QUERIES))
+def test_fused_rebind_trace_count_flat(qname, db, sigma):
+    q = QUERIES[qname]
+    fplan = P.fuse(compile_plan(q.llql(), {}), sigma=sigma)
+    ex = E.cached_executable(fplan, db, sigma=sigma)
+    ex(db, BINDINGS[qname][0])
+    traces = ex.trace_count
+    assert traces >= 1
+    # a freshly re-compiled + re-fused structurally identical plan hits the
+    # same executable; a fresh binding re-enters the existing trace
+    ex2 = E.cached_executable(
+        P.fuse(compile_plan(q.llql(), {}), sigma=sigma), db, sigma=sigma
+    )
+    assert ex2 is ex
+    ex2(db, BINDINGS[qname][1])
+    assert ex2.trace_count == traces
+
+
+# ---------------------------------------------------------------------------
+# sharded: fused == materialized bitwise at 1/2/4 shards
+# ---------------------------------------------------------------------------
+
+
+def _run(code: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=540,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+@pytest.mark.parametrize("shards", [1, 2, 4])
+def test_fused_sharded_matches_unfused_sharded(shards):
+    out = _run(
+        f"""
+        import numpy as np
+        from repro import compat
+        from repro.core.lower import compile as compile_plan
+        from repro.data import tpch
+        from repro.data.table import collect_stats
+        from repro.exec import distributed as D
+        from repro.exec.queries import FACT_RELS, QUERIES
+
+        db = tpch.generate(scale=0.002, seed=3).tables()
+        sigma = collect_stats(db)
+        mesh = compat.make_mesh(({shards},), ("data",))
+        for qname in sorted(QUERIES):
+            q = QUERIES[qname]
+            plan = compile_plan(q.llql(), {{}})
+            mat = D.execute_plan_sharded(
+                plan, db, mesh, "data", shard_rels=FACT_RELS,
+                params=q.defaults, sigma=sigma, fuse=False,
+            ).items_np()
+            fus = D.execute_plan_sharded(
+                plan, db, mesh, "data", shard_rels=FACT_RELS,
+                params=q.defaults, sigma=sigma, fuse=True,
+            ).items_np()
+            assert set(fus) == set(mat), qname
+            for k in mat:
+                np.testing.assert_array_equal(
+                    fus[k], mat[k], err_msg=f"{{qname}}/{{k}}"
+                )
+            print(qname, "OK")
+        print("FUSED_SHARDED_OK shards={shards}")
+        """
+    )
+    assert f"FUSED_SHARDED_OK shards={shards}" in out
+
+
+def test_fused_sharded_rebind_reuses_trace():
+    """The cached sharded executor fuses internally; rebinding parameters
+    must re-enter the existing shard_map trace."""
+    out = _run(
+        """
+        from repro import compat
+        from repro.core.lower import compile as compile_plan
+        from repro.data import tpch
+        from repro.data.table import collect_stats
+        from repro.exec import distributed as D
+        from repro.exec.queries import FACT_RELS, QUERIES
+
+        db = tpch.generate(scale=0.002, seed=3).tables()
+        sigma = collect_stats(db)
+        mesh = compat.make_mesh((4,), ("data",))
+        q = QUERIES["q18"]
+        plan = compile_plan(q.llql(), {})
+        run = D.cached_sharded_executor(
+            plan, db, mesh, "data", shard_rels=FACT_RELS, sigma=sigma
+        )
+        run({"threshold": 150.0})
+        traces = run.trace_counter[0]
+        assert traces >= 1
+        run({"threshold": 80.0})
+        assert run.trace_counter[0] == traces, "rebind retraced"
+        print("SHARDED_REBIND_OK")
+        """
+    )
+    assert "SHARDED_REBIND_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# the fused Pallas kernel path (forced emulation)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("qname", ["q1", "q3", "q18"])
+def test_fused_kernel_path_matches_reference(qname, monkeypatch, sigma):
+    """REPRO_FORCE_PALLAS routes eligible regions through the
+    kernels.fused_pipeline kernel (interpret mode on CPU): VMEM-resident
+    dictionaries, payload gathers, scratch accumulation — results must
+    match the numpy oracle."""
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+    db = tpch.generate(scale=0.001, seed=5).tables()
+    sg = collect_stats(db)
+    q = QUERIES[qname]
+    fplan = P.fuse(compile_plan(q.llql(), {}), sigma=sg)
+    got = E.execute_plan(fplan, db, sigma=sg, params=q.defaults).items_np()
+    ref = q.reference(db)
+    assert set(got) == set(ref)
+    for k in ref:
+        np.testing.assert_allclose(got[k], ref[k], rtol=3e-3, atol=3e-2)

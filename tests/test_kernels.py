@@ -131,3 +131,152 @@ def test_hash_build_kernel(n, cap, block, rng):
     assert set(got) == set(exp)
     for k in exp:
         np.testing.assert_allclose(got[k], exp[k], rtol=3e-4, atol=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused pipeline kernel: streamed tiles + resident dicts + scratch aggregate
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,block", [(3000, 512), (900, 1024)])
+def test_fused_pipeline_kernel_groupby(n, block, rng):
+    """Select → probe (VMEM-resident dict) → groupby in one kernel pass must
+    match the unfused oracle composition (probe, mask, scatter-aggregate)."""
+    import collections
+
+    from repro.dicts import base as dbase
+    from repro.kernels import fused_pipeline as fp
+
+    bkeys = np.unique(rng.integers(0, 5000, 800)).astype(np.int32)
+    bvals = rng.normal(size=(len(bkeys), 2)).astype(np.float32)
+    t = registry.get("ht_linear").build(jnp.asarray(bkeys), jnp.asarray(bvals), 2048)
+    qs = rng.integers(0, 5000, n).astype(np.int32)
+    grp = rng.integers(0, 40, n).astype(np.int32)
+    w = rng.normal(size=n).astype(np.float32)
+    live = rng.random(n) < 0.8
+
+    def row_fn(cols, lv, lookups, scalars):
+        pv, _, pf = lookups["D"](cols["q"])
+        lv = lv & pf & (cols["w"] > scalars["thr"])
+        return cols["g"], (cols["w"] * pv[:, 0])[:, None], lv
+
+    iv = jnp.zeros((t.keys.shape[0], 0), jnp.int32)
+    tk, tv = fp.fused_pipeline(
+        {"q": jnp.asarray(qs), "g": jnp.asarray(grp), "w": jnp.asarray(w)},
+        jnp.asarray(live),
+        {"D": (t.keys, t.vals, iv)},
+        {"thr": jnp.zeros((1,), jnp.float32)},
+        row_fn,
+        ("dict", 256, 1),
+        block=block,
+    )
+    rv, rf = ref.hash_probe(t.keys, t.vals, jnp.asarray(qs))
+    m = live & np.asarray(rf) & (w > 0.0)
+    vv = w * np.asarray(rv)[:, 0]
+    exp = collections.defaultdict(float)
+    for i in range(n):
+        if m[i]:
+            exp[int(grp[i])] += float(vv[i])
+    tk, tv = np.asarray(tk), np.asarray(tv)
+    got = {int(k): float(tv[i, 0]) for i, k in enumerate(tk) if k != dbase.EMPTY}
+    assert set(got) == set(exp)
+    for k in exp:
+        np.testing.assert_allclose(got[k], exp[k], rtol=2e-3, atol=2e-3)
+
+
+def test_fused_pipeline_kernel_reduce(rng):
+    """Scalar-terminal mode: the running [1, V] scratch sum across tiles."""
+    from repro.kernels import fused_pipeline as fp
+
+    n = 2500
+    a = rng.normal(size=n).astype(np.float32)
+    b = rng.normal(size=n).astype(np.float32)
+    live = rng.random(n) < 0.7
+
+    def row_fn(cols, lv, lookups, scalars):
+        return None, jnp.stack([cols["a"], cols["a"] * cols["b"]], axis=1), lv
+
+    out = fp.fused_pipeline(
+        {"a": jnp.asarray(a), "b": jnp.asarray(b)},
+        jnp.asarray(live),
+        {}, {}, row_fn, ("sum", 2), block=512,
+    )
+    np.testing.assert_allclose(
+        np.asarray(out), [a[live].sum(), (a * b)[live].sum()], rtol=2e-3
+    )
+
+
+def test_fused_pipeline_int_payload_exact():
+    """Integer gather payloads ride the int32 slab: values above 2^24 (not
+    f32-representable) must survive the probe exactly."""
+    from repro.dicts import base as dbase
+    from repro.kernels import fused_pipeline as fp
+
+    big = (1 << 25) + 3  # rounds to (1 << 25) + 4 in float32
+    C = 256
+    tk = jnp.full((C,), dbase.EMPTY, jnp.int32).at[dbase.hash1(
+        jnp.asarray([5], jnp.int32), C)[0]].set(5)
+    fv = jnp.zeros((C, 0), jnp.float32)
+    iv = jnp.full((C, 1), big, jnp.int32)
+    qs = jnp.full((600,), 5, jnp.int32)
+    live = jnp.ones((600,), bool)
+
+    def row_fn(cols, lv, lookups, scalars):
+        _, pi, pf = lookups["D"](cols["q"])
+        return pi[:, 0], jnp.ones((600, 1), jnp.float32), lv & pf
+
+    out_k, out_v = fp.fused_pipeline(
+        {"q": qs}, live, {"D": (tk, fv, iv)}, {}, row_fn,
+        ("dict", 256, 1), block=600,
+    )
+    keys = np.asarray(out_k)
+    got = [int(k) for k in keys if k != dbase.EMPTY]
+    assert got == [big]  # exact — a float32 round-trip would shift it
+
+
+def test_hash_probe_early_termination_low_occupancy(rng):
+    """The while_loop form must terminate correctly on a near-empty table
+    (every lane hits EMPTY in round one) and on a missing-key-only probe."""
+    keys = np.asarray([7], np.int32)
+    vals = np.ones((1, 1), np.float32)
+    t = registry.get("ht_linear").build(jnp.asarray(keys), jnp.asarray(vals), 1024)
+    qs = jnp.asarray(rng.integers(0, 10000, 600).astype(np.int32))
+    rv, rf = ref.hash_probe(t.keys, t.vals, qs)
+    kv, kf = hp.hash_probe(t.keys, t.vals, qs, block=256)
+    np.testing.assert_array_equal(np.asarray(rf), np.asarray(kf))
+    np.testing.assert_allclose(np.asarray(rv), np.asarray(kv), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash-attention kv_valid: the XLA fallback is pinned against the kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m", [16, 48, 96])
+def test_kv_valid_fallback_matches_kernel(m, rng):
+    """ops.flash_attention with a dynamic kv_valid mask takes the XLA
+    fallback (the Pallas kernel has no scalar-prefetch mask).  Its contract
+    — masking kv slots >= kv_valid equals attending over k[:, :, :m] — is
+    pinned here against the kernel path so the two cannot silently diverge
+    (resolves the ops.py kv_valid TODO)."""
+    B, H, Tk, D = 1, 2, 96, 16
+    k = jnp.asarray(rng.normal(size=(B, H, Tk, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, H, Tk, D)), jnp.float32)
+
+    # cross-attention shape: full query block
+    q = jnp.asarray(rng.normal(size=(B, H, 64, D)), jnp.float32)
+    fb = ref.flash_attention(q, k, v, causal=False, kv_valid=m)
+    kn = fa.flash_attention(
+        q, k[:, :, :m], v[:, :, :m], causal=False, bq=32, bk=32
+    )
+    np.testing.assert_allclose(np.asarray(fb), np.asarray(kn), rtol=2e-3, atol=2e-3)
+
+    # decode shape (the serve path): single query token, causal
+    q1 = jnp.asarray(rng.normal(size=(B, H, 1, D)), jnp.float32)
+    fb1 = ref.flash_attention(q1, k[:, :, :m], v[:, :, :m], causal=True, kv_valid=m)
+    kn1 = fa.flash_attention(q1, k[:, :, :m], v[:, :, :m], causal=True, bq=32, bk=32)
+    np.testing.assert_allclose(np.asarray(fb1), np.asarray(kn1), rtol=2e-3, atol=2e-3)
+
+    # and the bounded-memory chunked fallback agrees with the dense one
+    ch = ref.flash_attention_chunked(q, k, v, causal=False, chunk=32, kv_valid=m)
+    np.testing.assert_allclose(np.asarray(fb), np.asarray(ch), rtol=2e-3, atol=2e-3)
