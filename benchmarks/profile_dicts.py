@@ -1,0 +1,146 @@
+"""Calibrate ``AnalyticCostModel``'s op-cost constants against a measured
+sweep — the paper's profiled-regression story in miniature (§4.1: profile
+every registered backend on the installed machine, fit a cost model, let
+synthesis rank structures with it).
+
+The full learned model (``repro.costmodel``) fits free-form regressors; this
+bench instead fits ONLY the leading coefficients of ``AnalyticCostModel``'s
+closed-form shapes (``shape_factor``), so the calibrated analytic model
+stays interpretable and dependency-free:
+
+    measured per-op ns  ≈  coeff(ds, op[, ordered]) · shape_factor(size)
+    coeff := median over the sweep of  per_op_ns / shape_factor
+
+The record embeds two checks the perf gate enforces:
+
+* ``profile_rank_agreement`` — over all (op, ordered, size) cells, the
+  fraction of family pairs whose measured ordering (with ≥1.5× separation)
+  the freshly fitted model reproduces must be ≥ 0.8;
+* the committed-constant drift guard lives in
+  ``tests/test_cost_calibration.py``, which replays the committed baseline
+  sweep against ``CALIBRATED_OP_NS``.
+
+    python -m benchmarks.profile_dicts --out BENCH_profile_dicts.json
+    python -m benchmarks.profile_dicts --quick --print-constants
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.cost import AnalyticCostModel
+from repro.costmodel.profiler import ProfileTable, profile, profile_quick
+from repro.dicts import registry
+from .common import emit, write_record
+
+
+def _key(ds: str, op: str, ordered: bool):
+    return (ds, op) if ds.startswith("ht") else (ds, op, bool(ordered))
+
+
+def fit_constants(table: ProfileTable) -> Dict[tuple, float]:
+    """Median-ratio fit of the leading per-op-ns coefficients (robust to the
+    sweep's outlier cells; hash families pool both orderings — the fitted
+    table should *discover* order-insensitivity, not assume per-row)."""
+    buckets: Dict[tuple, List[float]] = {}
+    for r in table.rows:
+        f = AnalyticCostModel.shape_factor(r.ds, r.op, r.size, r.ordered)
+        buckets.setdefault(_key(r.ds, r.op, r.ordered), []).append(
+            r.per_op_ns / f
+        )
+    return {k: float(np.median(v)) for k, v in sorted(buckets.items())}
+
+
+def rank_agreement(
+    table: ProfileTable, constants: Dict[tuple, float], sep: float = 1.5
+) -> Tuple[float, int]:
+    """Fraction of well-separated measured family pairs (per op × ordered ×
+    size × n cell) whose ordering the fitted model reproduces."""
+    model = AnalyticCostModel(constants=constants)
+    cells: Dict[tuple, Dict[str, float]] = {}
+    for r in table.rows:
+        cells.setdefault((r.op, r.ordered, r.size, r.n), {})[r.ds] = r.seconds
+    agree = total = 0
+    for (op, ordered, size, n), per_ds in cells.items():
+        names = sorted(per_ds)
+        for i, a in enumerate(names):
+            for b in names[i + 1:]:
+                ma, mb = per_ds[a], per_ds[b]
+                if max(ma, mb) < sep * min(ma, mb):
+                    continue  # within noise: no ranking claim
+                pa = model.op_cost(a, op, n, size, ordered)
+                pb = model.op_cost(b, op, n, size, ordered)
+                total += 1
+                agree += (ma < mb) == (pa < pb)
+    return (agree / total if total else 1.0), total
+
+
+# every other power from in-L2 to the kernel residency bound: enough points
+# to fit the log-shape per family without the full (slow) installation sweep
+SWEEP_SIZES = (2**8, 2**10, 2**12, 2**14, 2**16)
+
+
+def run(
+    quick: bool = False,
+    out: str = "BENCH_profile_dicts.json",
+    print_constants: bool = False,
+    seed: int = 0,
+):
+    table = (
+        profile_quick(seed=seed, verbose=True)
+        if quick
+        else profile(sizes=SWEEP_SIZES, seed=seed, verbose=True)
+    )
+    constants = fit_constants(table)
+    frac, pairs = rank_agreement(table, constants)
+    results = {}
+    for r in table.rows:
+        name = (
+            f"profile/{r.ds}/{r.op}/"
+            f"{'ordered' if r.ordered else 'unordered'}/s{r.size}/n{r.n}"
+        )
+        results[name] = {"seconds": r.seconds, "per_op_ns": r.per_op_ns}
+    emit(
+        "profile_dicts_fit",
+        0.0,
+        f"pairs={pairs},rank_agreement={frac:.3f}",
+    )
+    write_record(
+        out,
+        "profile_dicts",
+        results,
+        constants={
+            "/".join(map(str, k)): round(v, 3) for k, v in constants.items()
+        },
+        backends=sorted(registry.names()),
+        checks={
+            "profile_rank_agreement": {"value": round(frac, 4), "min": 0.8},
+        },
+    )
+    if print_constants:
+        print("CALIBRATED_OP_NS = {")
+        for k, v in constants.items():
+            print(f"    {k!r}: {round(v, 2)},")
+        print("}")
+    return constants, frac
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_profile_dicts.json")
+    ap.add_argument("--print-constants", action="store_true")
+    args = ap.parse_args()
+    from .common import header
+
+    header()
+    run(
+        quick=args.quick,
+        out=args.out,
+        print_constants=args.print_constants,
+        seed=args.seed,
+    )

@@ -140,10 +140,22 @@ class Pipeline(Node):
     symbol produced by an (unfused) upstream node — the latter is how a
     region *split* at a probe boundary re-enters the plan.  ``out`` equals
     ``stages[-1].out``; intermediate stage symbols are private to the
-    region and never materialize."""
+    region and never materialize.
+
+    ``partitions > 0`` marks the region for **radix-partitioned** fused
+    execution (DESIGN.md §8): ``part_sym``'s dictionary exceeds the
+    per-slab residency bound, so fact rows and dictionary slabs are
+    co-partitioned by the probe key's radix and each grid step co-resides
+    one partition — priced against the split-materialized alternative by
+    ``FusionCostModel.delta_partition``, never a default.  Executors
+    without a partitioned substrate (the XLA region path) run the region
+    as one computation regardless — the field changes execution strategy,
+    never semantics."""
 
     source: str
     stages: Tuple[Node, ...] = ()
+    partitions: int = 0
+    part_sym: str = ""
 
 
 @dataclass(frozen=True)
@@ -252,8 +264,14 @@ class Plan:
         lines = []
         for n in self.nodes:
             if isinstance(n, Pipeline):
+                radix = (
+                    f", radix P={n.partitions} on {n.part_sym}"
+                    if n.partitions
+                    else ""
+                )
                 lines.append(
-                    f"Pipeline {n.out} <- {n.source} [{len(n.stages)} stages]"
+                    f"Pipeline {n.out} <- {n.source} "
+                    f"[{len(n.stages)} stages{radix}]"
                 )
                 lines.extend("  | " + _describe_node(s) for s in n.stages)
             else:
@@ -797,14 +815,26 @@ def _match_chain(nodes: Tuple[Node, ...], i: int) -> Optional[List[Node]]:
     return None
 
 
-def _region_cost(
-    stages: List[Node], shape: _Shape, fusion
-) -> Tuple[float, float]:
-    """(saved_bytes, resident_bytes) of fusing ``stages`` as one region."""
+@dataclass
+class _RegionCost:
+    """Byte accounting of one candidate region: total saved/resident plus
+    the per-probed-dictionary resident slabs and the terminal accumulator —
+    enough for :func:`_decide_region` to re-price the radix-partitioned
+    variant (one slab shrunk by P, the accumulator possibly partitioned)
+    without re-walking the stages."""
+
+    saved: float
+    resident: float
+    rows: float
+    dict_bytes: Dict[str, float]  # probed dict sym -> resident slab bytes
+    acc_bytes: float  # dictionary terminal's accumulator (0 for Reduce)
+
+
+def _region_cost(stages: List[Node], shape: _Shape, fusion) -> _RegionCost:
     rows = shape.rows.get(stages[0].out, fusion.default_rows)
     need = needed_columns(tuple(stages))
     saved = 0.0
-    resident = 0.0
+    per_dict: Dict[str, float] = {}
     for n in stages:
         if isinstance(n, Select):
             saved += rows * fusion.mask_bytes
@@ -816,9 +846,9 @@ def _region_cost(
             # registers
             saved += rows * (fusion.col_bytes * ncols + fusion.mask_bytes)
             cap = info.cap if info else fusion.default_rows
-            resident += fusion.dict_bytes(cap, 1.0)
-            resident += fusion.payload_bytes(
-                cap, len(need.get(n.inner_var, ()))
+            per_dict[n.build] = per_dict.get(n.build, 0.0) + (
+                fusion.dict_bytes(cap, 1.0)
+                + fusion.payload_bytes(cap, len(need.get(n.inner_var, ())))
             )
         elif isinstance(n, GroupJoin):
             info = shape.dicts.get(n.build)
@@ -827,47 +857,201 @@ def _region_cost(
             # fused probe+aggregate: the looked-up g-values and found mask
             # never round-trip between the probe and the aggregate
             saved += rows * (fusion.col_bytes * lanes + fusion.mask_bytes)
-            resident += fusion.dict_bytes(cap, lanes)
+            per_dict[n.build] = per_dict.get(n.build, 0.0) + fusion.dict_bytes(
+                cap, lanes
+            )
         elif isinstance(n, Reduce) and n.lookup_sym is not None:
             info = shape.dicts.get(n.lookup_sym)
             cap = info.cap if info else fusion.default_rows
             lanes = info.lanes if info else 1.0
             saved += rows * (fusion.col_bytes * lanes + fusion.mask_bytes)
-            resident += fusion.dict_bytes(cap, lanes)
+            per_dict[n.lookup_sym] = per_dict.get(
+                n.lookup_sym, 0.0
+            ) + fusion.dict_bytes(cap, lanes)
     term = stages[-1]
     info = shape.dicts.get(term.out)
-    if info is not None:  # dictionary-valued terminal: the VMEM accumulator
-        resident += fusion.dict_bytes(info.cap, info.lanes)
-    return saved, resident
+    acc = fusion.dict_bytes(info.cap, info.lanes) if info is not None else 0.0
+    resident = sum(per_dict.values()) + acc
+    return _RegionCost(saved, resident, rows, per_dict, acc)
 
 
-def _decide_region(chain: List[Node], shape: _Shape, fusion) -> List[Node]:
-    """Fuse, split, or keep ``chain`` materialized; returns emitted nodes."""
+def _probe_key_of(stages: List[Node], sym: str):
+    """The key expression probing dictionary ``sym`` inside the region."""
+    for n in stages:
+        if isinstance(n, (HashProbe, GroupJoin)) and n.build == sym:
+            return n.keyexpr
+        if isinstance(n, Reduce) and n.lookup_sym == sym:
+            return n.lookup_key
+    return None
+
+
+@dataclass
+class _PartitionChoice:
+    n_parts: int
+    sym: str
+    delta: float
+
+
+def _partition_candidate(
+    stages: List[Node], shape: _Shape, fusion, rc: _RegionCost
+) -> Optional[_PartitionChoice]:
+    """Price the radix-partitioned realization of the region, or ``None``
+    when it is infeasible: the region must start at a Scan (partition keys
+    are computed from the streamed columns), exactly one probed dictionary
+    may exceed the per-slab residency bound, its family must support
+    slot-range partitioning, its probe key must read only the scan
+    variable, and the terminal must either fit residency or aggregate by
+    the partition key itself (then the accumulator partitions too)."""
+    from repro.dicts import registry
+
+    if fusion.max_partitions <= 1 or not isinstance(stages[0], Scan):
+        return None
+    term = stages[-1]
+    if not isinstance(term, (GroupBy, GroupJoin, Reduce)):
+        return None  # only kernel-dispatchable terminals benefit
+    slots = float(fusion.kernel_slots)
+    oversized = [
+        s
+        for s in rc.dict_bytes
+        if shape.dicts.get(s) is not None and shape.dicts[s].cap > slots
+    ]
+    if len(oversized) > 1:
+        return None
+    if oversized:
+        target = oversized[0]
+    elif rc.dict_bytes:  # over the byte budget only: shrink the biggest slab
+        target = max(rc.dict_bytes, key=rc.dict_bytes.get)
+    else:
+        return None
+    info = shape.dicts[target]
+    if not registry.partitionable(info.ds):
+        return None
+    keyexpr = _probe_key_of(stages, target)
+    if keyexpr is None:
+        return None
+    scan_var = stages[0].var
+    key_need = needed_columns((Select("", "", keyexpr),))
+    if set(key_need) - {scan_var}:
+        return None  # partition key must come from the streamed columns
+    part_terminal = (
+        isinstance(term, (GroupBy, GroupJoin)) and term.keyexpr == keyexpr
+    )
+    tinfo = shape.dicts.get(term.out)
+    if (
+        tinfo is not None
+        and not part_terminal
+        and tinfo.cap > slots
+    ):
+        return None  # accumulator can neither fit nor partition
+    other = sum(b for s, b in rc.dict_bytes.items() if s != target)
+    tgt_bytes = rc.dict_bytes[target]
+    p = 2
+    while p <= fusion.max_partitions:
+        cp = info.cap / p
+        if cp >= 256 and info.cap % p == 0:
+            acc = rc.acc_bytes
+            if part_terminal and tinfo is not None:
+                acc = fusion.dict_bytes(
+                    _pow2cap(cp), tinfo.lanes
+                )  # per-partition accumulator (≤ cp live keys per block)
+            resident_p = other + tgt_bytes / p + acc
+            if cp <= slots and resident_p <= fusion.vmem_budget:
+                ncols = len(
+                    needed_columns(tuple(stages)).get(scan_var, ())
+                )
+                # when the target slab exceeds the residency bound, the
+                # split alternative probes it OUT of residency — every
+                # probe pays HBM random-access latency, credited to the
+                # partitioned form.  A region over the byte budget only
+                # (every slab individually resident) gets no such credit:
+                # there the routing pass must pay for itself.
+                saved = rc.saved + (
+                    rc.rows * fusion.probe_random_bytes if oversized else 0.0
+                )
+                return _PartitionChoice(
+                    p,
+                    target,
+                    fusion.delta_partition(
+                        saved, resident_p, rc.rows, max(1.0, ncols)
+                    ),
+                )
+        p *= 2
+    return None
+
+
+def _split_region(
+    chain: List[Node], shape: _Shape, fusion
+) -> Tuple[List[Node], float]:
+    """Today's over-budget fallback: peel leading stages through the first
+    probe until the remainder fits, fusing it when profitable.  Returns the
+    emitted nodes and the fused remainder's Δ (0 when nothing fuses)."""
     prefix: List[Node] = []
     stages = list(chain)
     while True:
-        saved, resident = _region_cost(stages, shape, fusion)
-        if resident <= fusion.vmem_budget:
+        rc = _region_cost(stages, shape, fusion)
+        if rc.resident <= fusion.vmem_budget:
             break
-        # over budget: split — peel leading stages through the first probe
-        # (its dictionary + payload leave the working set; the peeled nodes
-        # materialize exactly as the unfused executor would run them)
+        # peel through the first probe: its dictionary + payload leave the
+        # working set; the peeled nodes materialize exactly as the unfused
+        # executor would run them
         k = next(
             (j for j, s in enumerate(stages) if isinstance(s, HashProbe)),
             None,
         )
         if k is None or len(stages) - (k + 1) < 2:
-            return prefix + stages  # cannot fit: stay materialized
+            return prefix + stages, 0.0  # cannot fit: stay materialized
         prefix += stages[: k + 1]
         stages = stages[k + 1:]
-    if len(stages) < 2 or fusion.delta_fuse(saved, resident) <= 0.0:
-        return prefix + stages
+    delta = fusion.delta_fuse(rc.saved, rc.resident)
+    if len(stages) < 2 or delta <= 0.0:
+        return prefix + stages, 0.0
     pipe = Pipeline(
         stages[-1].out,
         source=stages[0].source,  # type: ignore[attr-defined]
         stages=tuple(stages),
     )
-    return prefix + [pipe]
+    return prefix + [pipe], delta
+
+
+def _decide_region(chain: List[Node], shape: _Shape, fusion) -> List[Node]:
+    """Fuse (resident or radix-partitioned), split, or keep ``chain``
+    materialized; returns emitted nodes.  The partitioned form is a COSTED
+    alternative (Δ_partition vs the best split's Δ_fuse), never a default."""
+    stages = list(chain)
+    rc = _region_cost(stages, shape, fusion)
+    slot_over = any(
+        shape.dicts[s].cap > fusion.kernel_slots
+        for s in rc.dict_bytes
+        if shape.dicts.get(s) is not None
+    )
+
+    def pipe(partitions: int = 0, part_sym: str = "") -> Pipeline:
+        return Pipeline(
+            stages[-1].out,
+            source=stages[0].source,  # type: ignore[attr-defined]
+            stages=tuple(stages),
+            partitions=partitions,
+            part_sym=part_sym,
+        )
+
+    if rc.resident <= fusion.vmem_budget:
+        if len(stages) < 2 or fusion.delta_fuse(rc.saved, rc.resident) <= 0.0:
+            return stages
+        if slot_over:
+            # fits the byte budget but some slab exceeds the kernel's
+            # per-dictionary residency contract: mark the region partitioned
+            # when that prices positive, so the Pallas path stays fused
+            # instead of falling back (the XLA path runs it as one
+            # computation either way)
+            cand = _partition_candidate(stages, shape, fusion, rc)
+            if cand is not None and cand.delta > 0.0:
+                return [pipe(cand.n_parts, cand.sym)]
+        return [pipe()]
+    split_nodes, split_delta = _split_region(chain, shape, fusion)
+    cand = _partition_candidate(stages, shape, fusion, rc)
+    if cand is not None and cand.delta > max(split_delta, 0.0):
+        return [pipe(cand.n_parts, cand.sym)]
+    return split_nodes
 
 
 def _rename(n: Node, new_out: str) -> Node:

@@ -209,13 +209,27 @@ class SortedTable(NamedTuple):
 def dedupe_sorted(
     ks: jax.Array, vs: jax.Array, capacity: int
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Aggregate duplicate (sorted) keys; returns padded unique arrays."""
+    """Aggregate duplicate keys of a sorted-with-holes sequence; returns
+    padded unique arrays.
+
+    Contract: the non-PAD subsequence of ``ks`` is nondecreasing.  PAD rows
+    may appear anywhere (tail padding after a sort, or in-place holes from a
+    masked hinted build); each live key starts a new segment iff it differs
+    from the previous *live* key — a running max over the live keys, exact
+    because the live subsequence is sorted — so a hole inside an equal-key
+    run cannot split the run into duplicate table entries."""
     n = ks.shape[0]
     if vs.ndim == 1:
         vs = vs[:, None]
     V = vs.shape[1]
     live = ks != PAD
-    head = jnp.concatenate([jnp.ones((1,), bool), ks[1:] != ks[:-1]]) & live
+    prev_live = jnp.concatenate(
+        [
+            jnp.full((1,), EMPTY, jnp.int32),
+            lax.cummax(jnp.where(live, ks, EMPTY))[:-1],
+        ]
+    )
+    head = live & (ks != prev_live)
     seg = jnp.cumsum(head.astype(jnp.int32)) - 1  # [n] segment id per element
     seg = jnp.where(live, seg, capacity)  # route pads off-table
     uk = jnp.full((capacity,), PAD, jnp.int32).at[seg].min(
@@ -238,12 +252,22 @@ def build_sorted(
     valid: Optional[jax.Array] = None,
 ) -> SortedTable:
     """Sort (skipped when the input is known ordered — the paper's hinted
-    insert / O(n) build), aggregate duplicates, pad to capacity."""
+    insert / O(n) build), aggregate duplicates, pad to capacity.
+
+    A ``valid`` mask does NOT force a re-sort: masked keys become PAD
+    *holes* in place, and ``dedupe_sorted`` already segments on key change
+    and routes PAD rows off-table, so a sorted-with-holes sequence dedupes
+    exactly like its sorted compaction — same per-key contribution order,
+    same sums.  ``assume_sorted`` therefore means "the live subsequence is
+    nondecreasing", which masking preserves.  (Earlier revisions re-sorted
+    under a mask; that silently threw away the paper's hinted-insert O(n)
+    win on every filtered build — the dominant cost of sort-dictionary
+    group-bys over selective scans.)"""
     if vs.ndim == 1:
         vs = vs[:, None]
     if valid is not None:
         ks = jnp.where(valid.astype(bool), ks, PAD)  # pads drop in dedupe
-    if not assume_sorted or valid is not None:
+    if not assume_sorted:
         perm = jnp.argsort(ks)
         ks, vs = ks[perm], vs[perm]
     uk, uv, n = dedupe_sorted(ks, vs, capacity)
@@ -314,6 +338,96 @@ def merge_update_sorted(
 def sorted_items(table: SortedTable) -> Tuple[jax.Array, jax.Array, jax.Array]:
     valid = table.keys != PAD
     return table.keys, table.vals, valid
+
+
+# ---------------------------------------------------------------------------
+# Resident (in-kernel) execution machinery — shared by the per-family
+# ``resident_*`` hooks (DESIGN.md §8).  Everything here must be kernel-safe:
+# ``jnp.take`` gathers, compares, scatter ``.at[]`` updates, and statically
+# bounded loops only — no ``searchsorted``, no dynamic shapes.
+# ---------------------------------------------------------------------------
+
+
+def lower_bound_pow2(keys: jax.Array, qs: jax.Array) -> jax.Array:
+    """Vectorized branchless lower bound over a sorted power-of-two slab:
+    returns ``min(count of keys < q, L-1)`` per query — the kernel-safe twin
+    of ``jnp.searchsorted(keys, qs, side="left")`` with the same tail clamp
+    ``sorted_lookup`` applies.  log2(L) rounds of one gather + compare."""
+    L = keys.shape[0]
+    assert L & (L - 1) == 0, "slab length must be a power of two"
+    pos = jnp.zeros_like(qs)
+    bit = L >> 1
+    while bit:
+        cand = pos + bit
+        below = jnp.take(keys, cand - 1, axis=0) < qs
+        pos = jnp.where(below, cand, pos)
+        bit >>= 1
+    return pos
+
+
+def resident_insert_rounds(
+    probe: ProbeFn,
+    tk: jax.Array,
+    tv: jax.Array,
+    ks: jax.Array,
+    vs: jax.Array,
+    pending: jax.Array,
+    max_probes: int,
+):
+    """``generic_insert``'s round loop over kernel-local arrays: claim via
+    scatter-max arbitration, aggregate duplicates, advance survivors — the
+    ONE accumulate loop shared by the hash families' ``resident_accumulate``
+    hooks and (through ``ht_linear``) the sort families' scratch
+    accumulation.  Early-terminating, so the deep ``max_probes`` bound is
+    free on healthy tables."""
+    B = ks.shape[0]
+    C = tk.shape[0]
+    ids = lax.broadcasted_iota(jnp.int32, (B,), 0)
+
+    def round_body(carry):
+        t, tk, tv, pending = carry
+        slot = probe(ks, t)
+        cur = jnp.take(tk, slot, axis=0)
+        hit = pending & (cur == ks)
+        want = pending & (cur == EMPTY)
+        claim = jnp.full((C,), -1, jnp.int32).at[
+            jnp.where(want, slot, C)
+        ].max(ids, mode="drop")
+        won = want & (jnp.take(claim, slot, axis=0) == ids)
+        tk = tk.at[jnp.where(won, slot, C)].set(ks, mode="drop")
+        cur2 = jnp.take(tk, slot, axis=0)
+        hit2 = pending & ~hit & ~won & (cur2 == ks)
+        write = hit | won | hit2
+        tv = tv.at[jnp.where(write, slot, C)].add(vs, mode="drop")
+        return t + 1, tk, tv, pending & ~write
+
+    def cond(carry):
+        t, _, _, pending = carry
+        return jnp.any(pending) & (t < max_probes)
+
+    _, tk, tv, _ = lax.while_loop(
+        cond, round_body, (jnp.int32(0), tk, tv, pending)
+    )
+    return tk, tv
+
+
+def slot_partition_plan(
+    capacity: int, n_parts: int, overlap: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Slot-range partitioning of a ``capacity``-slot table into ``n_parts``
+    resident blocks of ``capacity//n_parts + overlap`` slots each, the
+    overlap wrapping modulo capacity (hash probe chains run past a block's
+    end by at most ``max_probes`` slots; sorted slabs use overlap 0).
+    Returns ``(gather_idx [P, Lp], base [P])`` — ``gather_idx`` maps every
+    resident-slab position to its global slot (keys AND payload slabs
+    partition through the same map, so probed positions stay aligned), and
+    ``base[p]`` is the global slot of block p's position 0."""
+    assert capacity % n_parts == 0
+    cp = capacity // n_parts
+    lp = cp + min(overlap, capacity - cp) if overlap else cp
+    base = jnp.arange(n_parts, dtype=jnp.int32) * cp
+    idx = (base[:, None] + jnp.arange(lp, dtype=jnp.int32)[None, :]) % capacity
+    return idx, base
 
 
 def next_pow2(x: int) -> int:

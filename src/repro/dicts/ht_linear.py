@@ -68,3 +68,98 @@ items = base.hash_items
 size = base.hash_size
 FAMILY = "hash"
 SUPPORTS_HINTS = False
+
+# ---------------------------------------------------------------------------
+# Resident (in-kernel) hooks — DESIGN.md §8.  The fused-pipeline kernel
+# probes and accumulates through these, so the kernel itself stays
+# family-agnostic; everything below is kernel-safe (take/compare/scatter).
+# ---------------------------------------------------------------------------
+
+RESIDENT = True  # resident_find available: fused-kernel eligible
+PARTITIONABLE = True  # slot-range radix partitioning supported
+PARTITION_OVERLAP = MAX_PROBES  # probe chains run ≤ MAX_PROBES past a block
+
+
+def resident_slabs(table: HashTable) -> Tuple[jax.Array, ...]:
+    """Key-side slabs the kernel keeps VMEM-resident (payload slabs are
+    assembled by the executor, aligned to ``slabs[0]``'s positions)."""
+    return (table.keys,)
+
+
+def resident_find(
+    slabs: Tuple[jax.Array, ...],
+    qs: jax.Array,
+    *,
+    capacity: int,
+    base_slot=0,
+    max_probes: int = MAX_PROBES,
+) -> Tuple[jax.Array, jax.Array]:
+    """Early-terminating linear probe over a resident key slab.  ``capacity``
+    is the FULL table capacity (the hash modulus); ``base_slot`` the global
+    slot of slab position 0 — nonzero when probing one radix partition, whose
+    slab extends ``PARTITION_OVERLAP`` slots past the partition so chains
+    never wrap out of residency.  Returns ``(slab position, found)``."""
+    (tk,) = slabs
+    B = qs.shape[0]
+    full = tk.shape[0] == capacity  # static: whole table resident vs one block
+    h0 = base.hash1(qs, capacity) - (0 if full else base_slot)
+
+    def body(carry):
+        t, active, slot_found = carry
+        if full:  # probe chains wrap modulo the table
+            slot = (h0 + t) & (capacity - 1)
+        else:  # local block: never wraps (overlap covers the chain)
+            slot = h0 + t
+        cur = jnp.take(tk, slot, axis=0)  # clips OOB (dead lanes only)
+        hit = active & (cur == qs)
+        miss = active & (cur == EMPTY)
+        slot_found = jnp.where(hit, slot, slot_found)
+        active = active & ~hit & ~miss
+        return t + 1, active, slot_found
+
+    def cond(carry):
+        t, active, _ = carry
+        return jnp.any(active) & (t < max_probes)
+
+    _, _, slot_found = jax.lax.while_loop(
+        cond,
+        body,
+        (jnp.int32(0), jnp.ones((B,), bool), jnp.full((B,), -1, jnp.int32)),
+    )
+    return slot_found, slot_found >= 0
+
+
+RESIDENT_ACCUMULATE = True
+
+
+def resident_accumulate(
+    tk: jax.Array,
+    tv: jax.Array,
+    ks: jax.Array,
+    vs: jax.Array,
+    pending: jax.Array,
+    *,
+    max_probes: int = MAX_PROBES,
+):
+    """One tile's worth of ``dict[k] += v`` into a resident accumulator in
+    this family's own layout (the kernel's scratch IS an ht_linear table)."""
+    return base.resident_insert_rounds(
+        _probe(tk.shape[0]), tk, tv, ks, vs, pending, max_probes
+    )
+
+
+def partition_assign(table: HashTable, qs: jax.Array, n_parts: int) -> jax.Array:
+    """Radix partition id of each probe key: the high bits of its hash slot
+    (executor-side; routes fact rows to the grid steps whose dictionary
+    partition is resident)."""
+    return base.hash1(qs, table.capacity) // jnp.int32(table.capacity // n_parts)
+
+
+def partition_slabs(table: HashTable, n_parts: int):
+    """``(stacked key slabs [P, Lp], gather_idx [P, Lp], base [P])`` — the
+    executor gathers payload slabs through the same ``gather_idx`` so probed
+    positions stay aligned with the keys."""
+    idx, base_slots = base.slot_partition_plan(
+        table.capacity, n_parts, PARTITION_OVERLAP
+    )
+    return (jnp.take(table.keys, idx, axis=0),), idx, base_slots

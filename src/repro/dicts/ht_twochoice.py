@@ -84,3 +84,75 @@ items = base.hash_items
 size = base.hash_size
 FAMILY = "hash"
 SUPPORTS_HINTS = False
+
+# ---------------------------------------------------------------------------
+# Resident (in-kernel) hooks — DESIGN.md §8.  Two-choice probing touches two
+# far-apart buckets per key, so a key's probe set cannot be confined to one
+# contiguous slot range: the family is resident-eligible (whole table in
+# VMEM) but NOT slot-range partitionable — oversized ht_twochoice probes
+# split at the probe boundary instead (the planner prices this).
+# ---------------------------------------------------------------------------
+
+RESIDENT = True
+PARTITIONABLE = False
+
+
+def resident_slabs(table: HashTable) -> Tuple[jax.Array, ...]:
+    return (table.keys,)
+
+
+def resident_find(
+    slabs: Tuple[jax.Array, ...],
+    qs: jax.Array,
+    *,
+    capacity: int,
+    base_slot=0,
+    max_probes: int = MAX_PROBES,
+) -> Tuple[jax.Array, jax.Array]:
+    """Early-terminating bucket-then-overflow probe over the resident table
+    (full residency only: ``slabs[0]`` must span all ``capacity`` slots)."""
+    (tk,) = slabs
+    assert tk.shape[0] == capacity, "ht_twochoice is not partitionable"
+    del base_slot
+    B = qs.shape[0]
+    probe = _probe(capacity)
+
+    def body(carry):
+        t, active, slot_found = carry
+        slot = probe(qs, t)
+        cur = jnp.take(tk, slot, axis=0)
+        hit = active & (cur == qs)
+        miss = active & (cur == EMPTY)
+        slot_found = jnp.where(hit, slot, slot_found)
+        active = active & ~hit & ~miss
+        return t + 1, active, slot_found
+
+    def cond(carry):
+        t, active, _ = carry
+        return jnp.any(active) & (t < max_probes)
+
+    _, _, slot_found = jax.lax.while_loop(
+        cond,
+        body,
+        (jnp.int32(0), jnp.ones((B,), bool), jnp.full((B,), -1, jnp.int32)),
+    )
+    return slot_found, slot_found >= 0
+
+
+RESIDENT_ACCUMULATE = True
+
+
+def resident_accumulate(
+    tk: jax.Array,
+    tv: jax.Array,
+    ks: jax.Array,
+    vs: jax.Array,
+    pending: jax.Array,
+    *,
+    max_probes: int = MAX_PROBES,
+):
+    """Tile accumulate in this family's own layout — the kernel's scratch is
+    a genuine two-choice table, so the terminal needs no host-side rebuild."""
+    return base.resident_insert_rounds(
+        _probe(tk.shape[0]), tk, tv, ks, vs, pending, max_probes
+    )

@@ -38,6 +38,41 @@ def family(name: str) -> str:
     return get(name).FAMILY
 
 
+def resident(name: str) -> bool:
+    """True when the backend ships the resident (in-kernel) hooks —
+    ``resident_slabs``/``resident_find`` (DESIGN.md §8) — making it eligible
+    for the fused Pallas pipeline.  Third-party backends registered without
+    the hooks simply answer False and take the XLA region path; the executor
+    consults THIS predicate, never a name compare, so registration alone is
+    enough to dispatch correctly."""
+    mod = get(name)
+    return bool(getattr(mod, "RESIDENT", False)) and all(
+        hasattr(mod, a) for a in ("resident_slabs", "resident_find")
+    )
+
+
+def partitionable(name: str) -> bool:
+    """True when the backend supports slot-range radix partitioning of its
+    resident slabs (``partition_assign``/``partition_slabs``) — required for
+    the oversized-dictionary fused path."""
+    mod = get(name)
+    return (
+        resident(name)
+        and bool(getattr(mod, "PARTITIONABLE", False))
+        and all(hasattr(mod, a) for a in ("partition_assign", "partition_slabs"))
+    )
+
+
+def accumulates_resident(name: str) -> bool:
+    """True when the backend accumulates terminals in its OWN layout inside
+    the kernel (``resident_accumulate``); sort-family terminals accumulate
+    in hash scratch and finalize host-side through their ``build``."""
+    mod = get(name)
+    return bool(getattr(mod, "RESIDENT_ACCUMULATE", False)) and hasattr(
+        mod, "resident_accumulate"
+    )
+
+
 register("ht_linear", ht_linear)
 register("ht_twochoice", ht_twochoice)
 register("st_sorted", st_sorted)

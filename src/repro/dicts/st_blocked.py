@@ -11,6 +11,7 @@ from __future__ import annotations
 from typing import Tuple
 
 import jax
+import jax.numpy as jnp
 
 from . import base
 from .base import SortedTable
@@ -40,7 +41,6 @@ def lookup(
 ) -> Tuple[jax.Array, jax.Array]:
     vals, found = base.blocked_lookup(table, qs, BLOCK)
     if valid is not None:
-        import jax.numpy as jnp
         found = found & valid.astype(bool)
         vals = jnp.where(found[:, None], vals, 0.0)
     return vals, found
@@ -55,3 +55,57 @@ def size(table: SortedTable) -> jax.Array:
 
 FAMILY = "sort"
 SUPPORTS_HINTS = True
+
+# ---------------------------------------------------------------------------
+# Resident (in-kernel) hooks — DESIGN.md §8.  Lookup = the two-level search
+# of ``blocked_lookup`` in kernel-safe form: a compare-count over the tiny
+# block-max directory picks the leaf, one vectorized within-block compare
+# finds the key.  Both the directory and the leaf slab ride as resident
+# slabs; key-range partitioning slices both (``BLOCK`` divides the per-part
+# slab, so leaf boundaries never straddle partitions).  ``<hinted>``
+# choices dispatch through the same hook (the merge variant is an execution
+# hint, not a semantic change).
+# ---------------------------------------------------------------------------
+
+RESIDENT = True
+PARTITIONABLE = True
+RESIDENT_ACCUMULATE = False
+
+
+def resident_slabs(table: SortedTable) -> "Tuple[jax.Array, ...]":
+    return (table.keys, table.block_max)
+
+
+def resident_find(
+    slabs, qs, *, capacity: int, base_slot=0, max_probes: int = 0
+):
+    """Directory-then-leaf search over resident slabs; local to a full table
+    or one key-range partition block alike."""
+    del capacity, base_slot, max_probes
+    tk, bm = slabs
+    nb = bm.shape[0]
+    # leaf id: count of block maxima < q (== searchsorted left), clamped
+    blk = jnp.minimum(
+        jnp.sum((bm[None, :] < qs[:, None]).astype(jnp.int32), axis=1), nb - 1
+    )
+    rows = jnp.take(tk, blk[:, None] * BLOCK + jnp.arange(BLOCK)[None, :], axis=0)
+    lt = jnp.sum((rows < qs[:, None]).astype(jnp.int32), axis=1)
+    pos = jnp.minimum(blk * BLOCK + lt, tk.shape[0] - 1)
+    found = jnp.take(tk, pos, axis=0) == qs
+    return jnp.where(found, pos, -1), found
+
+
+def partition_assign(table: SortedTable, qs: jax.Array, n_parts: int) -> jax.Array:
+    cp = table.keys.shape[0] // n_parts
+    bounds = table.keys[::cp]
+    le = (bounds[None, :] <= qs[:, None]).astype(jnp.int32)
+    return jnp.maximum(jnp.sum(le, axis=1) - 1, 0)
+
+
+def partition_slabs(table: SortedTable, n_parts: int):
+    C = table.keys.shape[0]
+    cp = C // n_parts
+    assert cp % BLOCK == 0, "partition width must be a multiple of BLOCK"
+    idx, base_slots = base.slot_partition_plan(C, n_parts, 0)
+    bm = table.block_max.reshape(n_parts, cp // BLOCK)
+    return (jnp.take(table.keys, idx, axis=0), bm), idx, base_slots

@@ -12,6 +12,7 @@ from __future__ import annotations
 from typing import Tuple
 
 import jax
+import jax.numpy as jnp
 
 from . import base
 from .base import SortedTable
@@ -39,7 +40,6 @@ def lookup(
     # assume_sorted enables the merge kernel in ops.py; semantics identical.
     vals, found = base.sorted_lookup(table, qs)
     if valid is not None:
-        import jax.numpy as jnp
         found = found & valid.astype(bool)
         vals = jnp.where(found[:, None], vals, 0.0)
     return vals, found
@@ -54,3 +54,52 @@ def size(table: SortedTable) -> jax.Array:
 
 FAMILY = "sort"
 SUPPORTS_HINTS = True
+
+# ---------------------------------------------------------------------------
+# Resident (in-kernel) hooks — DESIGN.md §8.  Lookup = branchless vectorized
+# binary search over the resident key slab (log2(L) gather+compare rounds);
+# the ``<hinted>`` merge variant is an execution hint with identical
+# semantics, so hinted choices dispatch through the same hook.  Partitioning
+# is by key range: slab block p covers sorted positions [p·Cp, (p+1)·Cp),
+# and a query belongs to the block whose first key is its greatest lower
+# bound — no overlap needed (keys are unique after dedupe).
+# ---------------------------------------------------------------------------
+
+RESIDENT = True
+PARTITIONABLE = True
+RESIDENT_ACCUMULATE = False  # terminals accumulate in hash scratch, then
+# finalize host-side through this family's ``build`` (sort of ≤C unique keys)
+
+
+def resident_slabs(table: SortedTable) -> "Tuple[jax.Array, ...]":
+    return (table.keys,)
+
+
+def resident_find(
+    slabs, qs, *, capacity: int, base_slot=0, max_probes: int = 0
+):
+    """Binary search the resident slab; returns ``(slab position, found)``.
+    Works unchanged on a full table or on one key-range partition block
+    (the search is local — ``base_slot`` and ``capacity`` are unused)."""
+    del capacity, base_slot, max_probes
+    (tk,) = slabs
+    pos = base.lower_bound_pow2(tk, qs)
+    found = jnp.take(tk, pos, axis=0) == qs
+    return jnp.where(found, pos, -1), found
+
+
+def partition_assign(table: SortedTable, qs: jax.Array, n_parts: int) -> jax.Array:
+    """Block id whose key range contains each query: count of block-leading
+    keys ≤ q, minus one (clamped — queries below the first key probe block 0
+    and miss there)."""
+    cp = table.keys.shape[0] // n_parts
+    bounds = table.keys[:: cp]  # [P] first key of each block
+    le = (bounds[None, :] <= qs[:, None]).astype(jnp.int32)
+    return jnp.maximum(jnp.sum(le, axis=1) - 1, 0)
+
+
+def partition_slabs(table: SortedTable, n_parts: int):
+    idx, base_slots = base.slot_partition_plan(
+        table.keys.shape[0], n_parts, 0
+    )
+    return (jnp.take(table.keys, idx, axis=0),), idx, base_slots

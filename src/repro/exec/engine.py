@@ -93,7 +93,8 @@ def build_dict(
     assume_sorted: bool = False,
 ) -> DictResult:
     if valid is not None:
-        assume_sorted = False  # masked rows force a re-sort (see dicts.base)
+        # masked rows become PAD holes; the sorted fast path survives the
+        # mask (dicts.base.build_sorted dedupes sorted-with-holes exactly)
         t = _jit_build(ds, capacity, assume_sorted, True)(keys, vals, valid)
     else:
         t = _jit_build(ds, capacity, assume_sorted, False)(keys, vals)
@@ -568,13 +569,17 @@ def _run_pipeline(pipe, env, refs, db, sigma, allow_sorted, params):
     executor's, so fused and materialized plans produce bitwise-identical
     results (asserted in tests/test_fusion.py).
 
-    On TPU (or ``REPRO_FORCE_PALLAS=1``), regions whose dictionaries are all
-    ``ht_linear`` and VMEM-sizable instead dispatch to the
-    ``kernels.fused_pipeline`` Pallas kernel: fact tiles stream HBM→VMEM
-    once per tile, dictionaries (and their gather payloads, re-keyed to
-    dictionary slots) stay VMEM-resident across grid steps, and partial
-    aggregates accumulate in VMEM scratch written back only by the final
-    grid step.
+    On TPU (or ``REPRO_FORCE_PALLAS=1``), regions whose dictionaries all
+    ship resident hooks (``registry.resident`` — every built-in family)
+    dispatch to the ``kernels.fused_pipeline`` Pallas kernel: fact tiles
+    stream HBM→VMEM through a double-buffered DMA, dictionaries (and their
+    gather payloads, re-keyed to slab positions) stay VMEM-resident across
+    grid steps in their own family layout, and partial aggregates
+    accumulate in VMEM scratch written back only by the final grid step.
+    A dictionary over the per-slab residency bound executes
+    radix-partitioned when the plan priced it so (``Pipeline.partitions``,
+    DESIGN.md §8): fact rows are routed by their probe key's partition and
+    each grid step co-resides one slab block.
     """
     from repro.core import plan as P
 
@@ -601,8 +606,11 @@ def _run_pipeline(pipe, env, refs, db, sigma, allow_sorted, params):
         assert isinstance(f, Frame), pipe.source
         rest = stages
 
-    if _kernel_pipeline(rest, f, env, refs, sigma, allow_sorted, params, need):
+    if _kernel_pipeline(pipe, rest, f, env, refs, sigma, allow_sorted, params, need):
         return
+    REGION_MODES[pipe.out] = (
+        "xla-radix-planned" if getattr(pipe, "partitions", 0) else "xla"
+    )
 
     # -- referenced dictionaries and pruned gather sources ------------------
     dict_syms = []
@@ -884,15 +892,34 @@ def _make_region_fn(rest, f0, builts, src_cols0, sigma, allow_sorted, need):
     return jax.jit(run), holder
 
 
-def _kernel_pipeline(rest, f, env, refs, sigma, allow_sorted, params, need):
+KERNEL_SLOTS = 1 << 16  # per-dictionary resident slot bound of the fused
+# kernel (mirrors FusionCostModel.kernel_slots — a bigger slab radix-
+# partitions instead of de-fusing)
+
+# Execution-mode log per fused region (keyed by the region's terminal
+# symbol): "kernel-resident" / "kernel-radix" for the Pallas paths,
+# "xla" / "xla-radix-planned" for the compiled region function.  Written at
+# trace time — the mode is a static property of (region, policy, dict
+# metadata) — and read by benchmarks to attribute speedups to the path that
+# actually produced them.
+REGION_MODES: Dict[str, str] = {}
+
+
+def _kernel_pipeline(pipe, rest, f, env, refs, sigma, allow_sorted, params, need):
     """Try the fused Pallas kernel for the (already input-resolved) region;
-    returns True when it ran and stored the terminal's result.  Falls back
-    (returns False) whenever the region shape is outside the kernel's
-    contract: every probed/looked-up dictionary and the terminal's output
-    must be ``ht_linear`` (the kernel probes and accumulates with the linear
-    scheme in VMEM) with capacity ≤ 64k, and the terminal must be a
-    GroupBy/GroupJoin/Reduce."""
+    returns True when it ran and stored the terminal's result.
+
+    The kernel is *dictionary-complete*: eligibility is a capability check
+    against the registry (``registry.resident`` — the family ships
+    ``resident_slabs``/``resident_find`` hooks), never a name compare, so
+    every built-in family dispatches and a third-party backend registered
+    without hooks falls back explicitly to the XLA region path.  A
+    dictionary over the per-slab residency bound executes radix-partitioned
+    when the plan priced it so (``pipe.partitions``); remaining fallbacks
+    are structural: a non-aggregating terminal (Project/HashBuild), a
+    duplicated probe symbol, or a planner/runtime capacity disagreement."""
     from repro.core import plan as P
+    from repro.kernels import fused_pipeline as _fp
     from repro.kernels import ops as _kops
 
     use_pallas, interpret = _kops.fused_pipeline_policy()
@@ -901,15 +928,24 @@ def _kernel_pipeline(rest, f, env, refs, sigma, allow_sorted, params, need):
     term = rest[-1] if rest else None
     if not isinstance(term, (P.GroupBy, P.GroupJoin, P.Reduce)):
         return False
-    MAX_C = 1 << 16
+    n_parts = getattr(pipe, "partitions", 0)
+    radix_sym = getattr(pipe, "part_sym", "") if n_parts else ""
 
-    def _resident_ok(b) -> bool:
-        return (
-            isinstance(b, BuiltDict)
-            and b.res.ds == "ht_linear"
-            and isinstance(b.res.table, dbase.HashTable)
-            and b.res.table.capacity <= MAX_C
-        )
+    def _cap_of(b) -> int:
+        mod = registry.get(b.res.ds)
+        return int(mod.resident_slabs(b.res.table)[0].shape[0])
+
+    def _resident_ok(b, sym) -> bool:
+        if not (isinstance(b, BuiltDict) and registry.resident(b.res.ds)):
+            return False
+        cap = _cap_of(b)
+        if sym == radix_sym:
+            return (
+                registry.partitionable(b.res.ds)
+                and cap % n_parts == 0
+                and cap // n_parts >= 256
+            )
+        return cap <= KERNEL_SLOTS
 
     # resident slabs are keyed by build symbol: two probes of the same
     # dictionary would alias each other's gather payloads — take the exact
@@ -917,22 +953,33 @@ def _kernel_pipeline(rest, f, env, refs, sigma, allow_sorted, params, need):
     probe_builds = [n.build for n in rest if isinstance(n, P.HashProbe)]
     if len(set(probe_builds)) != len(probe_builds):
         return False
-    dicts = {}  # sym -> (keys [C], float_vals [C, Vf], int_vals [C, Vi])
+
+    def _bundle(b, sym, fv, iv):
+        if sym == radix_sym:
+            return _fp.partitioned_bundle(
+                b.res.ds, b.res.table, fv, iv, n_parts
+            )
+        return _fp.resident_bundle(b.res.ds, b.res.table, fv, iv)
+
+    dicts = {}  # sym -> ResidentDict bundle
     probe_meta = {}  # probe node out -> ((float cols, dtypes), (int cols, dtypes))
+    radix_key = None  # LLQL key expression partitioning the fact stream
     for node in rest:
         if isinstance(node, P.HashProbe):
             b = env[node.build]
-            if not (_resident_ok(b) and b.kind == "index"):
+            if node.build in dicts or not (
+                _resident_ok(b, node.build) and b.kind == "index"
+            ):
                 return False
             src_t = b.src
             want = tuple(c for c in src_t.names() if c in need.get(node.inner_var, ()))
-            ht = b.res.table
-            slot_ok = ht.keys != dbase.EMPTY
-            rowidx = jnp.where(slot_ok, ht.vals[:, 0].astype(jnp.int32), 0)
-            # gather payload re-keyed to dictionary slots: the probe then
-            # yields the needed build columns directly, C-bounded in VMEM.
-            # Integer columns ride a separate int32 slab — a float32
-            # round-trip would corrupt values above 2^24.
+            ks, vs, slot_ok = b.res.arrays()
+            cap = ks.shape[0]
+            rowidx = jnp.where(slot_ok, vs[:, 0].astype(jnp.int32), 0)
+            # gather payload re-keyed to dictionary slab positions: the
+            # probe then yields the needed build columns directly,
+            # C-bounded in VMEM.  Integer columns ride a separate int32
+            # slab — a float32 round-trip would corrupt values above 2^24.
             want_f = tuple(
                 c for c in want if jnp.issubdtype(src_t.col(c).dtype, jnp.floating)
             )
@@ -946,44 +993,73 @@ def _kernel_pipeline(rest, f, env, refs, sigma, allow_sorted, params, need):
             fv = (
                 jnp.stack([gathered[c].astype(jnp.float32) for c in want_f], axis=1)
                 if want_f
-                else jnp.zeros((ht.capacity, 0), jnp.float32)
+                else jnp.zeros((cap, 0), jnp.float32)
             )
             iv = (
                 jnp.stack([gathered[c].astype(jnp.int32) for c in want_i], axis=1)
                 if want_i
-                else jnp.zeros((ht.capacity, 0), jnp.int32)
+                else jnp.zeros((cap, 0), jnp.int32)
             )
-            dicts[node.build] = (ht.keys, fv, iv)
+            dicts[node.build] = _bundle(b, node.build, fv, iv)
+            if node.build == radix_sym:
+                radix_key = node.keyexpr
             probe_meta[node.out] = (
                 (want_f, tuple(src_t.col(c).dtype for c in want_f)),
                 (want_i, tuple(src_t.col(c).dtype for c in want_i)),
             )
         elif isinstance(node, P.GroupJoin):
             b = env[node.build]
-            if not _resident_ok(b):
+            if node.build in dicts or not _resident_ok(b, node.build):
                 return False
-            ht = b.res.table
-            dicts[node.build] = (
-                ht.keys, ht.vals, jnp.zeros((ht.capacity, 0), jnp.int32)
+            ks, vs, _ = b.res.arrays()
+            dicts[node.build] = _bundle(
+                b, node.build, vs, jnp.zeros((ks.shape[0], 0), jnp.int32)
             )
+            if node.build == radix_sym:
+                radix_key = node.keyexpr
         elif isinstance(node, P.Reduce) and node.lookup_sym is not None:
             b = env[node.lookup_sym]
-            if not _resident_ok(b):
+            if node.lookup_sym in dicts or not _resident_ok(b, node.lookup_sym):
                 return False
-            ht = b.res.table
-            dicts[node.lookup_sym] = (
-                ht.keys, ht.vals, jnp.zeros((ht.capacity, 0), jnp.int32)
+            ks, vs, _ = b.res.arrays()
+            dicts[node.lookup_sym] = _bundle(
+                b, node.lookup_sym, vs, jnp.zeros((ks.shape[0], 0), jnp.int32)
             )
+            if node.lookup_sym == radix_sym:
+                radix_key = node.lookup_key
+    if radix_sym and (radix_sym not in dicts or radix_key is None):
+        return False  # plan marked a partition target the region never probes
+
+    part_terminal = False
+    acc_ds = None
+    out_cap = 0
     if isinstance(term, (P.GroupBy, P.GroupJoin)):
-        if term.choice.ds != "ht_linear":
+        acc_ds = term.choice.ds
+        if acc_ds not in registry.names():
             return False
-        out_cap = _capacity(f, term.keyexpr, term.choice.ds, sigma)
-        if out_cap > MAX_C:
+        out_cap = _capacity(f, term.keyexpr, acc_ds, sigma)
+        part_terminal = bool(radix_sym) and term.keyexpr == radix_key
+        if out_cap > KERNEL_SLOTS and not part_terminal:
             return False
         n_lanes = len(term.values) if isinstance(term, P.GroupBy) else (
-            env[term.build].res.table.vals.shape[1]
+            env[term.build].res.arrays()[1].shape[1]
         )
-        out_spec = ("dict", out_cap, n_lanes)
+        if part_terminal:
+            b = env[radix_sym]
+            mod = registry.get(b.res.ds)
+            cp = _cap_of(b) // n_parts
+            over = int(getattr(mod, "PARTITION_OVERLAP", 0))
+            # a partition's terminal keys ⊆ its dictionary block's live keys
+            # (≤ cp + overlap ≤ 2·cp), so 2·cp slots bound the load factor
+            # at ~0.5 with no skew exposure — and match EXACTLY what the
+            # planner priced (plan._partition_candidate's _pow2cap(cp)),
+            # so a region admitted under the byte budget cannot allocate
+            # past it at runtime
+            cacc = dbase.next_pow2(2 * cp)
+            assert cacc >= cp + over
+            out_spec = ("dict", cacc, n_lanes)
+        else:
+            out_spec = ("dict", out_cap, n_lanes)
     else:
         if isinstance(env.get(term.lookup_sym), BuiltDict):
             lanes = env[term.lookup_sym].lanes or ("m", "c", "c_c")
@@ -1002,6 +1078,34 @@ def _kernel_pipeline(rest, f, env, refs, sigma, allow_sorted, params, need):
     scalars = {
         k: jnp.asarray(v).reshape(1) for k, v in (params or {}).items()
     }
+
+    # radix mode: route fact rows by the partition id of their (oversized)
+    # probe key so each grid step co-resides one slab block — computed from
+    # the streamed columns (the planner guarantees the key reads only the
+    # scan variable)
+    radix_plan = None
+    if radix_sym:
+        from repro.core.lower import compile_rowfn_frame as _rf
+
+        b = env[radix_sym]
+        mod = registry.get(b.res.ds)
+        try:
+            kvals = jnp.asarray(_rf(radix_key, f.tables, params), jnp.int32)
+        except Exception:
+            return False  # key not computable from the stream: XLA path
+        part = mod.partition_assign(b.res.table, kvals, n_parts)
+        cols, live, radix_plan = _fp.radix_route(
+            cols, live, part, n_parts, _fp.ROW_BLOCK
+        )
+        radix_plan = radix_plan._replace(part_terminal=part_terminal)
+
+    accumulate = None
+    if acc_ds is not None and registry.accumulates_resident(acc_ds):
+        import functools as _ft
+
+        accumulate = _ft.partial(
+            registry.get(acc_ds).resident_accumulate, max_probes=_fp.MAX_PROBES
+        )
 
     def row_fn(tile_cols, tile_live, lookups, tile_scalars):
         from repro.core.lower import compile_rowfn_frame as _rf
@@ -1079,16 +1183,34 @@ def _kernel_pipeline(rest, f, env, refs, sigma, allow_sorted, params, need):
                 out_vals = jnp.stack(cols_v, axis=1)
         return out_keys, out_vals, cur_live
 
-    from repro.kernels import fused_pipeline as _fp
-
     out = _fp.fused_pipeline(
-        cols, live, dicts, scalars, row_fn, out_spec, interpret=interpret
+        cols,
+        live,
+        dicts,
+        scalars,
+        row_fn,
+        out_spec,
+        accumulate=accumulate,
+        radix=radix_plan,
+        interpret=interpret,
     )
+    REGION_MODES[term.out] = "kernel-radix" if radix_sym else "kernel-resident"
     if out_spec[0] == "dict":
         tk, tv = out
-        res = DictResult(
-            "ht_linear", dbase.HashTable(tk, tv, jnp.int32(_fp.MAX_PROBES))
-        )
+        if part_terminal:  # [P, Cacc(*V)] per-partition scratches: flatten
+            tk = tk.reshape(-1)
+            tv = tv.reshape(tk.shape[0], -1)
+        if registry.accumulates_resident(acc_ds) and not part_terminal:
+            # hash-family terminal: the scratch IS the family's layout
+            table = dbase.HashTable(tk, tv, jnp.int32(_fp.MAX_PROBES))
+        else:
+            # sort-family (or partition-flattened) terminal: finalize the
+            # scratch entries through the family's own build — keys are
+            # already unique per entry, so no sums move (exact)
+            table = registry.get(acc_ds).build(
+                tk, tv, out_cap, valid=tk != dbase.EMPTY
+            )
+        res = DictResult(acc_ds, table)
         if isinstance(term, P.GroupBy):
             env[term.out] = BuiltDict(
                 res, term.choice, lanes=tuple(a for a, _ in term.values)

@@ -1,163 +1,299 @@
-"""Pallas TPU kernel: data-centric pipeline fusion (DESIGN.md §7).
+"""Pallas TPU kernel: data-centric pipeline fusion (DESIGN.md §7/§8).
 
 One kernel executes a whole ``Pipeline`` region — the paper's data-centric
 codegen story (rows flow scan → filter → probe → aggregate without
 materializing intermediates) mapped onto the TPU grid:
 
-* **fact tiles stream HBM→VMEM once per grid step** (one BlockSpec per
-  pruned input column — only columns the region reads are streamed);
+* **fact tiles stream HBM→VMEM once per grid step through a manually
+  double-buffered DMA** — while the kernel probes tile *i*, tile *i+1*'s
+  copy is already in flight, so gather latency overlaps the next tile's DMA
+  instead of serializing with it;
 * **predicates evaluate to in-register masks** — no mask column ever
   round-trips through HBM;
-* **probed dictionaries stay VMEM-resident across grid steps** (constant
-  index maps, reusing the ``hash_probe`` layout and its C ≤ 64k guarantee);
-  join gathers ride a *payload* slab re-keyed to dictionary slots, so the
-  probe yields the needed build-side columns directly;
-* **partial aggregates accumulate into VMEM scratch** (the ``hash_build``
-  round-insert for dictionary terminals, a running [1, V] sum for scalar
-  Reduce) that only the final grid step writes back.
+* **probed dictionaries stay VMEM-resident across grid steps** in their own
+  family layout: every registered dictionary family supplies
+  ``resident_slabs``/``resident_find`` hooks (``dicts/*`` — linear probing,
+  two-choice buckets, binary search, block-directory search), so the kernel
+  is *dictionary-complete*: whatever Algorithm 1 picked executes fused.
+  Join gathers ride *payload* slabs aligned to the family's slab positions,
+  so a probe yields the needed build-side columns directly;
+* **dictionaries too big for VMEM radix-partition instead of de-fusing**
+  (``radix_route``): fact rows are routed by the partition id of their probe
+  key into tile-aligned runs, and a scalar-prefetched per-tile partition
+  index makes each grid step co-resident with exactly the one slab block
+  those rows probe — capacity-unbounded fused execution;
+* **partial aggregates accumulate into VMEM scratch** via the terminal
+  family's ``resident_accumulate`` hook (hash families accumulate in their
+  own layout; sort families accumulate in hash scratch and the executor
+  finalizes through their ``build``), written back by the final grid step —
+  or per partition, when the terminal's key is the partition key.
 
 The region's row-level semantics arrive as ``row_fn`` — a traced callable
 the executor assembles from the plan stages (``exec.engine._kernel_pipeline``)
 — so this module stays a pure execution substrate: it owns tiling,
-residency, probing, and accumulation, nothing query-specific.  Probing and
-accumulation use the ``ht_linear`` scheme; the executor only dispatches
-regions whose dictionaries are all ``ht_linear`` (anything else takes the
-pruned XLA path).
+residency, routing, probing, and accumulation, nothing query- or
+family-specific.
 """
 from __future__ import annotations
 
 import functools
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.dicts import base as dbase
+from repro.dicts import ht_linear
 from repro.dicts.ht_linear import MAX_PROBES  # the XLA builder's probe bound:
-# tables arrive built by dicts.ht_linear (chains up to MAX_PROBES), so the
+# tables arrive built by the dicts backends (chains up to MAX_PROBES), so the
 # kernel must probe at least as deep or it would silently miss displaced
 # keys.  Early termination makes the deep bound free on healthy tables.
-from .hash_probe import gather_slots, probe_slots
+from .hash_probe import gather_slots  # the ONE miss-zeroing payload gather
 
 ROW_BLOCK = 1024
 
 
-def probe_resident(
-    tk: jax.Array,
-    tv: jax.Array,
-    ti: jax.Array,
-    qs: jax.Array,
+class ResidentDict(NamedTuple):
+    """One probed dictionary's VMEM-resident bundle.
+
+    ``find(slabs, qs, base_slot)`` is the family hook (partially applied by
+    the executor with capacity/max_probes); ``slabs`` are the key-side
+    arrays from ``resident_slabs`` and ``fvals``/``ivals`` the payload slabs
+    aligned to ``slabs[0]``'s positions (float and int32 lanes — integer
+    build columns ride the int slab so gathered values stay exact past
+    2^24).  When ``n_parts > 0`` every array is stacked ``[P, ...]`` (one
+    leading partition axis, slabs from ``partition_slabs``) and ``cp`` is
+    the global slot stride between blocks (``capacity // n_parts``)."""
+
+    find: Callable
+    slabs: Tuple[jax.Array, ...]
+    fvals: jax.Array
+    ivals: jax.Array
+    n_parts: int = 0
+    cp: int = 0
+
+
+class RadixPlan(NamedTuple):
+    """Routing of the fact stream for a radix-partitioned region: built by
+    :func:`radix_route`, consumed by :func:`fused_pipeline`."""
+
+    n_parts: int
+    tile_part: jax.Array  # [T] partition id per fact tile (nondecreasing)
+    visited: jax.Array  # [P] bool — partitions that own at least one tile
+    part_terminal: bool = False  # terminal accumulator partitioned too
+
+
+def resident_bundle(
+    ds: str,
+    table,
+    fvals: jax.Array,
+    ivals: jax.Array,
+    *,
     max_probes: int = MAX_PROBES,
-) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """One probe (``hash_probe.probe_slots`` — the shared early-terminating
-    loop) against a VMEM-resident dictionary, gathering BOTH payload slabs:
-    ``tv`` carries float lanes, ``ti`` int32 lanes.  Integer build-side
-    columns ride the int slab so gathered values stay exact — a float32
-    round-trip would corrupt values above 2^24.  Returns
-    ``(float_vals, int_vals, found)`` with misses zeroed."""
-    slot, found = probe_slots(tk, qs, max_probes)
-    return gather_slots(tv, slot, found), gather_slots(ti, slot, found), found
+) -> ResidentDict:
+    """Fully-resident bundle for a built dictionary: the family's slabs and
+    its ``resident_find`` partially applied with the table capacity."""
+    from repro.dicts import registry
 
-
-def _insert_rounds(tk, tv, ks, vs, pending, capacity: int, max_probes: int):
-    """``hash_build``'s round-insert over the scratch accumulator: claim via
-    scatter-max arbitration, aggregate duplicates, advance survivors.
-    Early-terminating (rounds stop once every pending row has written), so
-    the deep ``max_probes`` bound costs nothing on healthy tables."""
-    B = ks.shape[0]
-    ids = lax.broadcasted_iota(jnp.int32, (B,), 0)
-    h0 = dbase.hash1(ks, capacity)
-
-    def round_body(carry):
-        t, tk, tv, pending = carry
-        slot = (h0 + t) & (capacity - 1)
-        cur = jnp.take(tk, slot, axis=0)
-        hit = pending & (cur == ks)
-        want = pending & (cur == dbase.EMPTY)
-        claim = jnp.full((capacity,), -1, jnp.int32).at[
-            jnp.where(want, slot, capacity)
-        ].max(ids, mode="drop")
-        won = want & (jnp.take(claim, slot, axis=0) == ids)
-        tk = tk.at[jnp.where(won, slot, capacity)].set(ks, mode="drop")
-        cur2 = jnp.take(tk, slot, axis=0)
-        hit2 = pending & ~hit & ~won & (cur2 == ks)
-        write = hit | won | hit2
-        tv = tv.at[jnp.where(write, slot, capacity)].add(vs, mode="drop")
-        return t + 1, tk, tv, pending & ~write
-
-    def cond(carry):
-        t, _, _, pending = carry
-        return jnp.any(pending) & (t < max_probes)
-
-    _, tk, tv, _ = lax.while_loop(
-        cond, round_body, (jnp.int32(0), tk, tv, pending)
+    mod = registry.get(ds)
+    slabs = mod.resident_slabs(table)
+    find = functools.partial(
+        mod.resident_find, capacity=slabs[0].shape[0], max_probes=max_probes
     )
-    return tk, tv
+    return ResidentDict(find, slabs, fvals, ivals)
+
+
+def partitioned_bundle(
+    ds: str,
+    table,
+    fvals: jax.Array,
+    ivals: jax.Array,
+    n_parts: int,
+    *,
+    max_probes: int = MAX_PROBES,
+) -> ResidentDict:
+    """Radix-partitioned bundle: stacked ``[P, ...]`` slab blocks from the
+    family's ``partition_slabs``, payload slabs gathered through the same
+    slot map so probed positions stay aligned."""
+    from repro.dicts import registry
+
+    mod = registry.get(ds)
+    slabs, gidx, _ = mod.partition_slabs(table, n_parts)
+    capacity = mod.resident_slabs(table)[0].shape[0]
+    find = functools.partial(
+        mod.resident_find, capacity=capacity, max_probes=max_probes
+    )
+    fv = jnp.take(fvals, gidx, axis=0)
+    iv = jnp.take(ivals, gidx, axis=0)
+    return ResidentDict(
+        find, slabs, fv, iv, n_parts=n_parts, cp=capacity // n_parts
+    )
+
+
+def radix_route(
+    cols: Dict[str, jax.Array],
+    live: jax.Array,
+    part: jax.Array,
+    n_parts: int,
+    block: int,
+) -> Tuple[Dict[str, jax.Array], jax.Array, RadixPlan]:
+    """Route fact rows into tile-aligned partition runs.
+
+    Rows are stably ordered by partition id and scattered into a padded
+    stream where every partition starts on a tile boundary, so each grid
+    step's rows probe exactly one partition's resident slab.  The padded
+    length is static: ``ceil(n/block) + n_parts`` tiles bound the alignment
+    waste regardless of skew.  Returns the routed columns, the routed live
+    mask (padding rows dead), and the :class:`RadixPlan`."""
+    n = live.shape[0]
+    order = jnp.argsort(part)  # stable: equal ids keep row order
+    sp = part[order]
+    counts = jnp.zeros((n_parts,), jnp.int32).at[part].add(1)
+    tiles_per = (counts + block - 1) // block
+    tile_start = jnp.cumsum(tiles_per) - tiles_per  # [P] first tile per part
+    row_start = jnp.cumsum(counts) - counts  # [P] first sorted row per part
+    pos = tile_start[sp] * block + jnp.arange(n, dtype=jnp.int32) - row_start[sp]
+
+    n_tiles = n // block + ((n % block) > 0) + n_parts  # static bound
+    n_pad = n_tiles * block
+    routed = {
+        name: jnp.zeros((n_pad,), a.dtype).at[pos].set(a[order])
+        for name, a in cols.items()
+    }
+    live_r = jnp.zeros((n_pad,), bool).at[pos].set(live[order])
+    # partition id per tile: filler tiles past the last busy one ride the
+    # final partition (their rows are dead)
+    t_ids = jnp.arange(n_tiles, dtype=jnp.int32)
+    tile_part = (
+        jnp.sum(
+            (tile_start[None, :] <= t_ids[:, None]).astype(jnp.int32), axis=1
+        )
+        - 1
+    )
+    tile_part = jnp.clip(tile_part, 0, n_parts - 1)
+    return routed, live_r, RadixPlan(n_parts, tile_part, counts > 0)
 
 
 def _kernel(
+    part_ref,
     *refs,
-    col_names,
-    dict_syms,
+    col_meta,  # ((name, dtype), ...) — cols then the live mask stream
+    dict_meta,  # ((sym, find, n_slabs, n_parts, cp), ...) in dict order
     scalar_names,
     row_fn,
     out_spec,
+    accumulate,
     n_tiles,
-    max_probes,
+    block,
+    part_terminal,
 ):
-    # refs layout: col tiles | live | (keys, fvals, ivals) per dict |
-    #              scalars | outputs | scratch
-    nc, nd, ns = len(col_names), len(dict_syms), len(scalar_names)
-    col_refs = refs[:nc]
-    live_ref = refs[nc]
-    dict_refs = refs[nc + 1 : nc + 1 + 3 * nd]
-    scalar_refs = refs[nc + 1 + 3 * nd : nc + 1 + 3 * nd + ns]
-    rest = refs[nc + 1 + 3 * nd + ns :]
+    nc = len(col_meta)
+    nd = sum(2 + m[2] for m in dict_meta)
+    ns = len(scalar_names)
+    hbm_refs = refs[:nc]
+    dict_refs = refs[nc : nc + nd]
+    scalar_refs = refs[nc + nd : nc + nd + ns]
+    # remaining refs: outputs | col buffers [2, block] ×nc | col sems | acc
+    rest = list(refs[nc + nd + ns :])
+    n_out = 2 if out_spec[0] == "dict" else 1
+    out_refs = rest[:n_out]
+    buf_refs = rest[n_out : n_out + nc]
+    sem_ref = rest[n_out + nc]
+    acc_refs = rest[n_out + nc + 1 :]
 
-    g = pl.program_id(0)
-    cols = {name: r[...] for name, r in zip(col_names, col_refs)}
-    live = live_ref[...] != 0
+    i = pl.program_id(0)
 
-    lookups: Dict[str, Callable] = {}
-    for i, sym in enumerate(dict_syms):
-        tk = dict_refs[3 * i][...]
-        tv = dict_refs[3 * i + 1][...]
-        ti = dict_refs[3 * i + 2][...]
-        lookups[sym] = functools.partial(
-            probe_resident, tk, tv, ti, max_probes=max_probes
+    # -- double-buffered fact stream: start i+1's DMA before waiting on i ---
+    def dma(c, slot, t):
+        return pltpu.make_async_copy(
+            hbm_refs[c].at[pl.ds(t * block, block)],
+            buf_refs[c].at[slot],
+            sem_ref.at[c, slot],
         )
-    scalars = {name: r[0] for name, r in zip(scalar_names, scalar_refs)}
+
+    @pl.when(i == 0)
+    def _warm():
+        for c in range(nc):
+            dma(c, 0, 0).start()
+
+    @pl.when(i + 1 < n_tiles)
+    def _prefetch():
+        nxt = (i + 1) % 2
+        for c in range(nc):
+            dma(c, nxt, i + 1).start()
+
+    cur = i % 2
+    for c in range(nc):
+        dma(c, cur, i).wait()
+
+    cols = {
+        name: buf_refs[c][cur] for c, (name, _) in enumerate(col_meta[:-1])
+    }
+    live = buf_refs[nc - 1][cur] != 0
+
+    # -- resident dictionaries: family find + payload gathers ---------------
+    lookups: Dict[str, Callable] = {}
+    r = 0
+    for sym, find, n_slabs, n_parts, cp in dict_meta:
+        slab_vals = tuple(dict_refs[r + k][...] for k in range(n_slabs))
+        fv = dict_refs[r + n_slabs][...]
+        iv = dict_refs[r + n_slabs + 1][...]
+        r += n_slabs + 2
+        if n_parts:  # one partition block resident: drop the leading axis
+            slab_vals = tuple(s[0] for s in slab_vals)
+            fv, iv = fv[0], iv[0]
+            base_slot = part_ref[i] * cp
+        else:
+            base_slot = 0
+
+        def lk(qs, _s=slab_vals, _f=fv, _i=iv, _b=base_slot, _find=find):
+            slot, found = _find(_s, qs, base_slot=_b)
+            return gather_slots(_f, slot, found), gather_slots(_i, slot, found), found
+
+        lookups[sym] = lk
+    scalars = {name: r_[0] for name, r_ in zip(scalar_names, scalar_refs)}
 
     keys, vals, live = row_fn(cols, live, lookups, scalars)
 
+    # -- terminal accumulation ---------------------------------------------
     if out_spec[0] == "dict":
-        out_keys_ref, out_vals_ref, tk_scr, tv_scr = rest
-        capacity = out_spec[1]
+        out_keys_ref, out_vals_ref = out_refs
+        tk_scr, tv_scr = acc_refs
 
-        @pl.when(g == 0)
+        if part_terminal:
+            fresh = (i == 0) | (part_ref[i] != part_ref[jnp.maximum(i - 1, 0)])
+        else:
+            fresh = i == 0
+
+        @pl.when(fresh)
         def _init():
             tk_scr[...] = jnp.full_like(tk_scr, dbase.EMPTY)
             tv_scr[...] = jnp.zeros_like(tv_scr)
 
         ks = jnp.where(live, keys, dbase.PAD)
-        tk, tv = _insert_rounds(
-            tk_scr[...], tv_scr[...], ks, vals, live, capacity, max_probes
-        )
+        tk, tv = accumulate(tk_scr[...], tv_scr[...], ks, vals, live)
         tk_scr[...] = tk
         tv_scr[...] = tv
 
-        @pl.when(g == n_tiles - 1)
-        def _finish():
-            out_keys_ref[...] = tk_scr[...]
-            out_vals_ref[...] = tv_scr[...]
+        if part_terminal:
+            # written every step; the block index map flushes each partition
+            # block when the grid moves to the next partition
+            out_keys_ref[0] = tk_scr[...]
+            out_vals_ref[0] = tv_scr[...]
+        else:
+
+            @pl.when(i == n_tiles - 1)
+            def _finish():
+                out_keys_ref[...] = tk_scr[...]
+                out_vals_ref[...] = tv_scr[...]
 
     else:  # scalar reduce: running [1, V] sum in scratch
-        out_ref, sum_scr = rest
+        (out_ref,) = out_refs
+        (sum_scr,) = acc_refs
 
-        @pl.when(g == 0)
+        @pl.when(i == 0)
         def _init_sum():
             sum_scr[...] = jnp.zeros_like(sum_scr)
 
@@ -165,7 +301,7 @@ def _kernel(
             jnp.where(live[:, None], vals, 0.0), axis=0, keepdims=True
         )
 
-        @pl.when(g == n_tiles - 1)
+        @pl.when(i == n_tiles - 1)
         def _finish_sum():
             out_ref[...] = sum_scr[...]
 
@@ -173,96 +309,169 @@ def _kernel(
 def fused_pipeline(
     cols: Dict[str, jax.Array],  # [n] aligned streamed (pruned) columns
     live: jax.Array,  # [n] bool initial row mask
-    dicts: Dict[str, Tuple[jax.Array, jax.Array, jax.Array]],  # resident slabs
+    dicts: Dict[str, ResidentDict],  # resident bundles (see ResidentDict)
     scalars: Dict[str, jax.Array],  # param name -> [1] runtime scalar
     row_fn: Callable,  # (cols, live, lookups, scalars) -> (keys, vals, live)
     out_spec: Tuple,  # ("dict", capacity, V) | ("sum", V)
     *,
+    accumulate: Optional[Callable] = None,  # terminal family hook
+    radix: Optional[RadixPlan] = None,
     block: int = ROW_BLOCK,
-    max_probes: int = MAX_PROBES,
     interpret: bool = True,
 ):
-    """Run one fused region.  ``dicts`` maps each symbol to its resident
-    ``(keys [C], float_vals [C, Vf], int_vals [C, Vi])`` slabs (either slab
-    may be lane-padded; ``row_fn``'s lookups return both).  Returns
-    ``(table_keys [C], table_vals [C, V])`` for dictionary terminals
-    (``ht_linear`` layout — duplicate keys aggregated) or ``sums [V]`` for
-    scalar Reduce terminals."""
+    """Run one fused region.  Returns ``(table_keys [C], table_vals [C, V])``
+    for dictionary terminals (the ``accumulate`` hook's layout — duplicate
+    keys aggregated; ``[P, Cp]``/``[P, Cp, V]`` when the terminal is
+    partitioned) or ``sums [V]`` for scalar Reduce terminals.  With
+    ``radix``, ``cols``/``live`` must already be tile-aligned by
+    :func:`radix_route`."""
     n = live.shape[0]
-    pad = -n % block
+    accumulate = accumulate or functools.partial(
+        ht_linear.resident_accumulate, max_probes=MAX_PROBES
+    )
     col_names = tuple(sorted(cols))
-    cols_p = [
-        jnp.pad(jnp.asarray(cols[c]), (0, pad)) for c in col_names
+    if radix is None:
+        pad = -n % block
+        cols_p = [jnp.pad(jnp.asarray(cols[c]), (0, pad)) for c in col_names]
+        live_p = jnp.pad(live.astype(jnp.int32), (0, pad))
+        n_tiles = (n + pad) // block
+        tile_part = jnp.zeros((n_tiles,), jnp.int32)
+        part_terminal = False
+    else:
+        assert n % block == 0, "radix_route emits tile-aligned streams"
+        cols_p = [jnp.asarray(cols[c]) for c in col_names]
+        live_p = live.astype(jnp.int32)
+        n_tiles = n // block
+        tile_part = radix.tile_part
+        assert tile_part.shape[0] == n_tiles
+        part_terminal = radix.part_terminal
+
+    col_meta = tuple(
+        (c, cols_p[k].dtype) for k, c in enumerate(col_names)
+    ) + (("__live__", live_p.dtype),)
+    streams = cols_p + [live_p]
+    stream_specs = [
+        pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY) for _ in streams
     ]
-    live_p = jnp.pad(live.astype(jnp.int32), (0, pad))
-    n_tiles = (n + pad) // block
 
     dict_syms = tuple(sorted(dicts))
     dict_args = []
     dict_specs = []
+    dict_meta = []
     for sym in dict_syms:
-        tk, tv, ti = dicts[sym]
-        C = tk.shape[0]
-        assert C & (C - 1) == 0, "capacity must be a power of two"
-        if tv.shape[1] == 0:  # pallas rejects zero-width blocks: pad a lane
-            tv = jnp.zeros((C, 1), tv.dtype)
-        if ti.shape[1] == 0:
-            ti = jnp.zeros((C, 1), ti.dtype)
-        dict_args += [tk, tv, ti]
-        dict_specs += [
-            pl.BlockSpec((C,), lambda i: (0,)),  # resident across steps
-            pl.BlockSpec((C, tv.shape[1]), lambda i: (0, 0)),
-            pl.BlockSpec((C, ti.shape[1]), lambda i: (0, 0)),
-        ]
+        d = dicts[sym]
+        fv, iv = d.fvals, d.ivals
+        if d.n_parts:
+            P = d.n_parts
+            lp = d.slabs[0].shape[1]
+            # per-part block: leading axis selected by the prefetched tile id
+            if fv.shape[-1] == 0:  # pallas rejects zero-width blocks
+                fv = jnp.zeros((P, lp, 1), fv.dtype)
+            if iv.shape[-1] == 0:
+                iv = jnp.zeros((P, lp, 1), iv.dtype)
+            for s in d.slabs:
+                dict_specs.append(
+                    pl.BlockSpec(
+                        (1,) + s.shape[1:],
+                        lambda i, pr, _nd=s.ndim: (pr[i],) + (0,) * (_nd - 1),
+                    )
+                )
+            dict_specs += [
+                pl.BlockSpec((1, lp, fv.shape[2]), lambda i, pr: (pr[i], 0, 0)),
+                pl.BlockSpec((1, lp, iv.shape[2]), lambda i, pr: (pr[i], 0, 0)),
+            ]
+            dict_meta.append((sym, d.find, len(d.slabs), P, d.cp))
+        else:
+            if fv.shape[1] == 0:
+                fv = jnp.zeros((fv.shape[0], 1), fv.dtype)
+            if iv.shape[1] == 0:
+                iv = jnp.zeros((iv.shape[0], 1), iv.dtype)
+            for s in d.slabs:
+                dict_specs.append(
+                    pl.BlockSpec(s.shape, lambda i, pr, _nd=s.ndim: (0,) * _nd)
+                )
+            dict_specs += [
+                pl.BlockSpec(fv.shape, lambda i, pr: (0, 0)),
+                pl.BlockSpec(iv.shape, lambda i, pr: (0, 0)),
+            ]
+            dict_meta.append((sym, d.find, len(d.slabs), 0, 0))
+        dict_args += [*d.slabs, fv, iv]
 
     scalar_names = tuple(sorted(scalars))
     scalar_args = [scalars[s] for s in scalar_names]
-    scalar_specs = [pl.BlockSpec((1,), lambda i: (0,)) for _ in scalar_names]
+    scalar_specs = [
+        pl.BlockSpec((1,), lambda i, pr: (0,)) for _ in scalar_names
+    ]
 
     if out_spec[0] == "dict":
         _, capacity, V = out_spec
         assert capacity & (capacity - 1) == 0
-        out_specs = [
-            pl.BlockSpec((capacity,), lambda i: (0,)),
-            pl.BlockSpec((capacity, V), lambda i: (0, 0)),
-        ]
-        out_shape = [
-            jax.ShapeDtypeStruct((capacity,), jnp.int32),
-            jax.ShapeDtypeStruct((capacity, V), jnp.float32),
-        ]
-        scratch = [
+        if part_terminal:
+            P = radix.n_parts
+            out_specs = [
+                pl.BlockSpec((1, capacity), lambda i, pr: (pr[i], 0)),
+                pl.BlockSpec((1, capacity, V), lambda i, pr: (pr[i], 0, 0)),
+            ]
+            out_shape = [
+                jax.ShapeDtypeStruct((P, capacity), jnp.int32),
+                jax.ShapeDtypeStruct((P, capacity, V), jnp.float32),
+            ]
+        else:
+            out_specs = [
+                pl.BlockSpec((capacity,), lambda i, pr: (0,)),
+                pl.BlockSpec((capacity, V), lambda i, pr: (0, 0)),
+            ]
+            out_shape = [
+                jax.ShapeDtypeStruct((capacity,), jnp.int32),
+                jax.ShapeDtypeStruct((capacity, V), jnp.float32),
+            ]
+        acc_scratch = [
             pltpu.VMEM((capacity,), jnp.int32),
             pltpu.VMEM((capacity, V), jnp.float32),
         ]
     else:
         _, V = out_spec
-        out_specs = [pl.BlockSpec((1, V), lambda i: (0, 0))]
+        out_specs = [pl.BlockSpec((1, V), lambda i, pr: (0, 0))]
         out_shape = [jax.ShapeDtypeStruct((1, V), jnp.float32)]
-        scratch = [pltpu.VMEM((1, V), jnp.float32)]
+        acc_scratch = [pltpu.VMEM((1, V), jnp.float32)]
 
+    nc = len(streams)
+    scratch = (
+        [pltpu.VMEM((2, block), s.dtype) for s in streams]
+        + [pltpu.SemaphoreType.DMA((nc, 2))]
+        + acc_scratch
+    )
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_tiles,),
+        in_specs=stream_specs + dict_specs + scalar_specs,
+        out_specs=out_specs,
+        scratch_shapes=scratch,
+    )
     out = pl.pallas_call(
         functools.partial(
             _kernel,
-            col_names=col_names,
-            dict_syms=dict_syms,
+            col_meta=col_meta,
+            dict_meta=tuple(dict_meta),
             scalar_names=scalar_names,
             row_fn=row_fn,
             out_spec=out_spec,
+            accumulate=accumulate,
             n_tiles=n_tiles,
-            max_probes=max_probes,
+            block=block,
+            part_terminal=part_terminal,
         ),
-        grid=(n_tiles,),
-        in_specs=(
-            [pl.BlockSpec((block,), lambda i: (i,)) for _ in col_names]
-            + [pl.BlockSpec((block,), lambda i: (i,))]
-            + dict_specs
-            + scalar_specs
-        ),
-        out_specs=out_specs,
+        grid_spec=grid_spec,
         out_shape=out_shape,
-        scratch_shapes=scratch,
         interpret=interpret,
-    )(*cols_p, live_p, *dict_args, *scalar_args)
+    )(tile_part, *streams, *dict_args, *scalar_args)
     if out_spec[0] == "dict":
-        return out[0], out[1]
+        tk, tv = out
+        if part_terminal:
+            # unvisited partitions hold uninitialized memory: mask them out
+            vis = radix.visited
+            tk = jnp.where(vis[:, None], tk, dbase.EMPTY)
+            tv = jnp.where(vis[:, None, None], tv, 0.0)
+        return tk, tv
     return out[0][0]

@@ -41,33 +41,17 @@ def probe_slots(
     early termination: rounds stop as soon as every lane has hit or reached
     an EMPTY slot, so probes on low-occupancy tables finish in 1–2 rounds
     instead of always paying ``max_probes``.  Returns ``(slot [B] int32, -1
-    on miss; found [B] bool)``.  The ONE probe-loop definition — shared by
-    this kernel and ``kernels.fused_pipeline``."""
-    tk = table_keys
-    C = tk.shape[0]
-    B = queries.shape[0]
-    h0 = dbase.hash1(queries, C)
+    on miss; found [B] bool)``.  Delegates to the family's resident hook
+    (``dicts.ht_linear.resident_find``) — the ONE probe-loop definition,
+    shared with every consumer of the fused-pipeline kernel."""
+    from repro.dicts import ht_linear
 
-    def body(carry):
-        t, active, slot_found = carry
-        slot = (h0 + t) & (C - 1)
-        cur = jnp.take(tk, slot, axis=0)  # vector gather within VMEM
-        hit = active & (cur == queries)
-        miss = active & (cur == dbase.EMPTY)
-        slot_found = jnp.where(hit, slot, slot_found)
-        active = active & ~hit & ~miss
-        return t + 1, active, slot_found
-
-    def cond(carry):
-        t, active, _ = carry
-        return jnp.any(active) & (t < max_probes)
-
-    _, _, slot_found = jax.lax.while_loop(
-        cond,
-        body,
-        (jnp.int32(0), jnp.ones((B,), bool), jnp.full((B,), -1, jnp.int32)),
+    return ht_linear.resident_find(
+        (table_keys,),
+        queries,
+        capacity=table_keys.shape[0],
+        max_probes=max_probes,
     )
-    return slot_found, slot_found >= 0
 
 
 def gather_slots(

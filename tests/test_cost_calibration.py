@@ -1,0 +1,105 @@
+"""Calibrated Δ constants (DESIGN.md §8 satellite): the committed
+``CALIBRATED_OP_NS`` table must keep reproducing the committed measured
+sweep's per-op family rankings — the paper's installation-stage promise
+(profile once, then synthesis ranks structures like the hardware does),
+pinned as a drift guard: re-fitting after an engine change must re-commit
+both the constants AND the baseline sweep together."""
+import json
+import os
+
+import pytest
+
+from repro.core.cost import CALIBRATED_OP_NS, PRIOR_OP_NS, AnalyticCostModel
+
+BASELINE = os.path.join(
+    os.path.dirname(__file__), "..", "benchmarks", "baselines",
+    "BENCH_profile_dicts.json",
+)
+
+
+def _sweep():
+    with open(BASELINE) as f:
+        rec = json.load(f)
+    rows = []
+    for name, entry in rec["results"].items():
+        _, ds, op, ordered, size, n = name.split("/")
+        rows.append(
+            (
+                ds,
+                op,
+                ordered == "ordered",
+                int(size[1:]),
+                int(n[1:]),
+                float(entry["seconds"]),
+            )
+        )
+    return rows
+
+
+def _cells(rows):
+    cells = {}
+    for ds, op, ordered, size, n, sec in rows:
+        cells.setdefault((op, ordered, size, n), {})[ds] = sec
+    return cells
+
+
+def test_calibrated_table_covers_every_profiled_op():
+    keys = {
+        (ds, op) if ds.startswith("ht") else (ds, op, ordered)
+        for ds, op, ordered, *_ in _sweep()
+    }
+    assert keys <= set(CALIBRATED_OP_NS), keys - set(CALIBRATED_OP_NS)
+
+
+@pytest.mark.parametrize("op", ["insert", "lookup_hit", "lookup_miss"])
+def test_calibrated_rankings_match_measured(op):
+    """For every measured cell (op × ordered × size × n) and every family
+    pair separated by ≥1.5× in measurement, the calibrated model must order
+    the pair the same way, with ≥90% agreement per op (the fit achieved
+    98% overall; a drop below the bar means the constants have drifted from
+    the committed sweep and need re-fitting)."""
+    model = AnalyticCostModel(constants="calibrated")
+    agree = total = 0
+    for (o, ordered, size, n), per_ds in _cells(_sweep()).items():
+        if o != op:
+            continue
+        names = sorted(per_ds)
+        for i, a in enumerate(names):
+            for b in names[i + 1:]:
+                ma, mb = per_ds[a], per_ds[b]
+                if max(ma, mb) < 1.5 * min(ma, mb):
+                    continue
+                pa = model.op_cost(a, o, n, size, ordered)
+                pb = model.op_cost(b, o, n, size, ordered)
+                total += 1
+                agree += (ma < mb) == (pa < pb)
+    assert total > 20, "baseline sweep too sparse to rank"
+    assert agree / total >= 0.9, f"{op}: {agree}/{total} rankings match"
+
+
+def test_calibration_changes_the_story_the_priors_told():
+    """The measured engine disagrees with the hand-set priors where it
+    matters: a vectorized batch hash insert is orders of magnitude costlier
+    per op than the priors guessed, and an ordered (hinted) sort build
+    beats it — the flip that drives Algorithm 1 toward ``st_*<hinted>``
+    group-bys on sorted streams."""
+    cal = AnalyticCostModel(constants="calibrated")
+    pri = AnalyticCostModel(constants="prior")
+    n = size = 8192
+    # priors: hash insert ≈ 26 ns/op — calibration measured ~100× that
+    assert cal.op_cost("ht_linear", "insert", n, size, False) > 10 * pri.op_cost(
+        "ht_linear", "insert", n, size, False
+    )
+    # measured: ordered st build strictly beats the hash build it competes
+    # with at every profiled size
+    for s in (256, 4096, 65536):
+        assert cal.op_cost("st_blocked", "insert", s, s, True) < cal.op_cost(
+            "ht_linear", "insert", s, s, False
+        )
+
+
+def test_prior_table_unchanged_for_unit_test_stability():
+    """The default constructor still serves the hand-set priors — unit
+    tests that pin synthesis choices stay deterministic."""
+    assert AnalyticCostModel().table is PRIOR_OP_NS
+    assert AnalyticCostModel.calibrated().table is CALIBRATED_OP_NS

@@ -148,10 +148,10 @@ def _two_probe_sigma():
 
 def test_fuse_splits_region_over_vmem_budget():
     """An oversized probed dictionary (IA: ~30k distinct → 64k slots ≈ 512 KiB)
-    must not ride along: under a tight budget the region is SPLIT at the
-    probe boundary — the oversized probe materializes, the rest stays fused
-    — and under a budget too small for even the terminal accumulator the
-    whole chain stays materialized."""
+    must not ride along: with the radix mode disabled, a tight budget SPLITS
+    the region at the probe boundary — the oversized probe materializes, the
+    rest stays fused — and a budget too small for even the terminal
+    accumulator keeps the whole chain materialized."""
     plan = _two_probe_plan()
     sigma = _two_probe_sigma()
 
@@ -161,7 +161,10 @@ def test_fuse_splits_region_over_vmem_budget():
         "Scan", "HashProbe", "HashProbe", "GroupBy",
     ]
 
-    split = P.fuse(plan, sigma=sigma, fusion=FusionCostModel(vmem_budget=100_000))
+    split = P.fuse(
+        plan, sigma=sigma,
+        fusion=FusionCostModel(vmem_budget=100_000, max_partitions=1),
+    )
     kinds = [type(n).__name__ for n in split.nodes]
     assert kinds == [
         "Scan", "HashBuild", "Scan", "HashBuild",  # builds, unfused
@@ -172,8 +175,42 @@ def test_fuse_splits_region_over_vmem_budget():
     assert isinstance(tail, P.Pipeline) and tail.source == "%p1"
     assert [type(s).__name__ for s in tail.stages] == ["HashProbe", "GroupBy"]
 
-    none = P.fuse(plan, sigma=sigma, fusion=FusionCostModel(vmem_budget=1_000))
+    none = P.fuse(
+        plan, sigma=sigma,
+        fusion=FusionCostModel(vmem_budget=1_000, max_partitions=1),
+    )
     assert not any(isinstance(n, P.Pipeline) for n in none.nodes)
+
+
+def test_fuse_partitioned_beats_split_when_priced():
+    """A slab over the kernel residency bound marks the region
+    radix-partitioned — the split alternative would probe it out of
+    residency, paying HBM random-access latency per probe (the
+    ``probe_random_bytes`` credit) — and ``describe`` renders the
+    decision.  A region over the BYTE budget only, with every slab
+    individually resident, earns no such credit: the routing pass cannot
+    pay for itself there, so it still splits exactly like the
+    radix-disabled planner (asserted against it)."""
+    plan = _two_probe_plan()
+    sigma = _two_probe_sigma()
+    # IA's 64k-slot slab fits the slot bound but not a 100 KB byte budget:
+    # no random-access credit, the split keeps its elisions -> split wins
+    byte_over = P.fuse(
+        plan, sigma=sigma, fusion=FusionCostModel(vmem_budget=100_000)
+    )
+    disabled = P.fuse(
+        plan, sigma=sigma,
+        fusion=FusionCostModel(vmem_budget=100_000, max_partitions=1),
+    )
+    assert byte_over.nodes == disabled.nodes
+    # a slab bound below IA's capacity: the split alternative would probe
+    # IA out of residency -> the partitioned form prices ahead
+    slab = P.fuse(
+        plan, sigma=sigma, fusion=FusionCostModel(kernel_slots=1 << 14)
+    )
+    pipe = next(n for n in slab.nodes if isinstance(n, P.Pipeline))
+    assert pipe.partitions >= 4 and pipe.part_sym == "IA"
+    assert f"radix P={pipe.partitions} on IA" in slab.describe()
 
 
 def test_split_region_executes_bitwise_identically():

@@ -164,7 +164,7 @@ def test_fused_pipeline_kernel_groupby(n, block, rng):
     tk, tv = fp.fused_pipeline(
         {"q": jnp.asarray(qs), "g": jnp.asarray(grp), "w": jnp.asarray(w)},
         jnp.asarray(live),
-        {"D": (t.keys, t.vals, iv)},
+        {"D": fp.resident_bundle("ht_linear", t, t.vals, iv)},
         {"thr": jnp.zeros((1,), jnp.float32)},
         row_fn,
         ("dict", 256, 1),
@@ -216,6 +216,7 @@ def test_fused_pipeline_int_payload_exact():
     C = 256
     tk = jnp.full((C,), dbase.EMPTY, jnp.int32).at[dbase.hash1(
         jnp.asarray([5], jnp.int32), C)[0]].set(5)
+    table = dbase.HashTable(tk, jnp.zeros((C, 1), jnp.float32), jnp.int32(1))
     fv = jnp.zeros((C, 0), jnp.float32)
     iv = jnp.full((C, 1), big, jnp.int32)
     qs = jnp.full((600,), 5, jnp.int32)
@@ -226,7 +227,8 @@ def test_fused_pipeline_int_payload_exact():
         return pi[:, 0], jnp.ones((600, 1), jnp.float32), lv & pf
 
     out_k, out_v = fp.fused_pipeline(
-        {"q": qs}, live, {"D": (tk, fv, iv)}, {}, row_fn,
+        {"q": qs}, live,
+        {"D": fp.resident_bundle("ht_linear", table, fv, iv)}, {}, row_fn,
         ("dict", 256, 1), block=600,
     )
     keys = np.asarray(out_k)

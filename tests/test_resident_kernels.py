@@ -1,0 +1,293 @@
+"""Kernel-complete dictionaries (DESIGN.md §8): every registered family's
+resident probe — running through the REAL fused Pallas kernel in interpret
+mode — must match its XLA ``dicts.*.lookup`` on adversarial keys:
+duplicates (aggregated at build), misses, negative keys, sentinel-adjacent
+values, payloads above 2^24 (not float32-representable), and capacity-edge
+loads (the 2×-slack rule's maximum occupancy).  The radix-partitioned form
+must match too, for every partitionable family."""
+import os
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.dicts import base as dbase
+from repro.dicts import registry
+from repro.kernels import fused_pipeline as fp
+
+FAMILIES = sorted(registry.names())
+
+
+@pytest.fixture(autouse=True)
+def _force_pallas(monkeypatch):
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+
+
+def _adversarial(cap: int, rng):
+    """(build keys, build vals, probe keys): duplicate-heavy build set at
+    the capacity-edge distinct count (cap//2 — the 2×-slack maximum), with
+    negative keys, and probes mixing hits, misses, and near-sentinel keys."""
+    n_distinct = cap // 2
+    uniq = np.concatenate(
+        [
+            np.asarray([-(2**30), -7, 0, 1, 2**31 - 2], np.int32),
+            rng.choice(2**30, size=n_distinct - 5, replace=False).astype(np.int32),
+        ]
+    )
+    ks = np.concatenate([uniq, rng.choice(uniq, size=3 * len(uniq))])
+    vs = rng.normal(size=(len(ks), 2)).astype(np.float32)
+    misses = rng.integers(2**30, 2**31 - 2, size=len(uniq)).astype(np.int32)
+    qs = np.concatenate([uniq, misses, np.asarray([-1, 2**31 - 2], np.int32)])
+    return jnp.asarray(ks), jnp.asarray(vs), jnp.asarray(qs)
+
+
+def _kernel_probe(ds, table, fvals, ivals, qs, n_parts=0):
+    """Probe ``qs`` through the actual fused kernel (interpret mode): each
+    probe row aggregates into its own group, so the output dictionary holds
+    the per-row probe results exactly."""
+    mod = registry.get(ds)
+    n = qs.shape[0]
+    out_cap = dbase.next_pow2(2 * n)
+    if n_parts:
+        bundle = fp.partitioned_bundle(ds, table, fvals, ivals, n_parts)
+    else:
+        bundle = fp.resident_bundle(ds, table, fvals, ivals)
+
+    nf, ni = fvals.shape[1], ivals.shape[1]
+
+    def row_fn(cols, lv, lookups, scalars):
+        pf_, pi_, found = lookups["D"](cols["q"])
+        # zero-width slabs are lane-padded inside the kernel: slice back
+        vals = jnp.concatenate(
+            [
+                pf_[:, :nf],
+                pi_[:, :ni].astype(jnp.float32),
+                found[:, None].astype(jnp.float32),
+            ],
+            axis=1,
+        )
+        return cols["rid"], vals, lv
+
+    cols = {"q": qs, "rid": jnp.arange(n, dtype=jnp.int32)}
+    live = jnp.ones((n,), bool)
+    radix = None
+    if n_parts:
+        part = mod.partition_assign(table, qs, n_parts)
+        cols, live, radix = fp.radix_route(cols, live, part, n_parts, 256)
+    nv = fvals.shape[1] + ivals.shape[1] + 1
+    tk, tv = fp.fused_pipeline(
+        cols, live, {"D": bundle}, {}, row_fn, ("dict", out_cap, nv),
+        radix=radix, block=256,
+    )
+    tk, tv = np.asarray(tk), np.asarray(tv)
+    out = np.zeros((n, nv), np.float32)
+    for i, k in enumerate(tk):
+        if k != dbase.EMPTY:
+            out[int(k)] = tv[i]
+    return out
+
+
+@pytest.mark.parametrize("ds", FAMILIES)
+def test_resident_probe_matches_lookup_adversarial(ds, rng):
+    """Full-resident kernel probe == XLA lookup, bit-for-bit on the gathered
+    float lanes and the found mask."""
+    mod = registry.get(ds)
+    cap = 1024
+    ks, vs, qs = _adversarial(cap, rng)
+    t = mod.build(ks, vs, cap)
+    ref_v, ref_f = mod.lookup(t, qs)
+    got = _kernel_probe(ds, t, t.vals, jnp.zeros((cap, 0), jnp.int32), qs)
+    np.testing.assert_array_equal(got[:, -1].astype(bool), np.asarray(ref_f), ds)
+    np.testing.assert_array_equal(got[:, :2], np.asarray(ref_v), ds)
+
+
+@pytest.mark.parametrize("ds", FAMILIES)
+def test_resident_probe_int_payload_exact(ds, rng):
+    """Integer payloads above 2^24 ride the int32 slab and survive exactly —
+    proven by using the gathered int as the terminal's group KEY (int32 all
+    the way; a float32 round-trip would shift every value by +1)."""
+    mod = registry.get(ds)
+    cap = 512
+    uniq = np.unique(rng.integers(0, 10**6, 200)).astype(np.int32)
+    big = (1 << 25) + 3  # not float32-representable
+    t = mod.build(
+        jnp.asarray(uniq), jnp.zeros((len(uniq), 1), jnp.float32), cap
+    )
+    tks, _, valid = mod.items(t)
+    ivals = jnp.where(
+        valid[:, None], jnp.asarray(tks)[:, None] + jnp.int32(big), 0
+    ).astype(jnp.int32)
+    qs = jnp.asarray(uniq)  # all hits
+    bundle = fp.resident_bundle(ds, t, jnp.zeros((cap, 0), jnp.float32), ivals)
+
+    def row_fn(cols, lv, lookups, scalars):
+        _, pi_, found = lookups["D"](cols["q"])
+        ones = jnp.ones((cols["q"].shape[0], 1), jnp.float32)
+        return pi_[:, 0], ones, lv & found
+
+    tk, _ = fp.fused_pipeline(
+        {"q": qs},
+        jnp.ones((qs.shape[0],), bool),
+        {"D": bundle},
+        {},
+        row_fn,
+        ("dict", dbase.next_pow2(2 * len(uniq)), 1),
+        block=256,
+    )
+    got = sorted(int(k) for k in np.asarray(tk) if k != dbase.EMPTY)
+    assert got == sorted(int(u) + big for u in uniq), ds
+
+
+@pytest.mark.parametrize(
+    "ds", [d for d in FAMILIES if registry.partitionable(d)]
+)
+@pytest.mark.parametrize("n_parts", [2, 8])
+def test_radix_partitioned_probe_matches_lookup(ds, n_parts, rng):
+    """The radix-partitioned kernel probe (stacked slab blocks + routed fact
+    tiles + prefetched per-tile partition ids) == the XLA lookup."""
+    mod = registry.get(ds)
+    cap = 2048
+    ks, vs, qs = _adversarial(cap, rng)
+    t = mod.build(ks, vs, cap)
+    ref_v, ref_f = mod.lookup(t, qs)
+    got = _kernel_probe(
+        ds, t, t.vals, jnp.zeros((cap, 0), jnp.int32), qs, n_parts=n_parts
+    )
+    np.testing.assert_array_equal(got[:, -1].astype(bool), np.asarray(ref_f), ds)
+    np.testing.assert_array_equal(got[:, :2], np.asarray(ref_v), ds)
+
+
+@pytest.mark.parametrize("ds", FAMILIES)
+def test_engine_kernel_path_any_family(ds, rng):
+    """Engine-level dispatch: a GroupJoin region whose build AND terminal
+    use ``ds`` runs the fused kernel (registry capability check, not a name
+    compare) and matches the materialized executor."""
+    from repro.core import llql as L
+    from repro.core import plan as P
+    from repro.core.cost import DictChoice
+    from repro.data.table import collect_stats, from_numpy
+    from repro.exec import engine as E
+
+    def key(var, col):
+        return L.FieldAccess(L.FieldAccess(L.Var(var), "key"), col)
+
+    R = from_numpy(
+        {
+            "a": np.arange(3000, dtype=np.int32),
+            "m": rng.normal(size=3000).astype(np.float32),
+        }
+    )
+    S = from_numpy(
+        {
+            "a": rng.integers(0, 3600, 5000).astype(np.int32),
+            "w": rng.normal(size=5000).astype(np.float32),
+        }
+    )
+    db = {"R": R, "S": S}
+    sigma = collect_stats(db)
+    nodes = (
+        P.Scan("%r", source="R", var="r"),
+        P.GroupBy(
+            "G", source="%r", keyexpr=key("r", "a"),
+            values=(("t", key("r", "m")),), choice=DictChoice(ds),
+        ),
+        P.Scan("%s", source="S", var="s"),
+        P.GroupJoin(
+            "Agg", source="%s", build="G", keyexpr=key("s", "a"),
+            f_expr=key("s", "w"), choice=DictChoice(ds),
+        ),
+    )
+    plan = P.Plan(nodes, "Agg")
+    fused = P.fuse(plan, sigma=sigma)
+    assert any(isinstance(n, P.Pipeline) for n in fused.nodes)
+    E.REGION_MODES.clear()
+    got = E.execute_plan(fused, db, sigma=sigma).items_np()
+    assert E.REGION_MODES.get("Agg") == "kernel-resident", E.REGION_MODES
+    ref = E.execute_plan(plan, db, sigma=sigma).items_np()
+    assert set(got) == set(ref)
+    for k in ref:
+        np.testing.assert_allclose(got[k], ref[k], rtol=2e-3, atol=2e-3)
+
+
+def test_engine_radix_path_oversized_dict(rng):
+    """A dictionary over the kernel's residency bound executes through the
+    radix-partitioned fused path end-to-end (plan marks it, engine routes
+    it) and matches the materialized executor — and a third-party family
+    registered WITHOUT resident hooks falls back to the XLA region path
+    explicitly."""
+    import types
+
+    from repro.core import llql as L
+    from repro.core import plan as P
+    from repro.core.cost import DictChoice
+    from repro.data.table import collect_stats, from_numpy
+    from repro.dicts import ht_linear
+    from repro.exec import engine as E
+
+    def key(var, col):
+        return L.FieldAccess(L.FieldAccess(L.Var(var), "key"), col)
+
+    NR = 50_000  # 50k distinct → 131072 slots > the 64k residency bound
+    R = from_numpy(
+        {
+            "a": np.arange(NR, dtype=np.int32),
+            "m": rng.normal(size=NR).astype(np.float32),
+        }
+    )
+    S = from_numpy(
+        {
+            "a": rng.integers(0, NR + 5000, 20_000).astype(np.int32),
+            "w": rng.normal(size=20_000).astype(np.float32),
+        }
+    )
+    db = {"R": R, "S": S}
+    sigma = collect_stats(db)
+
+    def mk(ds):
+        return P.Plan(
+            (
+                P.Scan("%r", source="R", var="r"),
+                P.GroupBy(
+                    "G", source="%r", keyexpr=key("r", "a"),
+                    values=(("t", key("r", "m")),), choice=DictChoice(ds),
+                ),
+                P.Scan("%s", source="S", var="s"),
+                P.GroupJoin(
+                    "Agg", source="%s", build="G", keyexpr=key("s", "a"),
+                    f_expr=key("s", "w"), choice=DictChoice(),
+                ),
+            ),
+            "Agg",
+        )
+
+    plan = mk("ht_linear")
+    fused = P.fuse(plan, sigma=sigma)
+    pipe = next(n for n in fused.nodes if isinstance(n, P.Pipeline))
+    assert pipe.partitions >= 2 and pipe.part_sym == "G"
+    E.REGION_MODES.clear()
+    got = E.execute_plan(fused, db, sigma=sigma).items_np()
+    assert E.REGION_MODES.get("Agg") == "kernel-radix"
+    ref = E.execute_plan(plan, db, sigma=sigma).items_np()
+    assert set(got) == set(ref)
+    for k in ref:
+        np.testing.assert_allclose(got[k], ref[k], rtol=2e-3, atol=2e-3)
+
+    # third-party family without resident hooks: registered, synthesizable,
+    # but the kernel must decline and the XLA path must still be exact
+    stub = types.ModuleType("ht_thirdparty")
+    for attr in ("build", "lookup", "update_add", "items", "size"):
+        setattr(stub, attr, getattr(ht_linear, attr))
+    stub.FAMILY = "hash"
+    stub.SUPPORTS_HINTS = False
+    registry.register("ht_thirdparty", stub)
+    try:
+        assert not registry.resident("ht_thirdparty")
+        plan3 = mk("ht_thirdparty")
+        fused3 = P.fuse(plan3, sigma=sigma)
+        E.REGION_MODES.clear()
+        got3 = E.execute_plan(fused3, db, sigma=sigma).items_np()
+        assert E.REGION_MODES.get("Agg", "xla").startswith("xla")
+        assert set(got3) == set(ref)
+    finally:
+        registry._REGISTRY.pop("ht_thirdparty", None)
