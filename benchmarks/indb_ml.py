@@ -4,14 +4,19 @@ Synthetic Favorita/Retailer-shaped data: a fact table physically ordered by
 the join key (the paper's "relations sorted by join attributes") against a
 keyed dimension table.  Compares:
 
-* naive          — materialize the join, then aggregate (Fig. 7a);
-* LMFAO-policy   — fixed sort-based factorized plan, always-hinted (what a
-                   specialized engine hard-codes);
-* fine-tuned     — factorized with the cost-model's dictionary choice for
-                   Ragg and hinted/non-hinted probes (Fig. 7d + Alg. 1).
+* naive           — materialize the join, then aggregate (Fig. 7a);
+* LMFAO-policy    — fixed sort-based factorized plan, always-hinted (what a
+                    specialized engine hard-codes);
+* fine-tuned      — factorized with the cost-model's dictionary choice for
+                    Ragg and hinted/non-hinted probes (Fig. 7d + Alg. 1);
+* semiring shared — every normal-equation term (covariance AND right-hand
+                    side) as a sum-of-product ``SemiringAgg`` program, all
+                    merged into ONE shared-scan batch (DESIGN.md §9): one
+                    pass over S, one over R, five accumulator lanes.
 
 Also trains the actual linear regression from the covariance terms (normal
-equations) to close the in-DB-ML loop.
+equations) to close the in-DB-ML loop — on the semiring path both sides of
+A·θ = b come out of the same shared batch.
 """
 from __future__ import annotations
 
@@ -20,11 +25,26 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import operators as O
+from repro.core import plan as P
 from repro.core.cost import AnalyticCostModel
+from repro.core.lower import compile as compile_plan
 from repro.core.synthesis import synthesize
 from repro.data.table import collect_stats, from_numpy
 from repro.exec import engine as E
 from .common import bench, emit
+
+
+def semiring_plans(sigma, delta, with_b: bool = True):
+    """Fused per-term semiring plans + the merged SharedPlan."""
+    terms = O.covar_semiring_terms(with_b=with_b)
+    plans = [
+        P.fuse(
+            compile_plan(prog, synthesize(prog, sigma, delta).choices),
+            sigma=sigma,
+        )
+        for _, prog in terms
+    ]
+    return [n for n, _ in terms], plans, P.merge_shared_scans(plans, sigma=sigma)
 
 
 def _dataset(n_fact: int, n_dim: int, seed: int):
@@ -82,18 +102,31 @@ def run(repeats: int = 3, seed: int = 0):
             f"ms={sec_tuned*1e3:.2f},choice={ch},vs_lmfao={sec_tuned/sec_lmfao:.2f}x",
         )
 
-        # close the loop: 1-feature-per-side linear regression via normal eqs
-        cov = E.covar_factorized(S, R, ragg_ds=ch.ds, sorted_probes=ch.hinted)
-        A = jnp.array([[cov["i_i"], cov["i_c"]], [cov["i_c"], cov["c_c"]]])
-        # synthetic target: u ~ 0.7 i + noise → solve A θ = b
-        idx = E.build_index("ht_linear", R.col("s"), E.capacity_for("ht_linear", R.nrows))
-        joined = E.fk_join(S, S.col("s"), R, idx, take=["c"], prefix="r_")
-        b = jnp.array(
-            [
-                E.scalar_aggregate(joined, joined.col("i") * joined.col("u"))[0],
-                E.scalar_aggregate(joined, joined.col("r_c") * joined.col("u"))[0],
-            ]
+        # semiring path: all five normal-equation terms as one shared-scan
+        # batch vs the same five per-term plans executed one at a time
+        db = {"S": S, "R": R}
+        names, plans, sp = semiring_plans(sigma, delta)
+        shared_ex = E.cached_shared_executable(sp, db, sigma=sigma)
+        empty = [{} for _ in plans]
+        sec_shared = bench(lambda: shared_ex(db, empty), repeats=repeats)
+        per_exs = [E.cached_executable(p, db, sigma=sigma) for p in plans]
+        sec_per = bench(
+            lambda: [ex(db, {}) for ex in per_exs], repeats=repeats
         )
+        emit(
+            f"fig12_{name}/semiring_shared",
+            sec_shared * 1e6,
+            f"ms={sec_shared*1e3:.2f},regions="
+            + "+".join(f"{rg.source}x{len(rg.branches)}" for rg in sp.regions)
+            + f",vs_per_term={sec_per/sec_shared:.2f}x",
+        )
+
+        # close the loop: 1-feature-per-side linear regression via normal
+        # eqs — A and b both out of the one shared semiring batch
+        outs = shared_ex(db, empty)
+        cov = {n: float(out[n]) for n, out in zip(names, outs)}
+        A = jnp.array([[cov["i_i"], cov["i_c"]], [cov["i_c"], cov["c_c"]]])
+        b = jnp.array([cov["b_i"], cov["b_c"]])
         theta = jnp.linalg.solve(A + 1e-3 * jnp.eye(2), b)
         emit(
             f"fig12_{name}/linreg_theta",

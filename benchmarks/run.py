@@ -19,7 +19,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument(
         "--only", default=None,
-        help="comma list: micro,costmodel,groupby,tpch,indbml,moe",
+        help="comma list: micro,costmodel,groupby,tpch,indbml,sharedscan,moe",
     )
     ap.add_argument(
         "--out", default=None,
@@ -60,6 +60,13 @@ def main() -> None:
         from . import indb_ml
 
         indb_ml.run()
+    if want("sharedscan"):
+        from . import shared_scan_bench
+
+        shared_scan_bench.run(
+            scale=0.01 if args.full else 0.002,
+            repeats=7 if args.full else 3,
+        )
     if want("moe"):
         from . import moe_dispatch_bench
 

@@ -10,7 +10,11 @@
 6. execute the lowered vectorized plan and print the explain output;
 7. bind-and-rerun: the query's date knob is a free ``?date`` Param, so a
    fresh binding reuses the already-jitted executable — zero synthesis,
-   zero retracing (DESIGN.md §6).
+   zero retracing (DESIGN.md §6);
+8. shared scan: batch two queries through ONE pass over lineitem —
+   ``plan.merge_shared_scans`` fuses their scan-rooted regions, one
+   jitted executable runs the batch and demuxes per-query results,
+   bitwise-identical to running them separately (DESIGN.md §9).
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -74,6 +78,27 @@ def main() -> None:
         groups = len(ex(db, {"date": date}).items_np())
         print(f"   ?date={date}: {groups} groups (traces={ex.trace_count})")
     print(f"   executable cache: {E.exec_cache_stats()}")
+
+    print("\n== shared scan: q1 + q18 batched through one lineitem pass ...")
+    from repro.core import plan as P
+
+    pair = ("q1", "q18")
+    plans = [
+        P.fuse(compile_plan(QUERIES[name].llql(), {}), sigma=sigma)
+        for name in pair
+    ]
+    sp = P.merge_shared_scans(plans, sigma=sigma)
+    for line in sp.describe().splitlines():
+        print("   " + line)
+    shared_ex = E.cached_shared_executable(sp, db, sigma=sigma)
+    outs = shared_ex(db, [QUERIES[name].defaults for name in pair])
+    for name, out in zip(pair, outs):
+        got = out.items_np()
+        solo = QUERIES[name].run(db, {})
+        same = set(got) == set(solo) and all(
+            bool((got[k] == solo[k]).all()) for k in got
+        )
+        print(f"   {name}: {len(got)} groups, matches per-query run: {same}")
 
 
 if __name__ == "__main__":

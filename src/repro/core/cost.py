@@ -337,6 +337,20 @@ class FusionCostModel:
         )
         return (float(saved_bytes) - route) / self.hbm_bytes_per_sec
 
+    def delta_share(self, saved_bytes: float, resident_bytes: float) -> float:
+        """Seconds saved by merging fused regions from *different* plans
+        into one shared-scan pass (``plan.merge_shared_scans``):
+        ``saved_bytes`` is the fact-stream traffic the batch no longer
+        re-reads (each merged region streams the scan once instead of once
+        per query), ``resident_bytes`` the merged region's co-resident
+        working set — every branch's dictionaries, gather payloads, and
+        accumulator slabs now live in VMEM at the same time.  Same budget
+        rule as Δ_fuse: an over-budget merge is ``-inf`` and the planner
+        drops branches until the rest fit (or declines the merge)."""
+        if resident_bytes > self.vmem_budget:
+            return float("-inf")
+        return float(saved_bytes) / self.hbm_bytes_per_sec
+
 
 @dataclass
 class DictMeta:

@@ -85,6 +85,50 @@ class Rec:
         return "{" + ", ".join(f"{a}={v}" for a, v in self.fields) + "}"
 
 
+@dataclass(frozen=True)
+class SRVal:
+    """A semiring lane value (``L.SemiringAgg``): a scalar that combines
+    under its own monoid instead of ``+``.  Multiplicity scaling applies to
+    additive lanes only — ``min``/``max`` over a bag ignore multiplicity."""
+
+    op: str  # combine monoid: "sum" | "min" | "max"
+    value: Any
+
+    def __add__(self, other: Any) -> "SRVal":
+        if isinstance(other, Missing):
+            return self
+        if isinstance(other, SRVal):
+            assert other.op == self.op, f"lane combine mismatch {self.op}/{other.op}"
+            o = other.value
+        else:
+            # a ref cell's pristine zero record: identity for every monoid
+            if other == 0:
+                return self
+            o = other
+        if self.op == "min":
+            return SRVal(self.op, min(self.value, o))
+        if self.op == "max":
+            return SRVal(self.op, max(self.value, o))
+        return SRVal(self.op, self.value + o)
+
+    __radd__ = __add__
+
+    def __mul__(self, s: Any) -> "SRVal":
+        if self.op == "sum":
+            return SRVal(self.op, self.value * s)
+        return self
+
+    __rmul__ = __mul__
+
+    def __repr__(self) -> str:
+        return f"{self.op}:{self.value}"
+
+
+def sr_value(v: Any) -> Any:
+    """Unwrap a semiring lane value to its plain scalar."""
+    return v.value if isinstance(v, SRVal) else v
+
+
 @dataclass
 class OpStats:
     """Per-dictionary operation counters — ground truth for the cost model."""
@@ -294,7 +338,12 @@ class Interp:
             if isinstance(r, RefCell):
                 r = r.value
             assert isinstance(r, Rec), f"field access on non-record {r!r}"
-            return r.get(e.name)
+            return sr_value(r.get(e.name))
+        if isinstance(e, L.SemiringAgg):
+            v = self._eval(e.contribution(), env)
+            if isinstance(v, Missing):
+                return MISSING
+            return SRVal(e.combine, v)
         if isinstance(e, L.BinOp):
             a = self._eval(e.lhs, env)
             b = self._eval(e.rhs, env)

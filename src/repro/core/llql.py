@@ -322,6 +322,67 @@ class HintedLookup(Expr):
     keyexpr: Expr
 
 
+# Semiring aggregate lanes (arXiv 2103.06376): LLQL dictionaries are semiring
+# dictionaries — the value record of an aggregation dictionary (or a scalar
+# ref record) is a product of semiring lanes, each combining row
+# contributions under its own monoid.  ``sum``/``count``/``sum_product``
+# combine additively (the numeric semiring the engine always had);
+# ``min``/``max`` combine under the tropical semirings.  A lane's
+# *contribution* is the per-row expression fed to the combine.
+
+SEMIRING_OPS = ("sum", "count", "min", "max", "sum_product")
+
+# lane combine monoid per semiring op (what the dictionary build applies)
+SEMIRING_COMBINE = {
+    "sum": "sum",
+    "count": "sum",
+    "sum_product": "sum",
+    "min": "min",
+    "max": "max",
+}
+
+
+@dataclass(frozen=True)
+class SemiringAgg(Expr):
+    """One semiring aggregate lane: ``op`` over a ``payload`` vector.
+
+    Used as a field value inside the ``RecordCtor`` of a ``DictUpdate`` /
+    ``RefAdd`` — the surface form of the paper's aggregation dictionaries,
+    generalized beyond sums.  ``count`` takes no payload; ``sum``/``min``/
+    ``max`` take one expression; ``sum_product`` multiplies its whole
+    payload vector per row (the in-DB ML covariance entries)."""
+
+    op: str
+    payload: Tuple[Expr, ...] = ()
+
+    def __post_init__(self) -> None:
+        if self.op not in SEMIRING_OPS:
+            raise ValueError(f"unknown semiring op {self.op!r}")
+        if self.op == "count":
+            if self.payload:
+                raise ValueError("count takes no payload")
+        elif not self.payload:
+            raise ValueError(f"{self.op} needs a payload")
+        elif self.op != "sum_product" and len(self.payload) != 1:
+            raise ValueError(f"{self.op} takes exactly one payload expression")
+
+    @property
+    def combine(self) -> str:
+        """The lane's combine monoid: "sum" | "min" | "max"."""
+        return SEMIRING_COMBINE[self.op]
+
+    def contribution(self) -> Expr:
+        """The per-row contribution expression this lane feeds its combine."""
+        if self.op == "count":
+            return Const(1.0, DOUBLE)
+        if self.op == "sum_product":
+            out = self.payload[0]
+            for x in self.payload[1:]:
+                out = BinOp("*", out, x)
+            return out
+        return self.payload[0]
+
+
 # A free relation/dictionary input to the program (a named table).
 @dataclass(frozen=True)
 class Input(Expr):
@@ -360,6 +421,11 @@ def rewrite(e: Expr, fn) -> Expr:
                 nt = tuple(
                     (a, go(x)) if isinstance(x, Expr) else (a, x) for a, x in v
                 )
+                if nt != v:
+                    reps[f.name] = nt
+            elif isinstance(v, tuple) and v and isinstance(v[0], Expr):
+                # plain tuple of Exprs (SemiringAgg.payload)
+                nt = tuple(go(x) if isinstance(x, Expr) else x for x in v)
                 if nt != v:
                     reps[f.name] = nt
         if reps:
@@ -490,6 +556,9 @@ def pretty(e: Expr, indent: int = 0) -> str:
         return f"{p(e.dict)}<{p(e.hint)}>({p(e.keyexpr)}) += {p(e.value)}"
     if isinstance(e, HintedLookup):
         return f"{p(e.dict)}<{p(e.hint)}>({p(e.keyexpr)})"
+    if isinstance(e, SemiringAgg):
+        inner = ", ".join(p(x) for x in e.payload)
+        return f"{e.op}({inner})"
     raise TypeError(f"unknown node {type(e)}")  # pragma: no cover
 
 

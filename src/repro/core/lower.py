@@ -245,26 +245,30 @@ def compile(
                 and isinstance(inner.ref, L.Var)
                 and isinstance(lk.dict, L.Var)
             ):
+                fields, ops = _record_lanes(tuple(inner.value.fields))
                 emit(
                     P.Reduce(
                         inner.ref.name,
                         source=frame,
-                        fields=tuple(inner.value.fields),
+                        fields=fields,
                         lookup_sym=lk.dict.name,
                         lookup_key=resolve(lk.keyexpr),
                         lookup_var=body.name,
+                        ops=ops,
                     )
                 )
                 return
             raise _Unsupported("lookup-let form")
         if isinstance(body, L.RefAdd) and isinstance(body.ref, L.Var):
             val = resolve(body.value)
-            fields = (
-                tuple(val.fields)
-                if isinstance(val, L.RecordCtor)
-                else (("_0", val),)
-            )
-            emit(P.Reduce(body.ref.name, source=frame, fields=fields))
+            if isinstance(val, L.RecordCtor):
+                fields, ops = _record_lanes(tuple(val.fields))
+            elif isinstance(val, L.SemiringAgg):
+                fields = (("_0", val.contribution()),)
+                ops = _norm_ops((val.combine,))
+            else:
+                fields, ops = (("_0", val),), ()
+            emit(P.Reduce(body.ref.name, source=frame, fields=fields, ops=ops))
             return
         raise _Unsupported(f"loop body {type(body).__name__}")
 
@@ -295,14 +299,16 @@ def compile(
                 )
             )
         else:
+            lanes, ops = _value_lanes(val)
             emit(
                 P.GroupBy(
                     sym,
                     source=frame,
                     keyexpr=key,
-                    values=_value_fields(val),
+                    values=lanes,
                     choice=choice_of(sym),
                     hinted=hinted,
+                    ops=ops,
                 )
             )
 
@@ -340,14 +346,16 @@ def compile(
                 # record-keyed join output: a relation downstream loops scan
                 emit(P.Project(osym, source=probe, fields=tuple(okey.fields)))
             else:
+                lanes, ops = _value_lanes(oval)
                 emit(
                     P.GroupBy(
                         osym,
                         source=probe,
                         keyexpr=okey,
-                        values=_value_fields(oval),
+                        values=lanes,
                         choice=choice_of(osym),
                         hinted=isinstance(inner, L.HintedUpdate),
+                        ops=ops,
                     )
                 )
             return
@@ -362,19 +370,66 @@ def compile(
     return P.Plan(tuple(nodes), result[0], choice_items, plan_params)
 
 
-def _value_fields(val: L.Expr) -> Tuple[Tuple[str, L.Expr], ...]:
-    """Aggregate lanes of a dictionary value.  ``record * m`` (the Fig. 6c
-    ``aggfn(r) * r.val`` shape with a record aggregate) distributes the
-    multiplicity into each lane."""
+def _lane_contrib(fx: L.Expr) -> L.Expr:
+    """A record field's per-row contribution: SemiringAgg lanes contribute
+    their payload expression, plain fields contribute themselves."""
+    return fx.contribution() if isinstance(fx, L.SemiringAgg) else fx
+
+
+def _lane_combine(fx: L.Expr) -> str:
+    return fx.combine if isinstance(fx, L.SemiringAgg) else "sum"
+
+
+def _norm_ops(ops: Tuple[str, ...]) -> Tuple[str, ...]:
+    """All-sum lanes normalize to the empty tuple — the legacy encoding, so
+    sum-only plans keep their structure (fingerprints, describe goldens)."""
+    return () if all(o == "sum" for o in ops) else ops
+
+
+def _value_lanes(
+    val: L.Expr,
+) -> Tuple[Tuple[Tuple[str, L.Expr], ...], Tuple[str, ...]]:
+    """Aggregate lanes + per-lane combine ops of a dictionary value.
+    ``record * m`` (the Fig. 6c ``aggfn(r) * r.val`` shape with a record
+    aggregate) distributes the multiplicity into each *additive* lane —
+    ``min``/``max`` lanes ignore bag multiplicity."""
     if isinstance(val, L.RecordCtor):
-        return tuple(val.fields)
+        lanes = tuple((a, _lane_contrib(fx)) for a, fx in val.fields)
+        ops = _norm_ops(tuple(_lane_combine(fx) for _, fx in val.fields))
+        return lanes, ops
     if isinstance(val, L.BinOp) and val.op == "*":
         for rec, mult in ((val.lhs, val.rhs), (val.rhs, val.lhs)):
             if isinstance(rec, L.RecordCtor):
-                return tuple(
-                    (a, L.BinOp("*", fx, mult)) for a, fx in rec.fields
-                )
-    return (("_0", val),)
+                lanes = []
+                ops = []
+                for a, fx in rec.fields:
+                    op = _lane_combine(fx)
+                    cx = _lane_contrib(fx)
+                    if op == "sum":
+                        cx = L.BinOp("*", cx, mult)
+                    lanes.append((a, cx))
+                    ops.append(op)
+                return tuple(lanes), _norm_ops(tuple(ops))
+    if isinstance(val, L.SemiringAgg):
+        return (("_0", val.contribution()),), _norm_ops((val.combine,))
+    return (("_0", val),), ()
+
+
+def _value_fields(val: L.Expr) -> Tuple[Tuple[str, L.Expr], ...]:
+    """Aggregate lanes of a dictionary value (compat view of
+    ``_value_lanes`` without the combine ops)."""
+    return _value_lanes(val)[0]
+
+
+def _record_lanes(
+    fields: Tuple[Tuple[str, L.Expr], ...],
+) -> Tuple[Tuple[Tuple[str, L.Expr], ...], Tuple[str, ...]]:
+    """Scalar-aggregate record lanes (Reduce): contributions + combine ops.
+    No multiplicity distribution here — the executor's ``scalar_aggregate``
+    applies bag multiplicity to additive lanes itself."""
+    lanes = tuple((a, _lane_contrib(fx)) for a, fx in fields)
+    ops = _norm_ops(tuple(_lane_combine(fx) for _, fx in fields))
+    return lanes, ops
 
 
 def _find_lookup(e: L.Expr):

@@ -573,3 +573,79 @@ def covar_factorized(ragg_ds: Optional[str] = None, hinted: bool = False) -> Exp
     if hinted:
         body = let("it", DictIter(Var("Ragg")), body)
     return let("Ragg", DictNew(ragg_ds), seq(ragg_loop, body))
+
+
+def covar_semiring_terms(
+    ragg_ds: Optional[str] = None, with_b: bool = False
+) -> List[Tuple[str, Expr]]:
+    """§3.8 on the semiring path: the covariance matrix as independent
+    sum-of-product programs whose S (and R) scans merge into ONE shared
+    pass (``plan.merge_shared_scans`` — DESIGN.md §9).
+
+    Each normal-equation term is its own tiny LLQL program ending in a
+    scalar ``SemiringAgg("sum_product", ...)`` reduce:
+
+        i_i = Σ_S i·i·s.val
+        i_c = Σ_S i·Ragg[s].c·s.val       Ragg[s].c   = Σ_R c·r.val
+        c_c = Σ_S Ragg[s].c_c·s.val       Ragg[s].c_c = Σ_R c·c·r.val
+
+    With ``with_b`` the right-hand side rides the same scans
+    (b_i = Σ_S i·u·s.val, b_c = Σ_S u·Ragg[s].c·s.val), so the whole
+    linear regression is one pass over S plus one pass over R.  Returns
+    ``[(term name, program)]`` in a stable order.
+    """
+    s, r, ra = Var("s"), Var("r"), Var("ra")
+
+    def sp(*xs: Expr) -> Expr:
+        return L.SemiringAgg("sum_product", tuple(xs))
+
+    def ref_t(name: str) -> L.RecordT:
+        return L.RecordT(((name, L.DOUBLE),))
+
+    def s_only(name: str, payload: Expr) -> Expr:
+        return let(
+            "Covar",
+            RefNew(ref_t(name)),
+            seq(
+                For("s", Input("S"), RefAdd(Var("Covar"), _rec([(name, payload)]))),
+                Var("Covar"),
+            ),
+        )
+
+    def with_ragg(name: str, lane: str, lane_payload: Expr, payload: Expr) -> Expr:
+        ragg_loop = For(
+            "r",
+            Input("R"),
+            DictUpdate(Var("Ragg"), r.key.get("s"), _rec([(lane, lane_payload)])),
+        )
+        s_loop = For(
+            "s",
+            Input("S"),
+            Let(
+                "ra",
+                DictLookup(Var("Ragg"), s.key.get("s")),
+                RefAdd(Var("Covar"), _rec([(name, payload)])),
+            ),
+        )
+        return let(
+            "Ragg",
+            DictNew(ragg_ds),
+            seq(
+                ragg_loop,
+                let("Covar", RefNew(ref_t(name)), seq(s_loop, Var("Covar"))),
+            ),
+        )
+
+    i, u, sval = s.key.get("i"), s.key.get("u"), s.val
+    c, rval = r.key.get("c"), r.val
+    terms = [
+        ("i_i", s_only("i_i", sp(i, i, sval))),
+        ("i_c", with_ragg("i_c", "c", sp(c, rval), sp(i, sval, ra.get("c")))),
+        ("c_c", with_ragg("c_c", "c_c", sp(c, c, rval), sp(sval, ra.get("c_c")))),
+    ]
+    if with_b:
+        terms += [
+            ("b_i", s_only("b_i", sp(i, u, sval))),
+            ("b_c", with_ragg("b_c", "c", sp(c, rval), sp(u, sval, ra.get("c")))),
+        ]
+    return terms

@@ -88,6 +88,9 @@ class GroupBy(Node):
     values: Tuple[Tuple[str, L.Expr], ...]  # aggregate lanes
     choice: DictChoice
     hinted: bool = False
+    # per-lane semiring combine monoids ("sum" | "min" | "max"), aligned with
+    # ``values``; empty means all-sum — the engine's historical behaviour
+    ops: Tuple[str, ...] = ()
 
 
 @dataclass(frozen=True)
@@ -116,6 +119,9 @@ class Reduce(Node):
     lookup_sym: Optional[str] = None  # Fig. 7b interleaved lookup
     lookup_key: Optional[L.Expr] = None
     lookup_var: Optional[str] = None
+    # per-field semiring combine monoids ("sum" | "min" | "max"), aligned
+    # with ``fields``; empty means all-sum (the historical scalar Σ)
+    ops: Tuple[str, ...] = ()
 
 
 @dataclass(frozen=True)
@@ -280,6 +286,14 @@ class Plan:
         return "\n".join(lines)
 
 
+def _render_ops(ops: Tuple[str, ...]) -> str:
+    """Render a node's semiring combine ops — only when they carry
+    information (non-empty, not all-sum), so legacy describe goldens hold."""
+    if not ops or all(o == "sum" for o in ops):
+        return ""
+    return " ops=" + ",".join(ops)
+
+
 def _describe_node(n: Node) -> str:
     if isinstance(n, Scan):
         return f"Scan {n.out} <- {n.source} as {n.var}"
@@ -292,7 +306,8 @@ def _describe_node(n: Node) -> str:
         return f"HashBuild {n.out} <- {n.source} [{n.choice}]"
     if isinstance(n, GroupBy):
         lanes = ",".join(a for a, _ in n.values)
-        return f"GroupBy {n.out} <- {n.source} [{n.choice}] lanes={lanes}"
+        ops = _render_ops(n.ops)
+        return f"GroupBy {n.out} <- {n.source} [{n.choice}] lanes={lanes}{ops}"
     if isinstance(n, HashProbe):
         return f"HashProbe {n.out} <- {n.source} ⋈ {n.build} as {n.inner_var}"
     if isinstance(n, GroupJoin):
@@ -300,7 +315,8 @@ def _describe_node(n: Node) -> str:
     if isinstance(n, Reduce):
         lanes = ",".join(a for a, _ in n.fields)
         lk = f" lookup={n.lookup_sym}" if n.lookup_sym else ""
-        return f"Reduce {n.out} <- {n.source} lanes={lanes}{lk}"
+        ops = _render_ops(n.ops)
+        return f"Reduce {n.out} <- {n.source} lanes={lanes}{lk}{ops}"
     if isinstance(n, Exchange):
         return f"Exchange {n.out} <- {n.source} ({n.kind}) [{n.choice}]"
     if isinstance(n, Repartition):
@@ -1052,6 +1068,244 @@ def _decide_region(chain: List[Node], shape: _Shape, fusion) -> List[Node]:
     if cand is not None and cand.delta > max(split_delta, 0.0):
         return [pipe(cand.n_parts, cand.sym)]
     return split_nodes
+
+
+# ---------------------------------------------------------------------------
+# Cross-plan shared scans (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SharedBranch:
+    """One plan's contribution to a shared-scan region: the fused region
+    (synthesized on the fly for a materialized Scan-rooted chain) plus the
+    symbols of the original plan's nodes the region subsumes — the shared
+    executor skips those nodes and publishes the region's terminal instead."""
+
+    plan_idx: int
+    pipe: Pipeline
+    covered: Tuple[str, ...]
+
+
+@dataclass(frozen=True)
+class SharedRegion:
+    """Regions from *different* plans fused over ONE pass of ``source``:
+    the fact stream is read once and every branch's filters, probes, and
+    semiring accumulators run against the same resident tiles."""
+
+    source: str  # shared base relation
+    branches: Tuple[SharedBranch, ...]
+
+
+@dataclass(frozen=True)
+class SharedPlan:
+    """A batch of plans plus the shared-scan regions merged across them.
+    Plans keep their identities — results demultiplex per plan — and any
+    node not covered by a region executes exactly as in per-query mode."""
+
+    plans: Tuple["Plan", ...]
+    regions: Tuple[SharedRegion, ...] = ()
+
+    def covered_of(self, plan_idx: int) -> Tuple[str, ...]:
+        out: List[str] = []
+        for r in self.regions:
+            for b in r.branches:
+                if b.plan_idx == plan_idx:
+                    out.extend(b.covered)
+        return tuple(out)
+
+    def fingerprint(self) -> str:
+        import hashlib
+
+        blob = repr(
+            (
+                tuple(p.fingerprint() for p in self.plans),
+                self.regions,
+            )
+        )
+        return hashlib.sha1(blob.encode()).hexdigest()
+
+    def describe(self) -> str:
+        """Stable rendering of the merged batch (golden tests, explain):
+        each shared scan lists its merged terminals, then each plan with
+        region-covered nodes elided to a marker."""
+        lines = [
+            f"SharedPlan [{len(self.plans)} plans, "
+            f"{len(self.regions)} shared scans]"
+        ]
+        for r in self.regions:
+            lines.append(
+                f"SharedScan {r.source} [{len(r.branches)} branches]"
+            )
+            for b in r.branches:
+                lines.append(
+                    f"  p{b.plan_idx} | " + _describe_node(b.pipe.stages[-1])
+                )
+        return "\n".join(lines)
+
+
+def _flat_nodes(plan: Plan) -> Tuple[Node, ...]:
+    """The plan's nodes with fused regions expanded inline — the node order
+    the unfused executor would see, which is what ``_Shape`` walks."""
+    out: List[Node] = []
+    for n in plan.nodes:
+        if isinstance(n, Pipeline):
+            out.extend(n.stages)
+        else:
+            out.append(n)
+    return tuple(out)
+
+
+def _plan_refs(plan: Plan) -> List[Tuple[int, str]]:
+    """(node index, referenced symbol) pairs, looking through Pipelines."""
+    refs: List[Tuple[int, str]] = []
+    for i, n in enumerate(plan.nodes):
+        if isinstance(n, Pipeline):
+            refs.append((i, n.source))
+            for s in n.stages:
+                refs.extend((i, r) for r in _node_refs(s))
+        else:
+            refs.extend((i, r) for r in _node_refs(n))
+    if plan.result is not None:
+        refs.append((len(plan.nodes), plan.result))
+    return refs
+
+
+def _branch_candidates(plan: Plan, plan_idx: int) -> List[SharedBranch]:
+    """Shared-scan branch candidates of one plan: fused Pipeline regions
+    rooted at a base-relation Scan, plus *materialized* Scan-rooted chains
+    (regions ``fuse`` declined on Δ_fuse alone — a shared pass changes the
+    economics, since the scan cost is amortized across the batch)."""
+    defined = {n.out for n in plan.nodes}
+    for n in plan.nodes:
+        if isinstance(n, Pipeline):
+            defined.update(s.out for s in n.stages)
+    refs = _plan_refs(plan)
+    out: List[SharedBranch] = []
+    covered_already: set = set()
+    for i, n in enumerate(plan.nodes):
+        if isinstance(n, Pipeline):
+            if (
+                n.stages
+                and isinstance(n.stages[0], Scan)
+                and n.stages[0].source not in defined
+            ):
+                out.append(SharedBranch(plan_idx, n, (n.out,)))
+            continue
+        chain = _match_chain(plan.nodes, i)
+        if chain is None or not isinstance(chain[0], Scan):
+            continue
+        if chain[0].source in defined:
+            continue  # dict-scan / derived input: not a base-relation scan
+        lo, hi = i, i + len(chain)
+        if any(s.out in covered_already for s in chain):
+            continue
+        inner = {s.out for s in chain[:-1]}
+        if any(
+            s in inner for j, s in refs if not (lo <= j < hi)
+        ):
+            continue  # an intermediate leaks outside the chain
+        pipe = Pipeline(
+            chain[-1].out,
+            source=chain[0].source,
+            stages=tuple(chain),
+        )
+        out.append(
+            SharedBranch(plan_idx, pipe, tuple(s.out for s in chain))
+        )
+        covered_already.update(s.out for s in chain)
+    return out
+
+
+def _branch_stream_cols(pipe: Pipeline) -> Tuple[str, ...]:
+    """Fact columns the branch reads off the shared scan variable."""
+    scan = pipe.stages[0]
+    assert isinstance(scan, Scan)
+    return needed_columns(pipe.stages).get(scan.var, ())
+
+
+def merge_shared_scans(
+    plans, sigma=None, fusion=None
+) -> SharedPlan:
+    """Merge fused regions from *different* plans that scan the same base
+    relation into shared-scan regions (DESIGN.md §9) — the LMFAO move: an
+    analytical batch is dominated by the fact-table scan, so a batch of
+    aggregates should pay it once.
+
+    Eligibility per branch: the region must be rooted at a Scan of a base
+    relation (fused ``Pipeline`` or a materialized Scan-rooted chain whose
+    intermediates stay private), and must not consume a symbol produced by
+    another branch of the same region.  Each group of ≥2 branches over one
+    relation is priced by ``FusionCostModel.delta_share``: saved bytes are
+    the per-branch fact streams minus the single shared stream (the branch
+    column sets union under the shared pass), resident bytes the *sum* of
+    every branch's fused working set — when over budget the largest-resident
+    branch is dropped (declined) until the rest fit, reusing the PR-5
+    capacity rules through each branch's own ``partitions`` marking."""
+    from .cost import FusionCostModel
+
+    fusion = fusion or FusionCostModel()
+    plans = tuple(plans)
+    shapes = [
+        _Shape(
+            Plan(_flat_nodes(p), p.result, p.choices, p.params), sigma, fusion
+        )
+        for p in plans
+    ]
+
+    by_rel: Dict[str, List[SharedBranch]] = {}
+    for idx, p in enumerate(plans):
+        for b in _branch_candidates(p, idx):
+            by_rel.setdefault(b.pipe.stages[0].source, []).append(b)
+
+    regions: List[SharedRegion] = []
+    for rel in sorted(by_rel):
+        branches = by_rel[rel]
+        # a branch must not depend on another branch's terminal: they run
+        # against the same pass and cannot be ordered within it
+        terminals = {b.pipe.out for b in branches}
+        branches = [
+            b
+            for b in branches
+            if not any(
+                r in terminals and r != b.pipe.out
+                for s in b.pipe.stages
+                for r in _node_refs(s)
+            )
+        ]
+        while len(branches) >= 2:
+            costs = [
+                _region_cost(list(b.pipe.stages), shapes[b.plan_idx], fusion)
+                for b in branches
+            ]
+            rows = max(c.rows for c in costs)
+            union_cols: set = set()
+            per_branch_stream = 0.0
+            for b in branches:
+                cols = _branch_stream_cols(b.pipe)
+                union_cols.update(cols)
+                per_branch_stream += rows * (
+                    fusion.col_bytes * len(cols) + fusion.mask_bytes
+                )
+            shared_stream = rows * (
+                fusion.col_bytes * len(union_cols) + fusion.mask_bytes
+            )
+            saved = per_branch_stream - shared_stream
+            resident = sum(c.resident for c in costs)
+            delta = fusion.delta_share(saved, resident)
+            if delta == float("-inf"):
+                # decline the largest-resident branch, keep trying the rest
+                drop = max(
+                    range(len(branches)), key=lambda j: costs[j].resident
+                )
+                branches = branches[:drop] + branches[drop + 1:]
+                continue
+            if delta <= 0.0:
+                branches = []
+                break
+            regions.append(SharedRegion(rel, tuple(branches)))
+            break
+    return SharedPlan(plans, tuple(regions))
 
 
 def _rename(n: Node, new_out: str) -> Node:

@@ -43,6 +43,71 @@ PAD = 2**31 - 1  # sorted-array tail padding
 _H1 = 2654435761
 _H2 = 2246822519
 
+# ---------------------------------------------------------------------------
+# Semiring lane combines.  A dictionary value row is V lanes; each lane
+# combines duplicate-key contributions under its own monoid ("sum" | "min" |
+# "max" — identities 0 / +inf / -inf).  ``ops`` empty or None means all-sum,
+# which takes the EXACT historical vectorized path (bitwise stability).
+# ---------------------------------------------------------------------------
+
+OP_IDENTITY = {"sum": 0.0, "min": float("inf"), "max": float("-inf")}
+
+
+def all_sum(ops) -> bool:
+    return not ops or all(o == "sum" for o in ops)
+
+
+def lane_identity_row(ops, V: int, dtype=jnp.float32) -> jax.Array:
+    """[V] per-lane combine identities (zeros when all-sum)."""
+    if all_sum(ops):
+        return jnp.zeros((V,), dtype)
+    return jnp.asarray([OP_IDENTITY[o] for o in ops], dtype)
+
+
+def combine_at(tv: jax.Array, idx: jax.Array, vs: jax.Array, ops) -> jax.Array:
+    """Scatter-combine value rows into ``tv`` at ``idx`` (drop-mode), each
+    lane under its own monoid; all-sum keeps the one-shot ``.add``."""
+    if all_sum(ops):
+        return tv.at[idx].add(vs, mode="drop")
+    for j, op in enumerate(ops):
+        col = vs[:, j]
+        if op == "sum":
+            tv = tv.at[idx, j].add(col, mode="drop")
+        elif op == "min":
+            tv = tv.at[idx, j].min(col, mode="drop")
+        else:
+            tv = tv.at[idx, j].max(col, mode="drop")
+    return tv
+
+
+def neutralize_rows(vs: jax.Array, live: jax.Array, ops) -> jax.Array:
+    """Replace dead rows with the per-lane combine identity (zeros when
+    all-sum — the historical masking)."""
+    if all_sum(ops):
+        return jnp.where(live[:, None], vs, 0.0)
+    ident = lane_identity_row(ops, vs.shape[1], vs.dtype)
+    return jnp.where(live[:, None], vs, ident[None, :])
+
+
+def finalize_dead(keys: jax.Array, vals: jax.Array, ops, sentinel) -> jax.Array:
+    """Zero the value rows of unoccupied slots after an ops-aware build —
+    min/max accumulation leaves ±inf identities there, and downstream
+    consumers (items(), dict scans) expect dead rows to read as zeros."""
+    if all_sum(ops):
+        return vals
+    return jnp.where((keys != sentinel)[:, None], vals, 0.0)
+
+
+def check_ops_update(ops) -> None:
+    """Incremental ``update_add`` after an ops-aware build is unsupported:
+    the build zero-fills dead slots, so a later insert claiming one would
+    combine against 0 instead of the lane identity.  All current update
+    paths (cross-shard Exchange merges) are sum-only by construction."""
+    if not all_sum(ops):
+        raise NotImplementedError(
+            "update_add on min/max semiring lanes is not supported"
+        )
+
 
 def _mix(x: jax.Array, mult: int) -> jax.Array:
     h = x.astype(jnp.uint32) * jnp.uint32(mult)
@@ -88,6 +153,7 @@ def generic_insert(
     probe: ProbeFn,
     max_probes: int,
     valid: Optional[jax.Array] = None,
+    ops: Optional[Tuple[str, ...]] = None,
 ) -> HashTable:
     """Insert/aggregate a batch.  Each round is one full-width vector step:
 
@@ -125,7 +191,7 @@ def generic_insert(
         cur2 = tk[slot]
         hit2 = pending & ~hit & ~won & (cur2 == ks)
         write = hit | won | hit2
-        tv = tv.at[jnp.where(write, slot, C)].add(vs, mode="drop")
+        tv = combine_at(tv, jnp.where(write, slot, C), vs, ops)
         new_pending = pending & ~write
         max_t = jnp.where(jnp.any(write), jnp.maximum(max_t, t), max_t)
         return tk, tv, t + 1, new_pending, max_t
@@ -207,7 +273,10 @@ class SortedTable(NamedTuple):
 
 
 def dedupe_sorted(
-    ks: jax.Array, vs: jax.Array, capacity: int
+    ks: jax.Array,
+    vs: jax.Array,
+    capacity: int,
+    ops: Optional[Tuple[str, ...]] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Aggregate duplicate keys of a sorted-with-holes sequence; returns
     padded unique arrays.
@@ -235,9 +304,15 @@ def dedupe_sorted(
     uk = jnp.full((capacity,), PAD, jnp.int32).at[seg].min(
         jnp.where(live, ks, PAD), mode="drop"
     )
-    uv = jnp.zeros((capacity, V), vs.dtype).at[seg].add(
-        jnp.where(live[:, None], vs, 0.0), mode="drop"
-    )
+    if all_sum(ops):
+        uv = jnp.zeros((capacity, V), vs.dtype).at[seg].add(
+            jnp.where(live[:, None], vs, 0.0), mode="drop"
+        )
+    else:
+        ident = lane_identity_row(ops, V, vs.dtype)
+        uv0 = jnp.zeros((capacity, V), vs.dtype) + ident[None, :]
+        uv = combine_at(uv0, seg, neutralize_rows(vs, live, ops), ops)
+        uv = finalize_dead(uk, uv, ops, PAD)
     n_unique = jnp.sum(head).astype(jnp.int32)
     return uk, uv, n_unique
 
@@ -250,6 +325,7 @@ def build_sorted(
     assume_sorted: bool = False,
     block: int = 0,
     valid: Optional[jax.Array] = None,
+    ops: Optional[Tuple[str, ...]] = None,
 ) -> SortedTable:
     """Sort (skipped when the input is known ordered — the paper's hinted
     insert / O(n) build), aggregate duplicates, pad to capacity.
@@ -270,7 +346,7 @@ def build_sorted(
     if not assume_sorted:
         perm = jnp.argsort(ks)
         ks, vs = ks[perm], vs[perm]
-    uk, uv, n = dedupe_sorted(ks, vs, capacity)
+    uk, uv, n = dedupe_sorted(ks, vs, capacity, ops)
     bm = _block_index(uk, block)
     return SortedTable(uk, uv, n, bm)
 
@@ -373,6 +449,7 @@ def resident_insert_rounds(
     vs: jax.Array,
     pending: jax.Array,
     max_probes: int,
+    ops: Optional[Tuple[str, ...]] = None,
 ):
     """``generic_insert``'s round loop over kernel-local arrays: claim via
     scatter-max arbitration, aggregate duplicates, advance survivors — the
@@ -398,7 +475,7 @@ def resident_insert_rounds(
         cur2 = jnp.take(tk, slot, axis=0)
         hit2 = pending & ~hit & ~won & (cur2 == ks)
         write = hit | won | hit2
-        tv = tv.at[jnp.where(write, slot, C)].add(vs, mode="drop")
+        tv = combine_at(tv, jnp.where(write, slot, C), vs, ops)
         return t + 1, tk, tv, pending & ~write
 
     def cond(carry):

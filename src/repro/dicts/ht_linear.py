@@ -26,30 +26,34 @@ def _probe(capacity: int):
     return fn
 
 
-def empty(capacity: int, arity: int = 1) -> HashTable:
+def empty(capacity: int, arity: int = 1, ops=None) -> HashTable:
+    ident = base.lane_identity_row(ops, arity)
     return HashTable(
         keys=jnp.full((capacity,), EMPTY, jnp.int32),
-        vals=jnp.zeros((capacity, arity), jnp.float32),
+        vals=jnp.zeros((capacity, arity), jnp.float32) + ident[None, :],
         max_t=jnp.int32(0),
     )
 
 
 def build(
     ks: jax.Array, vs: jax.Array, capacity: int, *, assume_sorted: bool = False,
-    valid=None,
+    valid=None, ops=None,
 ) -> HashTable:
     del assume_sorted  # hash tables are order-insensitive (paper §4.1)
     arity = 1 if vs.ndim == 1 else vs.shape[-1]
-    return base.generic_insert(
-        empty(capacity, arity), ks, vs, _probe(capacity), MAX_PROBES, valid=valid
+    t = base.generic_insert(
+        empty(capacity, arity, ops), ks, vs, _probe(capacity), MAX_PROBES,
+        valid=valid, ops=ops,
     )
+    return t._replace(vals=base.finalize_dead(t.keys, t.vals, ops, EMPTY))
 
 
 def update_add(
     table: HashTable, ks: jax.Array, vs: jax.Array, *, assume_sorted: bool = False,
-    valid=None,
+    valid=None, ops=None,
 ) -> HashTable:
     del assume_sorted
+    base.check_ops_update(ops)
     return base.generic_insert(
         table, ks, vs, _probe(table.capacity), MAX_PROBES, valid=valid
     )
@@ -140,11 +144,12 @@ def resident_accumulate(
     pending: jax.Array,
     *,
     max_probes: int = MAX_PROBES,
+    ops=None,
 ):
     """One tile's worth of ``dict[k] += v`` into a resident accumulator in
     this family's own layout (the kernel's scratch IS an ht_linear table)."""
     return base.resident_insert_rounds(
-        _probe(tk.shape[0]), tk, tv, ks, vs, pending, max_probes
+        _probe(tk.shape[0]), tk, tv, ks, vs, pending, max_probes, ops=ops
     )
 
 

@@ -21,18 +21,21 @@ BLOCK = 128  # leaf width: one VPU lane row per step on TPU
 
 def build(
     ks: jax.Array, vs: jax.Array, capacity: int, *, assume_sorted: bool = False,
-    valid=None,
+    valid=None, ops=None,
 ) -> SortedTable:
     assert capacity % BLOCK == 0, "capacity must be a multiple of BLOCK"
     return base.build_sorted(
-        ks, vs, capacity, assume_sorted=assume_sorted, block=BLOCK, valid=valid
+        ks, vs, capacity, assume_sorted=assume_sorted, block=BLOCK, valid=valid,
+        ops=ops,
     )
 
 
 def update_add(
-    table: SortedTable, ks: jax.Array, vs: jax.Array, *, assume_sorted: bool = False
+    table: SortedTable, ks: jax.Array, vs: jax.Array, *, assume_sorted: bool = False,
+    ops=None,
 ) -> SortedTable:
     del assume_sorted
+    base.check_ops_update(ops)
     return base.merge_update_sorted(table, ks, vs, block=BLOCK)
 
 

@@ -20,17 +20,20 @@ from .base import SortedTable
 
 def build(
     ks: jax.Array, vs: jax.Array, capacity: int, *, assume_sorted: bool = False,
-    valid=None,
+    valid=None, ops=None,
 ) -> SortedTable:
     return base.build_sorted(
-        ks, vs, capacity, assume_sorted=assume_sorted, block=0, valid=valid
+        ks, vs, capacity, assume_sorted=assume_sorted, block=0, valid=valid,
+        ops=ops,
     )
 
 
 def update_add(
-    table: SortedTable, ks: jax.Array, vs: jax.Array, *, assume_sorted: bool = False
+    table: SortedTable, ks: jax.Array, vs: jax.Array, *, assume_sorted: bool = False,
+    ops=None,
 ) -> SortedTable:
     del assume_sorted  # merge re-sorts the concatenation; pads go to the tail
+    base.check_ops_update(ops)
     return base.merge_update_sorted(table, ks, vs, block=0)
 
 

@@ -212,6 +212,25 @@ def _plan_exchange(node, built, *, axis: Axis):
     return E.BuiltDict(res, built.choice, lanes=built.lanes, kind=built.kind)
 
 
+def _check_shardable_ops(plan) -> None:
+    """Semiring lanes under sharding: the cross-shard merges (shuffle
+    rebuild in ``_plan_exchange``, allreduce ``psum``) combine partials by
+    ``+`` — sound only for sum lanes.  min/max lanes would need an
+    op-aware exchange; refuse loudly rather than merge wrongly."""
+    from repro.core import plan as cplan
+
+    for n in plan.nodes:
+        stages = n.stages if isinstance(n, cplan.Pipeline) else (n,)
+        for s in stages:
+            ops = tuple(getattr(s, "ops", ()) or ())
+            if any(o != "sum" for o in ops):
+                raise NotImplementedError(
+                    f"non-sum semiring lanes {ops} on {s.out!r} are not "
+                    "supported under sharding: cross-shard dictionary and "
+                    "scalar merges combine partials by +"
+                )
+
+
 def sharded_executor(
     plan,
     db,
@@ -251,6 +270,7 @@ def sharded_executor(
     else:
         default_params = None
 
+    _check_shardable_ops(plan)
     splan, props = cplan.legalize(plan, tuple(shard_rels))
     if fuse:
         # fuse the per-shard partial phase of the legalized plan: the
@@ -362,6 +382,157 @@ def sharded_executor(
         )
 
     run.trace_counter = trace_counter
+    return run
+
+
+def sharded_shared_executor(
+    plans,
+    db,
+    mesh: jax.sharding.Mesh,
+    axis: Axis,
+    shard_rels: Tuple[str, ...] = ("lineitem",),
+    sigma=None,
+    fusion=None,
+):
+    """Distributed shared-scan batch executor (DESIGN.md §9).
+
+    Each plan is legalized and fused exactly as in :func:`sharded_executor`;
+    the per-shard *partial* phases are then merged across plans with
+    ``plan.merge_shared_scans`` — the shard-local fact pass is paid once for
+    the whole batch — while every plan keeps its own ``Exchange`` nodes,
+    so cross-shard merges stay **per query** (each query's partial
+    dictionaries are shuffled/psum-ed independently; results are identical
+    to running the queries one at a time).  Returns a callable
+    ``run(params_list) -> [result, ...]`` in ``plans`` order; non-sum
+    semiring lanes are rejected up front (sum-only exchanges)."""
+    from jax.sharding import PartitionSpec as PSpec
+
+    from repro.core import plan as cplan
+    from repro.data.table import Table
+    from repro.exec import engine as E
+
+    plans = tuple(plans)
+    assert not any(isinstance(p, cplan.BoundPlan) for p in plans), (
+        "bind parameters per call via params_list"
+    )
+    splans, propss = [], []
+    for p in plans:
+        _check_shardable_ops(p)
+        sp_, props = cplan.legalize(p, tuple(shard_rels))
+        splans.append(cplan.fuse(sp_, sigma=sigma))
+        propss.append(props)
+    shared = cplan.merge_shared_scans(splans, sigma=sigma, fusion=fusion)
+
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+    n_sh = 1
+    for a in axes:
+        n_sh *= mesh.shape[a]
+
+    cols_in, masks_in, col_specs, mask_specs, sorted_meta = {}, {}, {}, {}, {}
+    for rel, t in db.items():
+        mask = t.live_mask()
+        cols = dict(t.columns)
+        if rel in shard_rels:
+            pad = (-t.nrows) % n_sh
+            if pad:
+                cols = {
+                    c: jnp.concatenate([v, jnp.zeros((pad,), v.dtype)])
+                    for c, v in cols.items()
+                }
+                mask = jnp.concatenate([mask, jnp.zeros((pad,), bool)])
+            spec = PSpec(axis)
+        else:
+            spec = PSpec()
+        cols_in[rel] = cols
+        masks_in[rel] = mask
+        col_specs[rel] = {c: spec for c in cols}
+        mask_specs[rel] = spec
+        sorted_meta[rel] = t.sorted_on
+
+    param_specs = tuple(
+        {name: PSpec() for name in p.param_names()} for p in plans
+    )
+    trace_counter = [0]
+
+    # per-plan demux metadata: scalar refs come out psum-ed (replicated);
+    # dictionary results concatenate key-disjoint shard slices unless the
+    # legalizer proved them replicated
+    kinds, out_specs = [], []
+    for sp_, props in zip(splans, propss):
+        rn = (
+            sp_.node_defining(sp_.result) if sp_.result is not None else None
+        )
+        if rn is None or isinstance(rn, cplan.Reduce):
+            kinds.append(("refs", None))
+            out_specs.append(PSpec())
+        else:
+            replicated = isinstance(props.get(sp_.result), cplan.Replicated)
+            kinds.append(("dict", getattr(rn, "choice", None)))
+            out_specs.append(
+                (
+                    PSpec() if replicated else PSpec(axis),
+                    PSpec(None, None) if replicated else PSpec(axis, None),
+                    PSpec() if replicated else PSpec(axis),
+                )
+            )
+
+    def body(cols, masks, pvals_list):
+        trace_counter[0] += 1  # python side effect: fires per trace only
+        local_db = {}
+        for rel in cols:
+            n = next(iter(cols[rel].values())).shape[0]
+            local_db[rel] = Table(
+                cols[rel], n, mask=masks[rel], sorted_on=sorted_meta[rel]
+            )
+        outs = E.execute_shared_plan(
+            shared,
+            local_db,
+            sigma=None,
+            allow_sorted=False,
+            params_list=list(pvals_list),
+            exchange_impl=functools.partial(_plan_exchange, axis=axis),
+            repartition_impl=functools.partial(_plan_repartition, axis=axis),
+        )
+        flat = []
+        for (kind, _), out in zip(kinds, outs):
+            if kind == "refs":
+                flat.append(out)
+            else:
+                ks, vs, valid = out.arrays()
+                flat.append((ks, vs, valid.astype(jnp.int32)))
+        return tuple(flat)
+
+    wrapped = jax.jit(
+        compat.shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(col_specs, mask_specs, param_specs),
+            out_specs=tuple(out_specs),
+        )
+    )
+
+    def run(params_list=None):
+        params_list = list(params_list or [None] * len(plans))
+        coerced = tuple(
+            E.coerce_bindings(p, params_list[i]) for i, p in enumerate(plans)
+        )
+        flat = wrapped(cols_in, masks_in, coerced)
+        res = []
+        for (kind, choice), o in zip(kinds, flat):
+            if kind == "refs":
+                res.append(o)
+            else:
+                ks, vs, valid = o
+                res.append(
+                    ShardedDictResult(
+                        choice.ds if choice is not None else "ht_linear",
+                        ks, vs, valid.astype(bool),
+                    )
+                )
+        return res
+
+    run.trace_counter = trace_counter
+    run.shared_plan = shared
     return run
 
 

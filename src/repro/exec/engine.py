@@ -17,7 +17,7 @@ The ds-dispatch points (`build_dict`, `lookup_dict`) are where the paper's
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -65,14 +65,25 @@ import functools
 
 
 @functools.lru_cache(maxsize=None)
-def _jit_build(ds: str, capacity: int, assume_sorted: bool, has_valid: bool):
+def _jit_build(
+    ds: str,
+    capacity: int,
+    assume_sorted: bool,
+    has_valid: bool,
+    ops: Optional[Tuple[str, ...]] = None,
+):
     mod = registry.get(ds)
+    # all-sum lanes take the exact legacy call (third-party backends need not
+    # know about ops); min/max lanes dispatch the semiring-aware build
+    kw = {} if dbase.all_sum(ops) else {"ops": ops}
     if has_valid:
         fn = lambda k, v, m: mod.build(
-            k, v, capacity, assume_sorted=assume_sorted, valid=m
+            k, v, capacity, assume_sorted=assume_sorted, valid=m, **kw
         )
     else:
-        fn = lambda k, v: mod.build(k, v, capacity, assume_sorted=assume_sorted)
+        fn = lambda k, v: mod.build(
+            k, v, capacity, assume_sorted=assume_sorted, **kw
+        )
     return jax.jit(fn)
 
 
@@ -91,13 +102,15 @@ def build_dict(
     capacity: int,
     valid: Optional[jax.Array] = None,
     assume_sorted: bool = False,
+    ops: Optional[Tuple[str, ...]] = None,
 ) -> DictResult:
+    ops = None if dbase.all_sum(ops) else tuple(ops)
     if valid is not None:
         # masked rows become PAD holes; the sorted fast path survives the
         # mask (dicts.base.build_sorted dedupes sorted-with-holes exactly)
-        t = _jit_build(ds, capacity, assume_sorted, True)(keys, vals, valid)
+        t = _jit_build(ds, capacity, assume_sorted, True, ops)(keys, vals, valid)
     else:
-        t = _jit_build(ds, capacity, assume_sorted, False)(keys, vals)
+        t = _jit_build(ds, capacity, assume_sorted, False, ops)(keys, vals)
     return DictResult(ds, t)
 
 
@@ -132,21 +145,48 @@ def groupby(
     ds: str,
     capacity: int,
     assume_sorted: bool = False,
+    ops: Tuple[str, ...] = (),
 ) -> DictResult:
-    """Group-by aggregate (Fig. 6c/6d): dict[key] += val."""
+    """Group-by aggregate (Fig. 6c/6d): dict[key] ⊕= val, where ⊕ is each
+    lane's combine monoid (``ops``; empty = all-sum, the legacy path).  Bag
+    multiplicity only multiplies additive lanes — min/max are idempotent
+    over duplicates."""
     if vals.ndim == 1:
         vals = vals[:, None]
-    vals = vals * table.multiplicity()[:, None]
+    mult = table.multiplicity()[:, None]
+    if dbase.all_sum(ops):
+        vals = vals * mult
+    else:
+        sel = jnp.asarray([o == "sum" for o in ops])
+        vals = jnp.where(sel[None, :], vals * mult, vals)
     return build_dict(
-        ds, keys, vals, capacity, valid=table.mask, assume_sorted=assume_sorted
+        ds, keys, vals, capacity, valid=table.mask,
+        assume_sorted=assume_sorted, ops=ops,
     )
 
 
-def scalar_aggregate(table: Table, vals: jax.Array) -> jax.Array:
-    """Σ over live rows; vals [n, V] -> [V]."""
+def scalar_aggregate(
+    table: Table, vals: jax.Array, ops: Tuple[str, ...] = ()
+) -> jax.Array:
+    """Per-lane combine over live rows; vals [n, V] -> [V].  All-sum (the
+    default) keeps the historical Σ with bag multiplicity; min/max lanes
+    reduce over identity-masked rows (multiplicity is irrelevant there)."""
     if vals.ndim == 1:
         vals = vals[:, None]
-    return jnp.sum(vals * table.multiplicity()[:, None], axis=0)
+    if dbase.all_sum(ops):
+        return jnp.sum(vals * table.multiplicity()[:, None], axis=0)
+    live = table.live_mask()
+    mult = table.multiplicity()
+    lanes = []
+    for j, op in enumerate(ops):
+        col = vals[:, j]
+        if op == "sum":
+            lanes.append(jnp.sum(col * mult, axis=0))
+        elif op == "min":
+            lanes.append(jnp.min(jnp.where(live, col, jnp.inf), axis=0))
+        else:
+            lanes.append(jnp.max(jnp.where(live, col, -jnp.inf), axis=0))
+    return jnp.stack(lanes)
 
 
 def build_index(
@@ -323,222 +363,24 @@ def execute_plan(
     the plan's free ``L.Param``s (a ``BoundPlan`` carries its own).
     """
     from repro.core import plan as P
-    from repro.core.lower import compile_rowfn_frame as _rowfn_frame
 
     if isinstance(plan, P.BoundPlan):
         params = {**plan.binding_map(), **(params or {})}
         plan = plan.plan
 
-    def compile_rowfn_frame(x, tables):
-        return _rowfn_frame(x, tables, params)
-
     env: Dict[str, object] = {}
     refs: Dict[str, object] = {}
 
-    def frame_of(sym: str) -> Frame:
-        v = env[sym]
-        assert isinstance(v, Frame), f"{sym} is not a row frame"
-        return v
-
     for node in plan.nodes:
-        if isinstance(node, P.Scan):
-            if node.source in env:
-                src = env[node.source]
-                if isinstance(src, BuiltDict):
-                    t, rel = _dict_scan_table(src), None
-                elif isinstance(src, Table):
-                    t, rel = src, None
-                else:
-                    raise TypeError(f"cannot scan {node.source}")
-            else:
-                t, rel = db[node.source], node.source
-            env[node.out] = Frame({node.var: t}, (node.var,), {node.var: rel})
+        _exec_node(
+            node, env, refs, db, sigma, allow_sorted, params,
+            exchange_impl, repartition_impl,
+        )
 
-        elif isinstance(node, P.Select):
-            f = frame_of(node.source)
-            m = compile_rowfn_frame(node.pred, f.tables)
-            env[node.out] = f.with_mask(jnp.asarray(m, bool))
+    return _plan_result(plan, env, refs)
 
-        elif isinstance(node, P.Project):
-            from repro.core import llql as L
 
-            f = frame_of(node.source)
-            n = f.primary.nrows
-            cols = {}
-            sorted_on: Tuple[str, ...] = ()
-            for name, fx in node.fields:
-                col = jnp.asarray(compile_rowfn_frame(fx, f.tables))
-                cols[name] = jnp.broadcast_to(col, (n,))
-                # physical row order is the probe side's: an identity copy of
-                # a sort-leading column keeps its orderedness
-                if (
-                    not sorted_on
-                    and isinstance(fx, L.FieldAccess)
-                    and isinstance(fx.rec, L.FieldAccess)
-                    and fx.rec.name == "key"
-                    and isinstance(fx.rec.rec, L.Var)
-                    and fx.rec.rec.name in f.tables
-                    and f.tables[fx.rec.rec.name].sorted_on[:1] == (fx.name,)
-                ):
-                    sorted_on = (name,)
-            env[node.out] = Table(cols, n, mask=f.primary.mask, sorted_on=sorted_on)
-
-        elif isinstance(node, P.HashBuild):
-            f = frame_of(node.source)
-            keys = jnp.asarray(
-                compile_rowfn_frame(node.keyexpr, f.tables), jnp.int32
-            )
-            _, _, srt = _key_info(f, node.keyexpr)
-            srt = srt and allow_sorted
-            cap = _capacity(f, node.keyexpr, node.choice.ds, sigma)
-            d = build_index(
-                node.choice.ds,
-                keys,
-                cap,
-                valid=f.primary.mask,
-                assume_sorted=srt and (node.choice.hinted or node.hinted),
-            )
-            env[node.out] = BuiltDict(d, node.choice, kind="index", src=f.primary)
-
-        elif isinstance(node, P.HashProbe):
-            f = frame_of(node.source)
-            b = env[node.build]
-            assert isinstance(b, BuiltDict) and b.kind == "index", node.build
-            keys = jnp.asarray(
-                compile_rowfn_frame(node.keyexpr, f.tables), jnp.int32
-            )
-            _, _, srt = _key_info(f, node.keyexpr)
-            srt = srt and allow_sorted
-            vals, found = lookup_dict(
-                b.res,
-                keys,
-                valid=f.primary.mask,
-                sorted_probes=srt and (node.hinted or b.choice.hinted),
-            )
-            ridx = jnp.where(found, vals[:, 0].astype(jnp.int32), 0)
-            src_t = b.src
-            gcols = {
-                c: jnp.where(
-                    found, src_t.col(c)[ridx], jnp.zeros((), src_t.col(c).dtype)
-                )
-                for c in src_t.names()
-            }
-            gathered = Table(gcols, f.primary.nrows, mask=found)
-            masked = f.with_mask(found)
-            env[node.out] = Frame(
-                {**masked.tables, node.inner_var: gathered},
-                masked.order + (node.inner_var,),
-                {**masked.rels, node.inner_var: None},
-            )
-
-        elif isinstance(node, P.GroupBy):
-            f = frame_of(node.source)
-            n = f.primary.nrows
-            keys = jnp.asarray(
-                compile_rowfn_frame(node.keyexpr, f.tables), jnp.int32
-            )
-            _, _, srt = _key_info(f, node.keyexpr)
-            srt = srt and allow_sorted
-            lanes = [
-                jnp.broadcast_to(
-                    jnp.asarray(compile_rowfn_frame(fx, f.tables), jnp.float32),
-                    (n,),
-                )
-                for _, fx in node.values
-            ]
-            vals = jnp.stack(lanes, axis=1)
-            cap = _capacity(f, node.keyexpr, node.choice.ds, sigma)
-            d = groupby(
-                f.primary,
-                keys,
-                vals,
-                node.choice.ds,
-                cap,
-                assume_sorted=srt and (node.choice.hinted or node.hinted),
-            )
-            env[node.out] = BuiltDict(
-                d, node.choice, lanes=tuple(a for a, _ in node.values)
-            )
-
-        elif isinstance(node, P.GroupJoin):
-            f = frame_of(node.source)
-            b = env[node.build]
-            assert isinstance(b, BuiltDict), node.build
-            n = f.primary.nrows
-            keys = jnp.asarray(
-                compile_rowfn_frame(node.keyexpr, f.tables), jnp.int32
-            )
-            _, _, srt = _key_info(f, node.keyexpr)
-            srt = srt and allow_sorted
-            f_vals = jnp.broadcast_to(
-                jnp.asarray(compile_rowfn_frame(node.f_expr, f.tables), jnp.float32),
-                (n,),
-            )
-            cap = _capacity(f, node.keyexpr, node.choice.ds, sigma)
-            d = groupjoin(
-                f.primary,
-                keys,
-                f_vals[:, None],
-                b.res,
-                node.choice.ds,
-                cap,
-                sorted_probes=srt and (node.hinted or b.choice.hinted),
-                assume_sorted=srt and node.choice.hinted,
-            )
-            env[node.out] = BuiltDict(d, node.choice, lanes=("_0",))
-
-        elif isinstance(node, P.Reduce):
-            f = frame_of(node.source)
-            lanes: Tuple[str, ...] = ("m", "c", "c_c")
-            lookup_vals = None
-            if node.lookup_sym is not None:
-                b = env[node.lookup_sym]
-                assert isinstance(b, BuiltDict), node.lookup_sym
-                lanes = b.lanes or lanes
-                keys = jnp.asarray(
-                    compile_rowfn_frame(node.lookup_key, f.tables), jnp.int32
-                )
-                _, _, srt = _key_info(f, node.lookup_key)
-                srt = srt and allow_sorted
-                lookup_vals, found = lookup_dict(
-                    b.res,
-                    keys,
-                    valid=f.primary.mask,
-                    sorted_probes=srt and b.choice.hinted,
-                )
-                f = f.with_mask(found)
-            total = {}
-            for name, fx in node.fields:
-                col = _reduce_field(
-                    fx, f, node.lookup_var, lookup_vals, lanes, params=params
-                )
-                total[name] = scalar_aggregate(f.primary, col)[0]
-            refs[node.out] = total
-
-        elif isinstance(node, P.Pipeline):
-            _run_pipeline(node, env, refs, db, sigma, allow_sorted, params)
-
-        elif isinstance(node, P.Repartition):
-            if repartition_impl is not None:
-                env[node.out] = repartition_impl(
-                    node, frame_of(node.source), params=params
-                )
-            else:  # single shard: identity (rows already all "here")
-                env[node.out] = env[node.source]
-
-        elif isinstance(node, P.Exchange):
-            if exchange_impl is not None:
-                if node.kind == "shuffle":
-                    env[node.out] = exchange_impl(node, env[node.source])
-                else:  # allreduce over a scalar ref record
-                    refs[node.source] = exchange_impl(node, refs[node.source])
-            else:  # single shard: identity
-                if node.source in env:
-                    env[node.out] = env[node.source]
-
-        else:  # pragma: no cover
-            raise AssertionError(node)
-
+def _plan_result(plan, env, refs):
     if plan.result is None:
         if len(refs) == 1:
             return next(iter(refs.values()))
@@ -549,6 +391,232 @@ def execute_plan(
     if isinstance(out, BuiltDict):
         return out.res
     return out
+
+
+def _exec_node(
+    node,
+    env,
+    refs,
+    db,
+    sigma,
+    allow_sorted,
+    params,
+    exchange_impl=None,
+    repartition_impl=None,
+):
+    """Execute ONE plan node against (env, refs) — the executor's dispatch,
+    factored out so the shared-scan scheduler (``execute_shared_plan``) can
+    interleave nodes from several plans around their shared regions."""
+    from repro.core import plan as P
+    from repro.core.lower import compile_rowfn_frame as _rowfn_frame
+
+    def compile_rowfn_frame(x, tables):
+        return _rowfn_frame(x, tables, params)
+
+    def frame_of(sym: str) -> Frame:
+        v = env[sym]
+        assert isinstance(v, Frame), f"{sym} is not a row frame"
+        return v
+
+    if isinstance(node, P.Scan):
+        if node.source in env:
+            src = env[node.source]
+            if isinstance(src, BuiltDict):
+                t, rel = _dict_scan_table(src), None
+            elif isinstance(src, Table):
+                t, rel = src, None
+            else:
+                raise TypeError(f"cannot scan {node.source}")
+        else:
+            t, rel = db[node.source], node.source
+        env[node.out] = Frame({node.var: t}, (node.var,), {node.var: rel})
+
+    elif isinstance(node, P.Select):
+        f = frame_of(node.source)
+        m = compile_rowfn_frame(node.pred, f.tables)
+        env[node.out] = f.with_mask(jnp.asarray(m, bool))
+
+    elif isinstance(node, P.Project):
+        from repro.core import llql as L
+
+        f = frame_of(node.source)
+        n = f.primary.nrows
+        cols = {}
+        sorted_on: Tuple[str, ...] = ()
+        for name, fx in node.fields:
+            col = jnp.asarray(compile_rowfn_frame(fx, f.tables))
+            cols[name] = jnp.broadcast_to(col, (n,))
+            # physical row order is the probe side's: an identity copy of
+            # a sort-leading column keeps its orderedness
+            if (
+                not sorted_on
+                and isinstance(fx, L.FieldAccess)
+                and isinstance(fx.rec, L.FieldAccess)
+                and fx.rec.name == "key"
+                and isinstance(fx.rec.rec, L.Var)
+                and fx.rec.rec.name in f.tables
+                and f.tables[fx.rec.rec.name].sorted_on[:1] == (fx.name,)
+            ):
+                sorted_on = (name,)
+        env[node.out] = Table(cols, n, mask=f.primary.mask, sorted_on=sorted_on)
+
+    elif isinstance(node, P.HashBuild):
+        f = frame_of(node.source)
+        keys = jnp.asarray(
+            compile_rowfn_frame(node.keyexpr, f.tables), jnp.int32
+        )
+        _, _, srt = _key_info(f, node.keyexpr)
+        srt = srt and allow_sorted
+        cap = _capacity(f, node.keyexpr, node.choice.ds, sigma)
+        d = build_index(
+            node.choice.ds,
+            keys,
+            cap,
+            valid=f.primary.mask,
+            assume_sorted=srt and (node.choice.hinted or node.hinted),
+        )
+        env[node.out] = BuiltDict(d, node.choice, kind="index", src=f.primary)
+
+    elif isinstance(node, P.HashProbe):
+        f = frame_of(node.source)
+        b = env[node.build]
+        assert isinstance(b, BuiltDict) and b.kind == "index", node.build
+        keys = jnp.asarray(
+            compile_rowfn_frame(node.keyexpr, f.tables), jnp.int32
+        )
+        _, _, srt = _key_info(f, node.keyexpr)
+        srt = srt and allow_sorted
+        vals, found = lookup_dict(
+            b.res,
+            keys,
+            valid=f.primary.mask,
+            sorted_probes=srt and (node.hinted or b.choice.hinted),
+        )
+        ridx = jnp.where(found, vals[:, 0].astype(jnp.int32), 0)
+        src_t = b.src
+        gcols = {
+            c: jnp.where(
+                found, src_t.col(c)[ridx], jnp.zeros((), src_t.col(c).dtype)
+            )
+            for c in src_t.names()
+        }
+        gathered = Table(gcols, f.primary.nrows, mask=found)
+        masked = f.with_mask(found)
+        env[node.out] = Frame(
+            {**masked.tables, node.inner_var: gathered},
+            masked.order + (node.inner_var,),
+            {**masked.rels, node.inner_var: None},
+        )
+
+    elif isinstance(node, P.GroupBy):
+        f = frame_of(node.source)
+        n = f.primary.nrows
+        keys = jnp.asarray(
+            compile_rowfn_frame(node.keyexpr, f.tables), jnp.int32
+        )
+        _, _, srt = _key_info(f, node.keyexpr)
+        srt = srt and allow_sorted
+        lanes = [
+            jnp.broadcast_to(
+                jnp.asarray(compile_rowfn_frame(fx, f.tables), jnp.float32),
+                (n,),
+            )
+            for _, fx in node.values
+        ]
+        vals = jnp.stack(lanes, axis=1)
+        cap = _capacity(f, node.keyexpr, node.choice.ds, sigma)
+        d = groupby(
+            f.primary,
+            keys,
+            vals,
+            node.choice.ds,
+            cap,
+            assume_sorted=srt and (node.choice.hinted or node.hinted),
+            ops=tuple(node.ops),
+        )
+        env[node.out] = BuiltDict(
+            d, node.choice, lanes=tuple(a for a, _ in node.values)
+        )
+
+    elif isinstance(node, P.GroupJoin):
+        f = frame_of(node.source)
+        b = env[node.build]
+        assert isinstance(b, BuiltDict), node.build
+        n = f.primary.nrows
+        keys = jnp.asarray(
+            compile_rowfn_frame(node.keyexpr, f.tables), jnp.int32
+        )
+        _, _, srt = _key_info(f, node.keyexpr)
+        srt = srt and allow_sorted
+        f_vals = jnp.broadcast_to(
+            jnp.asarray(compile_rowfn_frame(node.f_expr, f.tables), jnp.float32),
+            (n,),
+        )
+        cap = _capacity(f, node.keyexpr, node.choice.ds, sigma)
+        d = groupjoin(
+            f.primary,
+            keys,
+            f_vals[:, None],
+            b.res,
+            node.choice.ds,
+            cap,
+            sorted_probes=srt and (node.hinted or b.choice.hinted),
+            assume_sorted=srt and node.choice.hinted,
+        )
+        env[node.out] = BuiltDict(d, node.choice, lanes=("_0",))
+
+    elif isinstance(node, P.Reduce):
+        f = frame_of(node.source)
+        lanes: Tuple[str, ...] = ("m", "c", "c_c")
+        lookup_vals = None
+        if node.lookup_sym is not None:
+            b = env[node.lookup_sym]
+            assert isinstance(b, BuiltDict), node.lookup_sym
+            lanes = b.lanes or lanes
+            keys = jnp.asarray(
+                compile_rowfn_frame(node.lookup_key, f.tables), jnp.int32
+            )
+            _, _, srt = _key_info(f, node.lookup_key)
+            srt = srt and allow_sorted
+            lookup_vals, found = lookup_dict(
+                b.res,
+                keys,
+                valid=f.primary.mask,
+                sorted_probes=srt and b.choice.hinted,
+            )
+            f = f.with_mask(found)
+        fops = node.ops or ("sum",) * len(node.fields)
+        total = {}
+        for k, (name, fx) in enumerate(node.fields):
+            col = _reduce_field(
+                fx, f, node.lookup_var, lookup_vals, lanes, params=params
+            )
+            total[name] = scalar_aggregate(f.primary, col, ops=(fops[k],))[0]
+        refs[node.out] = total
+
+    elif isinstance(node, P.Pipeline):
+        _run_pipeline(node, env, refs, db, sigma, allow_sorted, params)
+
+    elif isinstance(node, P.Repartition):
+        if repartition_impl is not None:
+            env[node.out] = repartition_impl(
+                node, frame_of(node.source), params=params
+            )
+        else:  # single shard: identity (rows already all "here")
+            env[node.out] = env[node.source]
+
+    elif isinstance(node, P.Exchange):
+        if exchange_impl is not None:
+            if node.kind == "shuffle":
+                env[node.out] = exchange_impl(node, env[node.source])
+            else:  # allreduce over a scalar ref record
+                refs[node.source] = exchange_impl(node, refs[node.source])
+        else:  # single shard: identity
+            if node.source in env:
+                env[node.out] = env[node.source]
+
+    else:  # pragma: no cover
+        raise AssertionError(node)
 
 
 # ---------------------------------------------------------------------------
@@ -671,13 +739,20 @@ def _run_pipeline(pipe, env, refs, db, sigma, allow_sorted, params):
     out = fn(frame_cols, frame_masks, dict_tables, src_cols, dict(params or {}))
 
     term = rest[-1]
-    kind = holder[0]
+    _publish_region_result(term, out, holder[0], holder[1], f, env, refs)
+
+
+def _publish_region_result(term, out, kind, sorted_on, f, env, refs):
+    """Store a region fn's raw terminal value under the terminal's symbol —
+    shared by per-query (``_run_pipeline``) and shared-scan region demux."""
+    from repro.core import plan as P
+
     if kind == "refs":
         refs[term.out] = out
     elif kind == "table":
         cols, mask = out
         n = f.tables[f.order[0]].nrows
-        env[term.out] = Table(dict(cols), n, mask=mask, sorted_on=holder[1])
+        env[term.out] = Table(dict(cols), n, mask=mask, sorted_on=sorted_on)
     elif kind == "index":
         env[term.out] = BuiltDict(
             DictResult(term.choice.ds, out), term.choice, kind="index",
@@ -716,12 +791,6 @@ def _make_region_fn(rest, f0, builts, src_cols0, sigma, allow_sorted, need):
     holder = [None, None]
 
     def run(frame_cols, frame_masks, dict_tables, src_cols, pvals):
-        from repro.core import llql as L
-        from repro.core.lower import compile_rowfn_frame as _rowfn_frame
-
-        def rowfn(x, tables):
-            return _rowfn_frame(x, tables, pvals)
-
         f = Frame(
             {
                 v: Table(
@@ -741,155 +810,176 @@ def _make_region_fn(rest, f0, builts, src_cols0, sigma, allow_sorted, need):
             )
             for s, (ds, kind, lanes, choice) in dict_meta.items()
         }
-
-        for node in rest:
-            if isinstance(node, P.Select):
-                m = rowfn(node.pred, f.tables)
-                f = f.with_mask(jnp.asarray(m, bool))
-
-            elif isinstance(node, P.HashProbe):
-                b = denv[node.build]
-                keys = jnp.asarray(rowfn(node.keyexpr, f.tables), jnp.int32)
-                _, _, srt = _key_info(f, node.keyexpr)
-                srt = srt and allow_sorted
-                vals, found = lookup_dict(
-                    b.res,
-                    keys,
-                    valid=f.primary.mask,
-                    sorted_probes=srt and (node.hinted or b.choice.hinted),
-                )
-                ridx = jnp.where(found, vals[:, 0].astype(jnp.int32), 0)
-                gcols = {
-                    c: jnp.where(
-                        found, a[ridx], jnp.zeros((), a.dtype)
-                    )  # pruned: only columns later stages read are gathered
-                    for c, a in src_cols[node.out].items()
-                }
-                gathered = Table(gcols, f.primary.nrows, mask=found)
-                masked = f.with_mask(found)
-                f = Frame(
-                    {**masked.tables, node.inner_var: gathered},
-                    masked.order + (node.inner_var,),
-                    {**masked.rels, node.inner_var: None},
-                )
-
-            elif isinstance(node, P.Project):
-                n = f.primary.nrows
-                cols = {}
-                sorted_on: Tuple[str, ...] = ()
-                for name, fx in node.fields:
-                    col = jnp.asarray(rowfn(fx, f.tables))
-                    cols[name] = jnp.broadcast_to(col, (n,))
-                    if (
-                        not sorted_on
-                        and isinstance(fx, L.FieldAccess)
-                        and isinstance(fx.rec, L.FieldAccess)
-                        and fx.rec.name == "key"
-                        and isinstance(fx.rec.rec, L.Var)
-                        and fx.rec.rec.name in f.tables
-                        and f.tables[fx.rec.rec.name].sorted_on[:1]
-                        == (fx.name,)
-                    ):
-                        sorted_on = (name,)
-                holder[0], holder[1] = "table", sorted_on
-                return cols, f.primary.mask
-
-            elif isinstance(node, P.HashBuild):
-                keys = jnp.asarray(rowfn(node.keyexpr, f.tables), jnp.int32)
-                _, _, srt = _key_info(f, node.keyexpr)
-                srt = srt and allow_sorted
-                cap = _capacity(f, node.keyexpr, node.choice.ds, sigma)
-                d = build_index(
-                    node.choice.ds,
-                    keys,
-                    cap,
-                    valid=f.primary.mask,
-                    assume_sorted=srt and (node.choice.hinted or node.hinted),
-                )
-                holder[0] = "index"
-                return d.table
-
-            elif isinstance(node, P.GroupBy):
-                n = f.primary.nrows
-                keys = jnp.asarray(rowfn(node.keyexpr, f.tables), jnp.int32)
-                _, _, srt = _key_info(f, node.keyexpr)
-                srt = srt and allow_sorted
-                lanes = [
-                    jnp.broadcast_to(
-                        jnp.asarray(rowfn(fx, f.tables), jnp.float32), (n,)
-                    )
-                    for _, fx in node.values
-                ]
-                vals = jnp.stack(lanes, axis=1)
-                cap = _capacity(f, node.keyexpr, node.choice.ds, sigma)
-                d = groupby(
-                    f.primary,
-                    keys,
-                    vals,
-                    node.choice.ds,
-                    cap,
-                    assume_sorted=srt and (node.choice.hinted or node.hinted),
-                )
-                holder[0] = "dict"
-                return d.table
-
-            elif isinstance(node, P.GroupJoin):
-                b = denv[node.build]
-                n = f.primary.nrows
-                keys = jnp.asarray(rowfn(node.keyexpr, f.tables), jnp.int32)
-                _, _, srt = _key_info(f, node.keyexpr)
-                srt = srt and allow_sorted
-                f_vals = jnp.broadcast_to(
-                    jnp.asarray(rowfn(node.f_expr, f.tables), jnp.float32),
-                    (n,),
-                )
-                cap = _capacity(f, node.keyexpr, node.choice.ds, sigma)
-                d = groupjoin(
-                    f.primary,
-                    keys,
-                    f_vals[:, None],
-                    b.res,
-                    node.choice.ds,
-                    cap,
-                    sorted_probes=srt and (node.hinted or b.choice.hinted),
-                    assume_sorted=srt and node.choice.hinted,
-                )
-                holder[0] = "dict"
-                return d.table
-
-            elif isinstance(node, P.Reduce):
-                lanes: Tuple[str, ...] = ("m", "c", "c_c")
-                lookup_vals = None
-                if node.lookup_sym is not None:
-                    b = denv[node.lookup_sym]
-                    lanes = b.lanes or lanes
-                    keys = jnp.asarray(
-                        rowfn(node.lookup_key, f.tables), jnp.int32
-                    )
-                    _, _, srt = _key_info(f, node.lookup_key)
-                    srt = srt and allow_sorted
-                    lookup_vals, found = lookup_dict(
-                        b.res,
-                        keys,
-                        valid=f.primary.mask,
-                        sorted_probes=srt and b.choice.hinted,
-                    )
-                    f = f.with_mask(found)
-                total = {}
-                for name, fx in node.fields:
-                    col = _reduce_field(
-                        fx, f, node.lookup_var, lookup_vals, lanes,
-                        params=pvals,
-                    )
-                    total[name] = scalar_aggregate(f.primary, col)[0]
-                holder[0] = "refs"
-                return total
-
-            else:  # pragma: no cover
-                raise AssertionError(node)
-        raise AssertionError("region has no terminal")  # pragma: no cover
+        return _region_stages(
+            rest, f, denv, src_cols, pvals, sigma, allow_sorted, holder
+        )
 
     return jax.jit(run), holder
+
+
+def _region_stages(rest, f, denv, src_cols, pvals, sigma, allow_sorted, holder):
+    """Trace a region's stage list over an input frame — the ONE region body
+    shared by the per-query jitted region fn (``_make_region_fn``) and the
+    multi-branch shared-scan region fn (``_make_shared_region_fn``).  Sets
+    ``holder[0]`` to the terminal kind and returns the terminal's raw value
+    (ref record / (cols, mask) / backend table)."""
+    from repro.core import llql as L
+    from repro.core import plan as P
+    from repro.core.lower import compile_rowfn_frame as _rowfn_frame
+
+    def rowfn(x, tables):
+        return _rowfn_frame(x, tables, pvals)
+
+    for node in rest:
+        if isinstance(node, P.Select):
+            m = rowfn(node.pred, f.tables)
+            f = f.with_mask(jnp.asarray(m, bool))
+
+        elif isinstance(node, P.HashProbe):
+            b = denv[node.build]
+            keys = jnp.asarray(rowfn(node.keyexpr, f.tables), jnp.int32)
+            _, _, srt = _key_info(f, node.keyexpr)
+            srt = srt and allow_sorted
+            vals, found = lookup_dict(
+                b.res,
+                keys,
+                valid=f.primary.mask,
+                sorted_probes=srt and (node.hinted or b.choice.hinted),
+            )
+            ridx = jnp.where(found, vals[:, 0].astype(jnp.int32), 0)
+            gcols = {
+                c: jnp.where(
+                    found, a[ridx], jnp.zeros((), a.dtype)
+                )  # pruned: only columns later stages read are gathered
+                for c, a in src_cols[node.out].items()
+            }
+            gathered = Table(gcols, f.primary.nrows, mask=found)
+            masked = f.with_mask(found)
+            f = Frame(
+                {**masked.tables, node.inner_var: gathered},
+                masked.order + (node.inner_var,),
+                {**masked.rels, node.inner_var: None},
+            )
+
+        elif isinstance(node, P.Project):
+            n = f.primary.nrows
+            cols = {}
+            sorted_on: Tuple[str, ...] = ()
+            for name, fx in node.fields:
+                col = jnp.asarray(rowfn(fx, f.tables))
+                cols[name] = jnp.broadcast_to(col, (n,))
+                if (
+                    not sorted_on
+                    and isinstance(fx, L.FieldAccess)
+                    and isinstance(fx.rec, L.FieldAccess)
+                    and fx.rec.name == "key"
+                    and isinstance(fx.rec.rec, L.Var)
+                    and fx.rec.rec.name in f.tables
+                    and f.tables[fx.rec.rec.name].sorted_on[:1]
+                    == (fx.name,)
+                ):
+                    sorted_on = (name,)
+            holder[0], holder[1] = "table", sorted_on
+            return cols, f.primary.mask
+
+        elif isinstance(node, P.HashBuild):
+            keys = jnp.asarray(rowfn(node.keyexpr, f.tables), jnp.int32)
+            _, _, srt = _key_info(f, node.keyexpr)
+            srt = srt and allow_sorted
+            cap = _capacity(f, node.keyexpr, node.choice.ds, sigma)
+            d = build_index(
+                node.choice.ds,
+                keys,
+                cap,
+                valid=f.primary.mask,
+                assume_sorted=srt and (node.choice.hinted or node.hinted),
+            )
+            holder[0] = "index"
+            return d.table
+
+        elif isinstance(node, P.GroupBy):
+            n = f.primary.nrows
+            keys = jnp.asarray(rowfn(node.keyexpr, f.tables), jnp.int32)
+            _, _, srt = _key_info(f, node.keyexpr)
+            srt = srt and allow_sorted
+            lanes = [
+                jnp.broadcast_to(
+                    jnp.asarray(rowfn(fx, f.tables), jnp.float32), (n,)
+                )
+                for _, fx in node.values
+            ]
+            vals = jnp.stack(lanes, axis=1)
+            cap = _capacity(f, node.keyexpr, node.choice.ds, sigma)
+            d = groupby(
+                f.primary,
+                keys,
+                vals,
+                node.choice.ds,
+                cap,
+                assume_sorted=srt and (node.choice.hinted or node.hinted),
+                ops=tuple(node.ops),
+            )
+            holder[0] = "dict"
+            return d.table
+
+        elif isinstance(node, P.GroupJoin):
+            b = denv[node.build]
+            n = f.primary.nrows
+            keys = jnp.asarray(rowfn(node.keyexpr, f.tables), jnp.int32)
+            _, _, srt = _key_info(f, node.keyexpr)
+            srt = srt and allow_sorted
+            f_vals = jnp.broadcast_to(
+                jnp.asarray(rowfn(node.f_expr, f.tables), jnp.float32),
+                (n,),
+            )
+            cap = _capacity(f, node.keyexpr, node.choice.ds, sigma)
+            d = groupjoin(
+                f.primary,
+                keys,
+                f_vals[:, None],
+                b.res,
+                node.choice.ds,
+                cap,
+                sorted_probes=srt and (node.hinted or b.choice.hinted),
+                assume_sorted=srt and node.choice.hinted,
+            )
+            holder[0] = "dict"
+            return d.table
+
+        elif isinstance(node, P.Reduce):
+            lanes: Tuple[str, ...] = ("m", "c", "c_c")
+            lookup_vals = None
+            if node.lookup_sym is not None:
+                b = denv[node.lookup_sym]
+                lanes = b.lanes or lanes
+                keys = jnp.asarray(
+                    rowfn(node.lookup_key, f.tables), jnp.int32
+                )
+                _, _, srt = _key_info(f, node.lookup_key)
+                srt = srt and allow_sorted
+                lookup_vals, found = lookup_dict(
+                    b.res,
+                    keys,
+                    valid=f.primary.mask,
+                    sorted_probes=srt and b.choice.hinted,
+                )
+                f = f.with_mask(found)
+            fops = node.ops or ("sum",) * len(node.fields)
+            total = {}
+            for k, (name, fx) in enumerate(node.fields):
+                col = _reduce_field(
+                    fx, f, node.lookup_var, lookup_vals, lanes,
+                    params=pvals,
+                )
+                total[name] = scalar_aggregate(
+                    f.primary, col, ops=(fops[k],)
+                )[0]
+            holder[0] = "refs"
+            return total
+
+        else:  # pragma: no cover
+            raise AssertionError(node)
+    raise AssertionError("region has no terminal")  # pragma: no cover
 
 
 KERNEL_SLOTS = 1 << 16  # per-dictionary resident slot bound of the fused
@@ -1033,6 +1123,8 @@ def _kernel_pipeline(pipe, rest, f, env, refs, sigma, allow_sorted, params, need
     part_terminal = False
     acc_ds = None
     out_cap = 0
+    # per-lane semiring combine monoids of the terminal (() = all-sum)
+    term_ops = tuple(getattr(term, "ops", ()) or ())
     if isinstance(term, (P.GroupBy, P.GroupJoin)):
         acc_ds = term.choice.ds
         if acc_ds not in registry.names():
@@ -1104,7 +1196,9 @@ def _kernel_pipeline(pipe, rest, f, env, refs, sigma, allow_sorted, params, need
         import functools as _ft
 
         accumulate = _ft.partial(
-            registry.get(acc_ds).resident_accumulate, max_probes=_fp.MAX_PROBES
+            registry.get(acc_ds).resident_accumulate,
+            max_probes=_fp.MAX_PROBES,
+            ops=term_ops or None,
         )
 
     def row_fn(tile_cols, tile_live, lookups, tile_scalars):
@@ -1193,6 +1287,7 @@ def _kernel_pipeline(pipe, rest, f, env, refs, sigma, allow_sorted, params, need
         accumulate=accumulate,
         radix=radix_plan,
         interpret=interpret,
+        lane_ops=term_ops or None,
     )
     REGION_MODES[term.out] = "kernel-radix" if radix_sym else "kernel-resident"
     if out_spec[0] == "dict":
@@ -1202,13 +1297,16 @@ def _kernel_pipeline(pipe, rest, f, env, refs, sigma, allow_sorted, params, need
             tv = tv.reshape(tk.shape[0], -1)
         if registry.accumulates_resident(acc_ds) and not part_terminal:
             # hash-family terminal: the scratch IS the family's layout
+            # (min/max lanes: clear the identity residue off dead slots)
+            tv = dbase.finalize_dead(tk, tv, term_ops, dbase.EMPTY)
             table = dbase.HashTable(tk, tv, jnp.int32(_fp.MAX_PROBES))
         else:
             # sort-family (or partition-flattened) terminal: finalize the
             # scratch entries through the family's own build — keys are
             # already unique per entry, so no sums move (exact)
+            kw = {} if dbase.all_sum(term_ops) else {"ops": term_ops}
             table = registry.get(acc_ds).build(
-                tk, tv, out_cap, valid=tk != dbase.EMPTY
+                tk, tv, out_cap, valid=tk != dbase.EMPTY, **kw
             )
         res = DictResult(acc_ds, table)
         if isinstance(term, P.GroupBy):
@@ -1248,6 +1346,334 @@ def _reduce_field(fx, frame: Frame, lookup_var, lookup_vals, lane_names, params=
         return compile_rowfn_frame(x, frame.tables, params)
 
     return jnp.asarray(go(fx), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# cross-plan shared-scan execution (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+
+def _make_shared_region_fn(specs, sigma, allow_sorted):
+    """Build ONE jitted function executing every branch of a shared-scan
+    region over the same fact stream.  Each branch re-frames the shared
+    scan columns under its own variable and traces the common region body
+    (``_region_stages``); because all branches read the *same* traced
+    column arrays, XLA CSE collapses the loads and the fact relation
+    streams HBM once no matter how many branches consume it."""
+    holders = [[None, None] for _ in specs]
+
+    def run(scan_cols, scan_mask, dict_tables_list, src_cols_list, pvals_list):
+        outs = []
+        for spec, holder, dts, scs, pv in zip(
+            specs, holders, dict_tables_list, src_cols_list, pvals_list
+        ):
+            var, rel, n, sorted_on, rest, dict_meta = spec
+            t = Table(dict(scan_cols), n, mask=scan_mask, sorted_on=sorted_on)
+            f = Frame({var: t}, (var,), {var: rel})
+            denv = {
+                s: BuiltDict(
+                    DictResult(ds, dts[s]), choice, lanes=lanes, kind=kind
+                )
+                for s, (ds, kind, lanes, choice) in dict_meta.items()
+            }
+            outs.append(
+                _region_stages(
+                    rest, f, denv, scs, pv, sigma, allow_sorted, holder
+                )
+            )
+        return tuple(outs)
+
+    return jax.jit(run), holders
+
+
+def _run_shared_region(region, envs, refss, db, sigma, allow_sorted, params_list):
+    """Execute one shared-scan region: every branch's filters, probes, and
+    semiring terminals run against ONE pass over ``region.source``, then
+    results demultiplex into each owning plan's environment.
+
+    Under the Pallas kernel policy each branch dispatches through its own
+    ``_run_pipeline`` instead — the fused kernel's per-region residency
+    accounting stays honest and ``REGION_MODES`` reports the path that
+    actually produced each terminal; the scan dedup is an XLA-path win."""
+    from repro.core import plan as P
+    from repro.kernels import ops as _kops
+
+    use_pallas, _ = _kops.fused_pipeline_policy()
+    if use_pallas:
+        for br in region.branches:
+            _run_pipeline(
+                br.pipe, envs[br.plan_idx], refss[br.plan_idx], db, sigma,
+                allow_sorted, params_list[br.plan_idx],
+            )
+        return
+
+    rel = region.source
+    t0 = db[rel]
+    union_cols: set = set()
+    branch_info = []
+    for br in region.branches:
+        stages = br.pipe.stages
+        sc = stages[0]
+        assert isinstance(sc, P.Scan) and sc.source == rel, br
+        rest = stages[1:]
+        need = P.needed_columns(stages)
+        # "__val__"/"__key__" are pseudo-columns (bag multiplicity / whole
+        # key) resolved off the frame, not physical fact columns
+        union_cols.update(
+            c for c in need.get(sc.var, ()) if c in t0.columns
+        )
+        env = envs[br.plan_idx]
+        dict_syms = []
+        for node in rest:
+            if isinstance(node, (P.HashProbe, P.GroupJoin)):
+                dict_syms.append(node.build)
+            elif isinstance(node, P.Reduce) and node.lookup_sym is not None:
+                dict_syms.append(node.lookup_sym)
+        dict_syms = tuple(dict.fromkeys(dict_syms))
+        builts = {s: env[s] for s in dict_syms}
+        src_cols: Dict[str, Dict[str, jax.Array]] = {}
+        for node in rest:
+            if isinstance(node, P.HashProbe):
+                b = builts[node.build]
+                want = need.get(node.inner_var, ())
+                src_cols[node.out] = {
+                    c: b.src.col(c) for c in b.src.names() if c in want
+                }
+        branch_info.append((br, sc, rest, dict_syms, builts, src_cols))
+
+    statics = (
+        "shared",
+        rel,
+        t0.nrows,
+        t0.sorted_on,
+        t0.mask is not None,
+        tuple(sorted(union_cols)),
+        tuple(
+            (
+                repr((br.pipe.source, br.pipe.stages)),
+                tuple(
+                    (s, builts[s].res.ds, builts[s].kind, builts[s].lanes,
+                     builts[s].choice)
+                    for s in dict_syms
+                ),
+                tuple((o, tuple(sorted(cs))) for o, cs in src_cols.items()),
+            )
+            for br, sc, rest, dict_syms, builts, src_cols in branch_info
+        ),
+        bool(allow_sorted),
+        _sigma_signature(sigma),
+    )
+    entry = _REGION_CACHE.get(statics)
+    if entry is None:
+        specs = tuple(
+            (
+                sc.var,
+                rel,
+                t0.nrows,
+                t0.sorted_on,
+                rest,
+                {
+                    s: (b.res.ds, b.kind, b.lanes, b.choice)
+                    for s, b in builts.items()
+                },
+            )
+            for br, sc, rest, dict_syms, builts, src_cols in branch_info
+        )
+        entry = _make_shared_region_fn(specs, sigma, allow_sorted)
+        if len(_REGION_CACHE) >= _REGION_CACHE_MAX:
+            _REGION_CACHE.pop(next(iter(_REGION_CACHE)))
+        _REGION_CACHE[statics] = entry
+    fn, holders = entry
+
+    scan_cols = {c: t0.col(c) for c in sorted(union_cols)}
+    dict_tables_list = [
+        {s: bi[4][s].res.table for s in bi[3]} for bi in branch_info
+    ]
+    src_cols_list = [bi[5] for bi in branch_info]
+    pvals_list = [
+        dict(params_list[bi[0].plan_idx] or {}) for bi in branch_info
+    ]
+    outs = fn(scan_cols, t0.mask, dict_tables_list, src_cols_list, pvals_list)
+
+    n_br = len(region.branches)
+    for (br, sc, rest, *_), holder, out in zip(branch_info, holders, outs):
+        term = rest[-1]
+        # publication frame carries the FULL scan table: an index terminal's
+        # ``src`` serves downstream probe gathers, which may read columns
+        # the shared region itself never touched
+        f = Frame({sc.var: t0}, (sc.var,), {sc.var: rel})
+        _publish_region_result(
+            term, out, holder[0], holder[1], f,
+            envs[br.plan_idx], refss[br.plan_idx],
+        )
+        REGION_MODES[term.out] = f"shared:{n_br}"
+
+
+def execute_shared_plan(
+    sp,
+    db: Dict[str, "Table"],
+    sigma=None,
+    allow_sorted: bool = True,
+    params_list=None,
+    exchange_impl=None,
+    repartition_impl=None,
+):
+    """Execute every plan of a ``SharedPlan``, paying each shared-scan
+    region's fact pass once.
+
+    A small readiness-driven interleave: each plan advances node by node
+    (via ``_exec_node``) until it stalls on a not-yet-run shared region;
+    a region runs as soon as every branch's external inputs (build-side
+    dictionaries from the owning plan) are available; region-covered nodes
+    are skipped — the region publishes their terminal symbols directly.
+    Results come back in ``sp.plans`` order, one per plan, each identical
+    (bitwise) to what per-query ``execute_plan`` would return."""
+    from repro.core import plan as P
+
+    nplans = len(sp.plans)
+    if params_list is None:
+        params_list = [None] * nplans
+    envs: List[Dict[str, object]] = [{} for _ in range(nplans)]
+    refss: List[Dict[str, object]] = [{} for _ in range(nplans)]
+
+    region_of: Dict[Tuple[int, str], int] = {}
+    for ri, rg in enumerate(sp.regions):
+        for b in rg.branches:
+            for s in b.covered:
+                region_of[(b.plan_idx, s)] = ri
+    done = [False] * len(sp.regions)
+    pos = [0] * nplans
+
+    def _ready(rg) -> bool:
+        for b in rg.branches:
+            own = {st.out for st in b.pipe.stages}
+            env, refs = envs[b.plan_idx], refss[b.plan_idx]
+            for st in b.pipe.stages:
+                for r in P._node_refs(st):
+                    if r in own or r == b.pipe.source or r in db:
+                        continue
+                    if r not in env and r not in refs:
+                        return False
+        return True
+
+    while True:
+        progress = False
+        for i, p in enumerate(sp.plans):
+            while pos[i] < len(p.nodes):
+                nd = p.nodes[pos[i]]
+                ri = region_of.get((i, nd.out))
+                if ri is not None and not done[ri]:
+                    break  # stalled on a pending shared region
+                if ri is None:
+                    _exec_node(
+                        nd, envs[i], refss[i], db, sigma, allow_sorted,
+                        params_list[i], exchange_impl, repartition_impl,
+                    )
+                pos[i] += 1
+                progress = True
+        if all(pos[i] >= len(p.nodes) for i, p in enumerate(sp.plans)):
+            break
+        for ri, rg in enumerate(sp.regions):
+            if not done[ri] and _ready(rg):
+                _run_shared_region(
+                    rg, envs, refss, db, sigma, allow_sorted, params_list
+                )
+                done[ri] = True
+                progress = True
+        if not progress:  # pragma: no cover
+            raise RuntimeError(
+                "shared-scan scheduler stalled: a region's inputs depend on "
+                "nodes the region itself covers"
+            )
+    return [
+        _plan_result(p, envs[i], refss[i]) for i, p in enumerate(sp.plans)
+    ]
+
+
+class SharedExecutable:
+    """A compiled multi-query batch: ONE jitted function runs every plan of
+    a ``SharedPlan``, shared regions paying the fact-table pass once.
+    Output order matches ``sp.plans``; each result is wrapped exactly like
+    the single-query ``Executable``'s, so callers demux by position."""
+
+    def __init__(self, sp, db: Dict[str, "Table"], sigma=None):
+        self.sp = sp
+        self.sigma = sigma
+        self.trace_count = 0
+        self.calls = 0
+        self._metas: Optional[Tuple[Tuple[str, object], ...]] = None
+        self._sorted_meta = {rel: t.sorted_on for rel, t in db.items()}
+
+        def _run(cols, masks, pvals_list):
+            self.trace_count += 1  # python side effect: fires per trace only
+            local = {}
+            for rel, rc in cols.items():
+                n = next(iter(rc.values())).shape[0]
+                local[rel] = Table(
+                    rc, n, mask=masks[rel], sorted_on=self._sorted_meta[rel]
+                )
+            outs = execute_shared_plan(
+                self.sp, local, sigma=self.sigma, params_list=list(pvals_list)
+            )
+            metas, flat = [], []
+            for out in outs:
+                if isinstance(out, DictResult):
+                    metas.append(("dict", out.ds))
+                    flat.append(out.arrays())
+                elif isinstance(out, Table):
+                    metas.append(("table", out.sorted_on))
+                    flat.append((out.columns, out.live_mask()))
+                elif isinstance(out, dict):
+                    metas.append(("refs", None))
+                    flat.append(out)
+                else:
+                    raise TypeError(
+                        f"shared executable supports dictionary, relation, "
+                        f"and scalar-record results, got {type(out).__name__}"
+                    )
+            self._metas = tuple(metas)
+            return tuple(flat)
+
+        self._fn = jax.jit(_run)
+
+    def coerce_params(self, params_list=None):
+        params_list = params_list or [None] * len(self.sp.plans)
+        return tuple(
+            coerce_bindings(p, params_list[i])
+            for i, p in enumerate(self.sp.plans)
+        )
+
+    def __call__(self, db: Dict[str, "Table"], params_list=None):
+        self.calls += 1
+        cols, masks = Executable._db_arrays(db)
+        out = self._fn(cols, masks, self.coerce_params(params_list))
+        res = []
+        for (kind, aux), o in zip(self._metas, out):
+            if kind == "dict":
+                res.append(PlanResult(aux, *o))
+            elif kind == "table":
+                c, m = o
+                n = next(iter(c.values())).shape[0]
+                res.append(Table(dict(c), n, mask=m, sorted_on=aux))
+            else:
+                res.append(o)
+        return res
+
+
+_SHARED_EXEC_CACHE: Dict[tuple, "SharedExecutable"] = {}
+
+
+def cached_shared_executable(sp, db: Dict[str, "Table"], sigma=None):
+    """Shared-batch twin of ``cached_executable``: keyed by the SharedPlan
+    fingerprint (plan fingerprints + merged regions), schema, and Σ."""
+    key = (sp.fingerprint(), _db_signature(db), _sigma_signature(sigma))
+    ex = _SHARED_EXEC_CACHE.get(key)
+    if ex is None:
+        ex = SharedExecutable(sp, db, sigma=sigma)
+        if len(_SHARED_EXEC_CACHE) >= _EXEC_CACHE_MAX:
+            _SHARED_EXEC_CACHE.pop(next(iter(_SHARED_EXEC_CACHE)))
+        _SHARED_EXEC_CACHE[key] = ex
+    return ex
 
 
 # ---------------------------------------------------------------------------
@@ -1502,6 +1928,7 @@ def exec_cache_stats() -> Dict[str, int]:
 
 def clear_exec_cache() -> None:
     _EXEC_CACHE.clear()
+    _SHARED_EXEC_CACHE.clear()
     _EXEC_CACHE_STATS.update(hits=0, misses=0)
 
 

@@ -188,6 +188,7 @@ def _kernel(
     n_tiles,
     block,
     part_terminal,
+    lane_ops,
 ):
     nc = len(col_meta)
     nd = sum(2 + m[2] for m in dict_meta)
@@ -270,7 +271,11 @@ def _kernel(
         @pl.when(fresh)
         def _init():
             tk_scr[...] = jnp.full_like(tk_scr, dbase.EMPTY)
-            tv_scr[...] = jnp.zeros_like(tv_scr)
+            # per-lane combine identities (all-zeros when every lane sums)
+            tv_scr[...] = (
+                jnp.zeros_like(tv_scr)
+                + dbase.lane_identity_row(lane_ops, tv_scr.shape[1])[None, :]
+            )
 
         ks = jnp.where(live, keys, dbase.PAD)
         tk, tv = accumulate(tk_scr[...], tv_scr[...], ks, vals, live)
@@ -289,17 +294,45 @@ def _kernel(
                 out_keys_ref[...] = tk_scr[...]
                 out_vals_ref[...] = tv_scr[...]
 
-    else:  # scalar reduce: running [1, V] sum in scratch
+    else:  # scalar reduce: running [1, V] per-lane combine in scratch
         (out_ref,) = out_refs
         (sum_scr,) = acc_refs
+        ident = dbase.lane_identity_row(lane_ops, sum_scr.shape[1])
 
         @pl.when(i == 0)
         def _init_sum():
-            sum_scr[...] = jnp.zeros_like(sum_scr)
+            sum_scr[...] = jnp.zeros_like(sum_scr) + ident[None, :]
 
-        sum_scr[...] += jnp.sum(
-            jnp.where(live[:, None], vals, 0.0), axis=0, keepdims=True
-        )
+        if dbase.all_sum(lane_ops):
+            sum_scr[...] += jnp.sum(
+                jnp.where(live[:, None], vals, 0.0), axis=0, keepdims=True
+            )
+        else:
+            acc = sum_scr[...]
+            masked = jnp.where(live[:, None], vals, ident[None, :])
+            lanes = []
+            for j, op in enumerate(lane_ops):
+                col = masked[:, j : j + 1]  # [block, 1] — stays 2D for TPU
+                if op == "sum":
+                    lanes.append(
+                        acc[:, j : j + 1]
+                        + jnp.sum(col, axis=0, keepdims=True)
+                    )
+                elif op == "min":
+                    lanes.append(
+                        jnp.minimum(
+                            acc[:, j : j + 1],
+                            jnp.min(col, axis=0, keepdims=True),
+                        )
+                    )
+                else:
+                    lanes.append(
+                        jnp.maximum(
+                            acc[:, j : j + 1],
+                            jnp.max(col, axis=0, keepdims=True),
+                        )
+                    )
+            sum_scr[...] = jnp.concatenate(lanes, axis=1)
 
         @pl.when(i == n_tiles - 1)
         def _finish_sum():
@@ -318,6 +351,7 @@ def fused_pipeline(
     radix: Optional[RadixPlan] = None,
     block: int = ROW_BLOCK,
     interpret: bool = True,
+    lane_ops: Optional[Tuple[str, ...]] = None,  # per-lane combine monoids
 ):
     """Run one fused region.  Returns ``(table_keys [C], table_vals [C, V])``
     for dictionary terminals (the ``accumulate`` hook's layout — duplicate
@@ -327,7 +361,7 @@ def fused_pipeline(
     :func:`radix_route`."""
     n = live.shape[0]
     accumulate = accumulate or functools.partial(
-        ht_linear.resident_accumulate, max_probes=MAX_PROBES
+        ht_linear.resident_accumulate, max_probes=MAX_PROBES, ops=lane_ops
     )
     col_names = tuple(sorted(cols))
     if radix is None:
@@ -461,6 +495,7 @@ def fused_pipeline(
             n_tiles=n_tiles,
             block=block,
             part_terminal=part_terminal,
+            lane_ops=lane_ops,
         ),
         grid_spec=grid_spec,
         out_shape=out_shape,

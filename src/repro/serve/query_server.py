@@ -14,9 +14,16 @@ scalars (DESIGN.md §6).
 Micro-batching: each ``step()`` drains up to ``max_batch`` queued requests
 for the *same* query shape and runs them as a single vmapped execution
 (``Executable.call_batched``), padded to power-of-two buckets so the number
-of distinct traces stays logarithmic.  Warm/cold latency and throughput
-counters are exposed through ``stats()`` — ``benchmarks/serve_bench.py``
-turns them into the BENCH_serve.json record the CI perf gate enforces.
+of distinct traces stays logarithmic.  Draining is round-based: a step
+serves only requests that were queued when its round began, so a stream of
+one shape can never starve an earlier request of another (arrival-order
+fairness).  With ``share_scans=True`` a round's batch may mix *different*
+query shapes whose plans share a fact-table scan: the batch executes as one
+``SharedPlan`` pass (``plan.merge_shared_scans`` +
+``engine.cached_shared_executable`` — DESIGN.md §9) and responses demux
+back to their requests by rid.  Warm/cold latency and throughput counters
+are exposed through ``stats()`` — ``benchmarks/serve_bench.py`` turns them
+into the BENCH_serve.json record the CI perf gate enforces.
 """
 from __future__ import annotations
 
@@ -60,6 +67,7 @@ class _Shape:
     executable: E.Executable
     choices: Dict[str, object]
     compile_s: float  # cold cost actually paid: synthesis + lowering + jit
+    plan: object = None  # fused physical plan (shared-scan merge input)
     served: int = 0
     busy_s: float = 0.0  # execution wall attributed to this shape
 
@@ -71,20 +79,25 @@ class QueryServer:
         delta=None,
         queries: Optional[Dict[str, Query]] = None,
         max_batch: int = 8,
+        share_scans: bool = False,
     ):
         self.db = db
         self.delta = delta or AnalyticCostModel()
         self.queries = dict(queries or QUERIES)
         self.max_batch = max_batch
+        self.share_scans = share_scans
         self.sigma = collect_stats(db)
         self.queue: List[QueryRequest] = []
         self.finished: List[QueryResponse] = []
         self._shapes: Dict[str, _Shape] = {}
+        self._round: List[QueryRequest] = []  # current fairness round
+        self._compat: Dict[tuple, bool] = {}  # qname pair -> mergeable
         self._next_rid = 0
         self.counters = {
             "requests": 0,
             "responses": 0,
             "batches": 0,
+            "shared_batches": 0,
             "cold_compiles": 0,
             "synth_runs": 0,
             "warm_hits": 0,
@@ -110,7 +123,9 @@ class QueryServer:
         ex = E.cached_executable(plan, self.db, sigma=self.sigma)
         # trigger the trace now so the first serve measures warm execution
         ex(self.db, q.bind_defaults({}))
-        shape = _Shape(q, ex, dict(res.choices), time.perf_counter() - t0)
+        shape = _Shape(
+            q, ex, dict(res.choices), time.perf_counter() - t0, plan=plan
+        )
         self._shapes[qname] = shape
         self.counters["cold_compiles"] += 1
         return shape
@@ -149,19 +164,46 @@ class QueryServer:
         return rid
 
     # -- serving loop --------------------------------------------------------
+    def _mergeable(self, qa: str, qb: str) -> bool:
+        """Whether the two shapes' plans share a fused scan prefix — decided
+        once per (pair, Σ) by actually running the merge pass on the two
+        fused plans and caching whether it produced a region."""
+        from repro.core import plan as P
+
+        key = tuple(sorted((qa, qb)))
+        hit = self._compat.get(key)
+        if hit is None:
+            sp = P.merge_shared_scans(
+                [self._shape(qa).plan, self._shape(qb).plan],
+                sigma=self.sigma,
+            )
+            hit = bool(sp.regions)
+            self._compat[key] = hit
+        return hit
+
     def _take_batch(self) -> List[QueryRequest]:
-        """Drain up to ``max_batch`` queued requests of the head request's
-        query shape, preserving the arrival order of everything else."""
-        if not self.queue:
+        """Drain up to ``max_batch`` requests of the head request's query
+        shape (plus, under ``share_scans``, merge-compatible shapes) from
+        the current *round*, preserving the arrival order of everything
+        else.  A round is the queue snapshot taken when the previous round
+        drained: later arrivals cannot ride a round in progress, so a hot
+        shape's stream can never starve an earlier request of another shape
+        (arrival-order fairness)."""
+        if not self._round:
+            self._round, self.queue = self.queue, []
+        if not self._round:
             return []
-        qname = self.queue[0].qname
+        head = self._round[0].qname
         batch, rest = [], []
-        for req in self.queue:
-            if req.qname == qname and len(batch) < self.max_batch:
+        for req in self._round:
+            ok = req.qname == head or (
+                self.share_scans and self._mergeable(head, req.qname)
+            )
+            if ok and len(batch) < self.max_batch:
                 batch.append(req)
             else:
                 rest.append(req)
-        self.queue = rest
+        self._round = rest
         return batch
 
     def step(self) -> List[QueryResponse]:
@@ -169,20 +211,40 @@ class QueryServer:
         batch = self._take_batch()
         if not batch:
             return []
-        qname = batch[0].qname
-        warm = qname in self._shapes
+        warm = all(r.qname in self._shapes for r in batch)
         t0 = time.perf_counter()  # cold batches count compile in busy time
-        shape = self._shape(qname)
-        bindings = [shape.query.bind_defaults(r.params) for r in batch]
-        if len(batch) == 1:
-            results = [shape.executable(self.db, bindings[0])]
+        qnames = [r.qname for r in batch]
+        if len(set(qnames)) == 1:
+            shape = self._shape(batch[0].qname)
+            bindings = [shape.query.bind_defaults(r.params) for r in batch]
+            if len(batch) == 1:
+                results = [shape.executable(self.db, bindings[0])]
+            else:
+                results = shape.executable.call_batched(self.db, bindings)
+            shapes = [shape] * len(batch)
         else:
-            results = shape.executable.call_batched(self.db, bindings)
+            # cross-query batch: ONE shared pass over the common scan
+            # prefix (plan.merge_shared_scans), demuxed by request order
+            from repro.core import plan as P
+
+            shapes = [self._shape(q) for q in qnames]
+            sp = P.merge_shared_scans(
+                [s.plan for s in shapes], sigma=self.sigma
+            )
+            ex = E.cached_shared_executable(sp, self.db, sigma=self.sigma)
+            bindings = [
+                s.query.bind_defaults(r.params)
+                for s, r in zip(shapes, batch)
+            ]
+            results = ex(self.db, bindings)
+            self.counters["shared_batches"] += 1
         out = []
         done = time.perf_counter()
         self._busy["warm" if warm else "cold"] += done - t0
-        shape.busy_s += done - t0
-        for req, res in zip(batch, results):
+        uniq = list({id(s): s for s in shapes}.values())
+        for s in uniq:
+            s.busy_s += (done - t0) / len(uniq)
+        for req, s, res in zip(batch, shapes, results):
             resp = QueryResponse(
                 rid=req.rid,
                 qname=req.qname,
@@ -195,7 +257,7 @@ class QueryServer:
             self._lat["warm" if warm else "cold"].append(resp.latency_s)
             self.finished.append(resp)
             out.append(resp)
-        shape.served += len(batch)
+            s.served += 1
         self.counters["responses"] += len(batch)
         self.counters["batches"] += 1
         return out
@@ -214,7 +276,7 @@ class QueryServer:
         warm_n, cold_n = len(self._lat["warm"]), len(self._lat["cold"])
         return {
             **self.counters,
-            "queued": len(self.queue),
+            "queued": len(self.queue) + len(self._round),
             "warm_p50_ms": pct(self._lat["warm"], 50) * 1e3,
             "warm_p99_ms": pct(self._lat["warm"], 99) * 1e3,
             "cold_p50_ms": pct(self._lat["cold"], 50) * 1e3,

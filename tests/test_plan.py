@@ -442,3 +442,27 @@ def test_plan_distributed_scalar_reduce():
         """
     )
     assert "COVAR_DIST_OK" in out
+
+
+def test_merge_shared_scans_describe_golden(db):
+    """The cross-plan merge is pinned by its describe() rendering — each
+    shared scan lists the terminals it feeds, tagged by plan index."""
+    sigma = collect_stats(db)
+    plans = [
+        P.fuse(compile_plan(QUERIES[q].llql(), {}), sigma=sigma)
+        for q in ("q1", "q3", "q18")
+    ]
+    sp = P.merge_shared_scans(plans, sigma=sigma)
+    assert sp.describe() == "\n".join(
+        [
+            "SharedPlan [3 plans, 2 shared scans]",
+            "SharedScan lineitem [3 branches]",
+            "  p0 | GroupBy Agg <- %1 [ht_linear] "
+            "lanes=qty,price,disc_price,charge,cnt",
+            "  p1 | GroupJoin Agg <- %2 ⋈ OD [ht_linear]",
+            "  p2 | GroupBy QtyAgg <- %0 [ht_linear] lanes=_0",
+            "SharedScan orders [2 branches]",
+            "  p1 | GroupBy OD <- %1 [ht_linear] lanes=_0",
+            "  p2 | HashBuild OD <- %1 [ht_linear]",
+        ]
+    )

@@ -89,3 +89,62 @@ def test_unknown_query_rejected(db):
     srv = QueryServer(db, queries=_subset("q1"))
     with pytest.raises(KeyError):
         srv.submit("q99")
+
+
+def test_round_fairness_later_arrivals_cannot_starve(db):
+    """Regression: a step's batch drains only requests queued when its
+    round began — a hot shape's stream arriving mid-round cannot jump an
+    earlier request of another shape."""
+    srv = QueryServer(db, queries=_subset("q1", "q18"), max_batch=4)
+    srv.submit("q18", threshold=150.0)
+    srv.submit("q18", threshold=120.0)
+    srv.submit("q1", date=0.5)  # queued before any later q18 traffic
+    first = srv.step()
+    assert [r.qname for r in first] == ["q18", "q18"]
+    # a burst of the hot shape lands while the round is in progress
+    for t in (90.0, 60.0, 30.0):
+        srv.submit("q18", threshold=t)
+    second = srv.step()  # must serve the older q1, not the fresh q18s
+    assert [r.qname for r in second] == ["q1"]
+    third = srv.step()
+    assert [r.qname for r in third] == ["q18"] * 3
+
+
+def test_share_scans_cross_query_batch_demuxes(db):
+    """With ``share_scans`` a round's mixed batch runs as ONE SharedPlan
+    pass; responses demux by rid and match per-query serving bitwise."""
+    reqs = [
+        ("q1", {"date": 0.5}),
+        ("q18", {"threshold": 150.0}),
+        ("q1", {"date": 0.9}),
+    ]
+    shared = QueryServer(
+        db, queries=_subset("q1", "q18"), max_batch=4, share_scans=True
+    )
+    shared.warm_up()
+    for qname, params in reqs:
+        shared.submit(qname, **params)
+    out = shared.step()
+    assert len(out) == 3  # one cross-query batch, demuxed
+    assert [r.qname for r in out] == ["q1", "q18", "q1"]
+    assert shared.counters["shared_batches"] == 1
+    assert all(r.batch_size == 3 and r.warm for r in out)
+
+    plain = QueryServer(db, queries=_subset("q1", "q18"), max_batch=4)
+    for qname, params in reqs:
+        plain.submit(qname, **params)
+    ref = {r.rid: r for r in plain.run_until_done()}
+    for r in out:
+        want = ref[r.rid].result
+        assert set(r.result) == set(want)
+        for k in want:
+            assert (r.result[k] == want[k]).all(), (r.qname, k)
+
+
+def test_share_scans_off_keeps_shapes_separate(db):
+    srv = QueryServer(db, queries=_subset("q1", "q18"), max_batch=4)
+    srv.submit("q1", date=0.5)
+    srv.submit("q18", threshold=150.0)
+    first = srv.step()
+    assert [r.qname for r in first] == ["q1"]
+    assert srv.counters["shared_batches"] == 0

@@ -1,0 +1,355 @@
+"""Shared-scan multi-query execution with semiring accumulators
+(DESIGN.md §9): per-lane combine monoids through every dictionary family
+and both execution paths, the cross-plan merge pass and its Δ_share
+pricing, bitwise equality of shared vs per-query execution, and the
+semiring covariance batch."""
+import numpy as np
+import pytest
+
+from repro.core import llql as L
+from repro.core import operators as O
+from repro.core import plan as P
+from repro.core.cost import AnalyticCostModel, DictChoice, FusionCostModel
+from repro.core.llql import DictNew, DictUpdate, For, Input, RefAdd, RefNew, Var, let, seq
+from repro.core.lower import compile as compile_plan
+from repro.core.synthesis import synthesize
+from repro.data import tpch
+from repro.data.table import collect_stats, from_numpy
+from repro.exec import engine as E
+from repro.exec.queries import QUERIES
+
+DELTA = AnalyticCostModel()
+
+
+@pytest.fixture(scope="module")
+def db():
+    return tpch.generate(scale=0.001, seed=0).tables()
+
+
+@pytest.fixture(scope="module")
+def sigma(db):
+    return collect_stats(db)
+
+
+def _fused(qname, sigma):
+    q = QUERIES[qname]
+    res = synthesize(q.llql(), sigma, DELTA)
+    return P.fuse(compile_plan(q.llql(), res.choices), sigma=sigma), dict(q.defaults)
+
+
+# ---------------------------------------------------------------------------
+# semiring lanes: min/max combine monoids next to sums
+# ---------------------------------------------------------------------------
+
+
+def _minmax_prog():
+    r = Var("r")
+    return let(
+        "D",
+        DictNew(None),
+        seq(
+            For(
+                "r",
+                Input("S"),
+                DictUpdate(
+                    Var("D"),
+                    r.key.get("k"),
+                    L.RecordCtor(
+                        (
+                            ("lo", L.SemiringAgg("min", (r.key.get("x"),))),
+                            ("hi", L.SemiringAgg("max", (r.key.get("x"),))),
+                            ("tot", L.SemiringAgg("sum", (r.key.get("x"),))),
+                        )
+                    ),
+                ),
+            ),
+            Var("D"),
+        ),
+    )
+
+
+def _minmax_data(n=4096, groups=37, seed=7):
+    rng = np.random.default_rng(seed)
+    k = rng.integers(0, groups, n).astype(np.int32)
+    x = rng.normal(size=n).astype(np.float32)
+    S = from_numpy({"k": k, "x": x}, sorted_on=())
+    ref = {
+        int(g): (
+            float(x[k == g].min()),
+            float(x[k == g].max()),
+            float(np.sum(x[k == g], dtype=np.float64)),
+        )
+        for g in np.unique(k)
+    }
+    return S, ref
+
+
+@pytest.mark.parametrize(
+    "ds,hinted",
+    [("ht_linear", False), ("ht_twochoice", False),
+     ("st_sorted", True), ("st_blocked", True)],
+)
+def test_semiring_minmax_groupby_all_families(ds, hinted):
+    """min/max/sum lanes in ONE aggregation dictionary, for every family:
+    per-lane combine at build, identity init, and dead-slot finalize (no
+    ±inf residue on the emitted items)."""
+    S, ref = _minmax_data()
+    sg = collect_stats({"S": S})
+    plan = compile_plan(_minmax_prog(), {"D": DictChoice(ds, hinted)})
+    got = E.execute_plan(plan, {"S": S}, sigma=sg).items_np()
+    assert set(got) == set(ref)
+    for g, (lo, hi, tot) in ref.items():
+        np.testing.assert_allclose(got[g][0], lo, rtol=1e-6)
+        np.testing.assert_allclose(got[g][1], hi, rtol=1e-6)
+        np.testing.assert_allclose(got[g][2], tot, rtol=1e-4)
+
+
+def test_semiring_minmax_fused_and_kernel_paths(monkeypatch):
+    """The same lanes through the fused region executor and the forced
+    Pallas kernel path (interpret mode): identity-initialized scratch,
+    per-lane combine at accumulate."""
+    S, ref = _minmax_data()
+    sg = collect_stats({"S": S})
+    plan = compile_plan(_minmax_prog(), {})
+    for force in (False, True):
+        if force:
+            monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+        fplan = P.fuse(plan, sigma=sg)
+        E.clear_exec_cache()
+        got = E.execute_plan(fplan, {"S": S}, sigma=sg).items_np()
+        for g, (lo, hi, tot) in ref.items():
+            np.testing.assert_allclose(got[g][0], lo, rtol=1e-6)
+            np.testing.assert_allclose(got[g][1], hi, rtol=1e-6)
+            np.testing.assert_allclose(got[g][2], tot, rtol=1e-4)
+
+
+def test_semiring_scalar_reduce_minmax():
+    """Scalar RefAdd records with min/max lanes (Reduce terminals)."""
+    S, _ = _minmax_data()
+    x = np.asarray(S.col("x"))
+    t = L.RecordT((("lo", L.DOUBLE), ("hi", L.DOUBLE), ("tot", L.DOUBLE)))
+    r = Var("r")
+    prog = let(
+        "Acc",
+        RefNew(t),
+        seq(
+            For(
+                "r",
+                Input("S"),
+                RefAdd(
+                    Var("Acc"),
+                    L.RecordCtor(
+                        (
+                            ("lo", L.SemiringAgg("min", (r.key.get("x"),))),
+                            ("hi", L.SemiringAgg("max", (r.key.get("x"),))),
+                            ("tot", L.SemiringAgg("sum_product", (r.key.get("x"), r.key.get("x")))),
+                        )
+                    ),
+                ),
+            ),
+            Var("Acc"),
+        ),
+    )
+    sg = collect_stats({"S": S})
+    out = E.execute_plan(compile_plan(prog, {}), {"S": S}, sigma=sg)
+    np.testing.assert_allclose(float(out["lo"]), x.min(), rtol=1e-6)
+    np.testing.assert_allclose(float(out["hi"]), x.max(), rtol=1e-6)
+    np.testing.assert_allclose(
+        float(out["tot"]), np.sum(x.astype(np.float64) ** 2), rtol=1e-4
+    )
+
+
+def test_all_sum_lanes_keep_legacy_plan_shape():
+    """Sum-only SemiringAgg lanes normalize to the historical encoding:
+    ``ops=()`` on the lowered nodes, so fingerprints and describe goldens
+    of existing plans cannot shift."""
+    terms = dict(O.covar_semiring_terms(with_b=True))
+    plan = compile_plan(terms["c_c"], {})
+    for n in plan.nodes:
+        assert getattr(n, "ops", ()) == (), n
+    assert "ops=" not in plan.describe()
+
+
+# ---------------------------------------------------------------------------
+# the merge pass and its Δ_share pricing
+# ---------------------------------------------------------------------------
+
+
+def test_merge_structure_five_tpch_queries(sigma):
+    plans = [_fused(qn, sigma)[0] for qn in sorted(QUERIES)]
+    sp = P.merge_shared_scans(plans, sigma=sigma)
+    got = {rg.source: len(rg.branches) for rg in sp.regions}
+    # every base-relation scan shared: lineitem by all five queries,
+    # orders by q3/q5/q9/q18, supplier by q5/q9; q18's dictionary-scan
+    # pipeline (over its own QtyAgg) must NOT merge — not a base relation
+    assert got == {"lineitem": 5, "orders": 4, "supplier": 2}
+    for rg in sp.regions:
+        assert len({b.plan_idx for b in rg.branches}) == len(rg.branches)
+
+
+def test_delta_share_prices_and_declines(sigma):
+    fusion = FusionCostModel()
+    assert fusion.delta_share(1e9, resident_bytes=0.0) > 0
+    assert fusion.delta_share(1e9, fusion.vmem_budget + 1) == float("-inf")
+    plans = [_fused(qn, sigma)[0] for qn in ("q1", "q3")]
+    # a budget no merged accumulator set can fit: every region declined
+    tiny = FusionCostModel(vmem_budget=1)
+    sp = P.merge_shared_scans(plans, sigma=sigma, fusion=tiny)
+    assert sp.regions == ()
+    # the default budget accepts the same merge
+    assert P.merge_shared_scans(plans, sigma=sigma).regions != ()
+
+
+def test_shared_plan_fingerprint_tracks_regions(sigma):
+    plans = [_fused(qn, sigma)[0] for qn in ("q1", "q3")]
+    sp = P.merge_shared_scans(plans, sigma=sigma)
+    bare = P.SharedPlan(tuple(plans), ())
+    assert sp.fingerprint() != bare.fingerprint()
+
+
+# ---------------------------------------------------------------------------
+# shared execution == per-query execution, bitwise
+# ---------------------------------------------------------------------------
+
+
+def _result_arrays(out):
+    if hasattr(out, "arrays"):
+        return tuple(np.asarray(a) for a in out.arrays())
+    if isinstance(out, dict):
+        return tuple(np.asarray(v) for _, v in sorted(out.items()))
+    raise TypeError(type(out).__name__)
+
+
+@pytest.mark.parametrize(
+    "pair",
+    [("q1", "q3"), ("q1", "q18"), ("q3", "q18"), ("q5", "q9"),
+     ("q3", "q5"), ("q9", "q18")],
+)
+def test_shared_pair_bitwise_equal_to_per_query(pair, db, sigma):
+    """Property: for merge-compatible TPC-H pairs, the shared pass returns
+    results bitwise identical to per-query fused execution — the XLA
+    region function re-frames the SAME scan columns per branch, so no sum
+    reorders."""
+    plans, params = zip(*(_fused(qn, sigma) for qn in pair))
+    sp = P.merge_shared_scans(list(plans), sigma=sigma)
+    assert sp.regions, pair  # every listed pair must actually merge
+    E.REGION_MODES.clear()
+    shared = E.execute_shared_plan(sp, db, sigma=sigma, params_list=list(params))
+    modes = dict(E.REGION_MODES)
+    per = [
+        E.execute_plan(p, db, sigma=sigma, params=pv)
+        for p, pv in zip(plans, params)
+    ]
+    for s, q in zip(shared, per):
+        for a, b in zip(_result_arrays(s), _result_arrays(q)):
+            assert a.dtype == b.dtype and a.shape == b.shape
+            assert (a == b).all()
+    # each merged terminal reports the shared mode with its branch count
+    # (REGION_MODES is symbol-keyed: skip terminals whose name is also a
+    # non-covered node of the other plan — e.g. two plans both building an
+    # "Agg" — where the later per-plan region legitimately overwrites it)
+    covered = {
+        (b.plan_idx, s)
+        for rg in sp.regions
+        for b in rg.branches
+        for s in b.covered
+    }
+    clobbered = set()
+    for i, p in enumerate(plans):
+        for n in p.nodes:
+            outs = (
+                [st.out for st in n.stages]
+                if isinstance(n, P.Pipeline)
+                else [n.out]
+            )
+            clobbered.update(o for o in outs if (i, o) not in covered)
+    checked = 0
+    for rg in sp.regions:
+        for b in rg.branches:
+            if b.pipe.out not in clobbered:
+                assert modes[b.pipe.out] == f"shared:{len(rg.branches)}", modes
+                checked += 1
+    assert checked > 0
+
+
+def test_shared_executable_demux_and_cache(db, sigma):
+    plans, params = zip(*(_fused(qn, sigma) for qn in ("q1", "q3", "q18")))
+    sp = P.merge_shared_scans(list(plans), sigma=sigma)
+    ex = E.cached_shared_executable(sp, db, sigma=sigma)
+    outs = ex(db, list(params))
+    assert len(outs) == 3
+    traces = ex.trace_count
+    outs2 = ex(db, list(params))  # rebind: no retrace
+    assert ex.trace_count == traces
+    assert E.cached_shared_executable(sp, db, sigma=sigma) is ex
+    for o1, o2 in zip(outs, outs2):
+        for a, b in zip(_result_arrays(o1), _result_arrays(o2)):
+            assert (a == b).all()
+
+
+# ---------------------------------------------------------------------------
+# sharding guard-rails
+# ---------------------------------------------------------------------------
+
+
+def test_non_sum_lanes_refused_under_sharding():
+    """Cross-shard merges (exchange rebuilds, psum of partials) combine by
+    +; plans carrying min/max lanes must be rejected loudly, not silently
+    mis-merged."""
+    from repro.exec import distributed as D
+
+    plan = compile_plan(_minmax_prog(), {})
+    with pytest.raises(NotImplementedError, match="semiring"):
+        D._check_shardable_ops(plan)
+    S, _ = _minmax_data()
+    fused = P.fuse(plan, sigma=collect_stats({"S": S}))
+    with pytest.raises(NotImplementedError, match="semiring"):
+        D._check_shardable_ops(fused)
+
+
+# ---------------------------------------------------------------------------
+# the in-DB-ML covariance batch (§3.8 on the semiring path)
+# ---------------------------------------------------------------------------
+
+
+def test_covar_semiring_batch_matches_numpy():
+    rng = np.random.default_rng(3)
+    n_fact, n_dim = 30_000, 700
+    c = rng.normal(size=n_dim).astype(np.float32)
+    sk = np.sort(rng.integers(0, n_dim, n_fact)).astype(np.int32)
+    i = rng.normal(size=n_fact).astype(np.float32)
+    u = (0.8 * i - 0.5 * c[sk] + 0.1 * rng.normal(size=n_fact)).astype(np.float32)
+    S = from_numpy({"s": sk, "i": i, "u": u}, sorted_on=("s",))
+    R = from_numpy({"s": np.arange(n_dim, dtype=np.int32), "c": c}, sorted_on=("s",))
+    db = {"S": S, "R": R}
+    sg = collect_stats(db)
+
+    terms = O.covar_semiring_terms(with_b=True)
+    plans = [
+        P.fuse(
+            compile_plan(prog, synthesize(prog, sg, DELTA).choices), sigma=sg
+        )
+        for _, prog in terms
+    ]
+    sp = P.merge_shared_scans(plans, sigma=sg)
+    # the five S-side reduces share one S pass; the Ragg builds one R pass
+    got_regions = {rg.source: len(rg.branches) for rg in sp.regions}
+    assert got_regions == {"S": 5, "R": 3}
+
+    outs = E.cached_shared_executable(sp, db, sigma=sg)(db, [{}] * len(plans))
+    got = {name: float(out[name]) for (name, _), out in zip(terms, outs)}
+    f64 = np.float64
+    ref = {
+        "i_i": np.sum(i.astype(f64) ** 2),
+        "i_c": np.sum(i.astype(f64) * c[sk].astype(f64)),
+        "c_c": np.sum(c[sk].astype(f64) ** 2),
+        "b_i": np.sum(i.astype(f64) * u.astype(f64)),
+        "b_c": np.sum(c[sk].astype(f64) * u.astype(f64)),
+    }
+    for k, v in ref.items():
+        np.testing.assert_allclose(got[k], v, rtol=1e-3)
+    # close the loop: θ from the batch recovers the generating model
+    A = np.array([[got["i_i"], got["i_c"]], [got["i_c"], got["c_c"]]])
+    b = np.array([got["b_i"], got["b_c"]])
+    theta = np.linalg.solve(A, b)
+    assert abs(theta[0] - 0.8) < 0.05 and abs(theta[1] + 0.5) < 0.05
