@@ -10,7 +10,9 @@ record against its committed baseline without per-benchmark glue."""
 from __future__ import annotations
 
 import json
+import resource
 import subprocess
+import sys
 import time
 from typing import Callable, Dict, List, Optional
 
@@ -56,6 +58,25 @@ def git_sha() -> str:
         return "unknown"
 
 
+def memory_stats() -> Dict[str, object]:
+    """Peak host RSS (bytes) and device-memory high-water for the record.
+    ``ru_maxrss`` is KiB on Linux, bytes on macOS; device stats come from
+    the backend's ``memory_stats()`` (``None`` on the CPU backend — recorded
+    as such rather than guessed)."""
+    maxrss = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    peak_rss = int(maxrss) if sys.platform == "darwin" else int(maxrss) * 1024
+    peak_dev = None
+    try:
+        stats = jax.local_devices()[0].memory_stats()
+        if stats:
+            peak_dev = int(
+                stats.get("peak_bytes_in_use", stats.get("bytes_in_use", 0))
+            )
+    except Exception:
+        pass
+    return {"peak_host_rss_bytes": peak_rss, "peak_device_bytes": peak_dev}
+
+
 def write_record(
     path: str,
     bench: str,
@@ -75,6 +96,7 @@ def write_record(
         "bench": bench,
         "git_sha": git_sha(),
         "shards": shards,
+        "memory": memory_stats(),
         "results": results,
         **({"checks": checks} if checks else {}),
         **extra,

@@ -19,7 +19,8 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument(
         "--only", default=None,
-        help="comma list: micro,costmodel,groupby,tpch,indbml,sharedscan,moe",
+        help="comma list: micro,costmodel,groupby,tpch,indbml,sharedscan,"
+        "moe,oocore",
     )
     ap.add_argument(
         "--out", default=None,
@@ -71,6 +72,13 @@ def main() -> None:
         from . import moe_dispatch_bench
 
         moe_dispatch_bench.run()
+    if want("oocore"):
+        from . import oocore_bench
+
+        # same scale as the gated CI config: below 0.05 the chunk working
+        # set rivals the decoded fact table and the memory ratio is
+        # meaningless, so the smoke only drops repeats
+        oocore_bench.run(scale=0.05, repeats=5 if args.full else 3)
 
     print(f"# total {time.time()-t0:.1f}s, {len(common.ROWS)} rows", file=sys.stderr)
     if args.out:

@@ -352,6 +352,208 @@ class FusionCostModel:
         return float(saved_bytes) / self.hbm_bytes_per_sec
 
 
+# ---------------------------------------------------------------------------
+# out-of-core storage: per-encoding decode + H2D transfer terms (DESIGN §10)
+# ---------------------------------------------------------------------------
+
+#: chunk encodings the storage layer can choose per column (data/storage.py)
+ENCODINGS = ("plain", "dict", "rle", "bitpack", "for")
+
+
+@dataclass(frozen=True)
+class StorageCostModel:
+    """Prices the encoded-streamed vs decoded-resident decision per column.
+
+    A *streamed* column pays host→device transfer for its **encoded** bytes
+    on every pass plus an in-register decode; a *resident* column pays the
+    transfer of its **decoded** bytes once and device-memory rent forever.
+    Alg. 1's storage extension scores each encoding as
+
+        h2d_seconds(encoded_bytes) + decode_seconds(kind, rows)
+
+    and picks the cheapest representation whose working set fits the
+    explicit ``memory_budget_bytes`` (``storage_plan``).  Decode rates are
+    elements/second of the vectorized shift-mask (bit-packed / FOR),
+    gather (dictionary), and run-expansion (RLE) loops — decode is far
+    cheaper than the transfer it elides, which is why compression wins.
+    """
+
+    h2d_bytes_per_sec: float = 2.5e10  # PCIe-ish host→device bandwidth
+    device_bytes_per_sec: float = 8.0e11  # post-decode on-device traffic
+    decode_plain: float = float("inf")  # elems/sec (no decode work)
+    decode_bitpack: float = 2.0e10  # shift + mask unpack
+    decode_for: float = 1.8e10  # unpack + reference add
+    decode_dict: float = 1.2e10  # unpack + values gather
+    decode_rle: float = 6.0e9  # run-boundary compare + gather
+    chunk_fixed_seconds: float = 2.0e-5  # per-chunk dispatch overhead
+
+    def h2d_seconds(self, nbytes: float) -> float:
+        return float(nbytes) / self.h2d_bytes_per_sec
+
+    def decode_seconds(self, kind: str, rows: float) -> float:
+        rate = getattr(self, "decode_" + ("for" if kind == "for" else kind))
+        if rate == float("inf"):
+            return 0.0
+        return float(rows) / rate
+
+    def encoding_seconds(self, kind: str, encoded_bytes: float, rows: float) -> float:
+        """Per-pass cost of streaming a column under ``kind``: move the
+        encoded bytes over the host→device link, then decode in-register."""
+        return self.h2d_seconds(encoded_bytes) + self.decode_seconds(kind, rows)
+
+    def stream_seconds(
+        self, encoded_bytes: float, rows: float, kinds: Dict[str, str],
+        col_bytes: Dict[str, float], n_chunks: int = 1,
+    ) -> float:
+        """Whole-relation per-pass streaming cost: Σ per-column encoding
+        cost + per-chunk dispatch overhead."""
+        total = self.chunk_fixed_seconds * max(1, int(n_chunks))
+        for col, kind in kinds.items():
+            total += self.encoding_seconds(kind, col_bytes.get(col, 0.0), rows)
+        return total
+
+
+def encoded_bytes_estimate(
+    kind: str,
+    rows: float,
+    distinct: float,
+    lo: float,
+    hi: float,
+    runs: float,
+    is_float: bool,
+    block: int = 1024,
+) -> float:
+    """Estimated encoded size in bytes of one column chunk under ``kind``,
+    from Σ statistics alone (the exact sizes come from data/storage.py once
+    a representation is materialized; this is what Alg. 1 prices *before*
+    choosing).  ``inf`` marks an inapplicable encoding (bit-packing floats,
+    ranges wider than 16 bits, ...) — block-aligned padding is included so
+    the estimate matches the tile form the kernel actually streams."""
+    rows = max(1.0, float(rows))
+    n_tiles = -(-rows // block)
+
+    def _width(span: float) -> Optional[int]:
+        bits = max(1, int(max(0.0, span)).bit_length())
+        for w in (1, 2, 4, 8, 16):
+            if bits <= w:
+                return w
+        return None
+
+    if kind == "plain":
+        return 4.0 * rows
+    if kind == "bitpack":
+        if is_float or lo < 0:
+            return float("inf")
+        w = _width(hi)
+        return float("inf") if w is None else n_tiles * block * w / 8.0
+    if kind == "for":
+        if is_float:
+            return float("inf")
+        w = _width(hi - lo)
+        return float("inf") if w is None else n_tiles * block * w / 8.0 + 4.0
+    if kind == "dict":
+        w = _width(max(0.0, distinct - 1))
+        if w is None:
+            return float("inf")
+        return 4.0 * distinct + n_tiles * block * w / 8.0
+    if kind == "rle":
+        # tile form pads every tile to the worst tile's run count; estimate
+        # uniform spread plus one boundary-split run per tile
+        per_tile = runs / n_tiles + 1.0
+        return n_tiles * per_tile * 8.0
+    raise ValueError(f"unknown encoding {kind!r}")
+
+
+def choose_encoding(
+    rows: float,
+    distinct: float,
+    lo: float,
+    hi: float,
+    runs: float,
+    is_float: bool,
+    model: Optional[StorageCostModel] = None,
+    block: int = 1024,
+) -> str:
+    """Pick the cheapest encoding for one column chunk under the storage
+    cost model: minimize H2D transfer + in-register decode per pass.  Plain
+    wins ties — decode work is only worth paying when it elides bytes."""
+    model = model or StorageCostModel()
+    best, best_s = "plain", model.encoding_seconds(
+        "plain", encoded_bytes_estimate("plain", rows, distinct, lo, hi, runs, is_float, block), rows
+    )
+    for kind in ("rle", "bitpack", "for", "dict"):
+        b = encoded_bytes_estimate(kind, rows, distinct, lo, hi, runs, is_float, block)
+        if b >= 4.0 * rows:  # never pay decode for zero compression
+            continue
+        s = model.encoding_seconds(kind, b, rows)
+        if s < best_s:
+            best, best_s = kind, s
+    return best
+
+
+@dataclass
+class StorageDecision:
+    """One relation's placement under ``storage_plan``."""
+
+    rel: str
+    mode: str  # "resident" | "streamed"
+    decoded_bytes: float
+    encoded_bytes: float
+    per_pass_seconds: float
+    encodings: Dict[str, str] = field(default_factory=dict)
+
+
+def storage_plan(
+    sigma,
+    memory_budget_bytes: int,
+    model: Optional[StorageCostModel] = None,
+    block: int = 1024,
+    chunk_rows: int = 1 << 16,
+) -> Dict[str, StorageDecision]:
+    """Alg. 1's storage extension: given Σ and an explicit device
+    ``memory_budget_bytes``, decide per relation whether its columns live
+    decoded-resident (pay decoded H2D once, rent device memory) or
+    encoded-streamed (pay encoded H2D + decode per pass, rent only the
+    double-buffered chunk working set).  Relations are kept resident
+    cheapest-first while they fit the budget; the rest stream with
+    per-column encodings chosen by ``choose_encoding``.
+    """
+    model = model or StorageCostModel()
+    rels = []
+    for rel, st in sorted(sigma.rels.items()):
+        decoded = 4.0 * st.rows * max(1, len(st.columns))
+        encodings, encoded = {}, 0.0
+        for c, cs in sorted(st.columns.items()):
+            is_float = float(cs.lo) != float(int(cs.lo)) or float(cs.hi) != float(int(cs.hi))
+            runs = st.rows if st.sorted_on[:1] != (c,) else max(1.0, cs.distinct)
+            kind = choose_encoding(
+                st.rows, cs.distinct, cs.lo, cs.hi, runs, is_float, model, block
+            )
+            encodings[c] = kind
+            encoded += encoded_bytes_estimate(
+                kind, st.rows, cs.distinct, cs.lo, cs.hi, runs, is_float, block
+            )
+        rels.append((decoded, rel, st, encodings, encoded))
+
+    out: Dict[str, StorageDecision] = {}
+    spent = 0.0
+    for decoded, rel, st, encodings, encoded in sorted(rels):
+        n_chunks = max(1, -(-int(st.rows) // chunk_rows))
+        stream_s = model.stream_seconds(
+            encoded, st.rows,
+            encodings, {c: encoded / max(1, len(encodings)) for c in encodings},
+            n_chunks,
+        )
+        if spent + decoded <= memory_budget_bytes:
+            spent += decoded
+            out[rel] = StorageDecision(rel, "resident", decoded, encoded, 0.0, encodings)
+        else:
+            out[rel] = StorageDecision(
+                rel, "streamed", decoded, encoded, stream_s, encodings
+            )
+    return out
+
+
 @dataclass
 class DictMeta:
     name: str

@@ -129,6 +129,13 @@ class Exchange(Node):
     source: str  # per-shard dictionary symbol to merge
     kind: str  # "shuffle" | "allreduce"
     choice: DictChoice = field(default_factory=DictChoice)
+    # per-lane semiring combine monoids for the cross-shard merge, copied
+    # from the producing GroupBy/Reduce by ``legalize``: ``ops`` aligns with
+    # the dictionary's value lanes (shuffle merges re-build with these);
+    # ``field_ops`` maps scalar-record field name -> op (allreduce merges
+    # psum/pmin/pmax per field).  Empty means all-sum — the legacy merge.
+    ops: Tuple[str, ...] = ()
+    field_ops: Tuple[Tuple[str, str], ...] = ()
 
 
 @dataclass(frozen=True)
@@ -414,7 +421,10 @@ def legalize(
         local = _rename(n, n.out + "#local")
         emit(local)
         props[local.out] = ShardedArbitrary()
-        emit(Exchange(n.out, source=local.out, kind="shuffle", choice=n.choice))
+        emit(Exchange(
+            n.out, source=local.out, kind="shuffle", choice=n.choice,
+            ops=tuple(getattr(n, "ops", ()) or ()),
+        ))
         props[n.out] = HashPartitioned()  # merged slices own their key hashes
 
     for n in plan.nodes:
@@ -531,7 +541,14 @@ def legalize(
             sharded_rows = not isinstance(prop(src), Replicated)
             mask_partitioned = isinstance(lp, HashPartitioned)
             if sharded_rows or mask_partitioned:
-                emit(Exchange(n.out + "#sum", source=n.out, kind="allreduce"))
+                fops = tuple(
+                    (name, op)
+                    for (name, _), op in zip(n.fields, n.ops or ())
+                )
+                emit(Exchange(
+                    n.out + "#sum", source=n.out, kind="allreduce",
+                    field_ops=fops,
+                ))
             props[n.out] = Replicated()  # all-reduced scalar record
         elif isinstance(n, Pipeline):
             # fusion happens per executor, after legalization: the sharded
@@ -749,7 +766,7 @@ class _Shape:
                 self.dicts[n.out] = src
 
 
-def fuse(plan: Plan, sigma=None, fusion=None) -> Plan:
+def fuse(plan: Plan, sigma=None, fusion=None, streamed=()) -> Plan:
     """Group maximal chains of row-parallel nodes into :class:`Pipeline`
     regions — a *costed* choice under Δ_fuse (``cost.FusionCostModel``), not
     a default (DESIGN.md §7).
@@ -772,6 +789,20 @@ def fuse(plan: Plan, sigma=None, fusion=None) -> Plan:
     probes remain (then it stays unfused).  ``Exchange``/``Repartition``
     nodes are natural region boundaries: they are not chain members, and
     fusing a legalized plan fuses exactly the per-shard partial phase.
+
+    ``streamed`` names relations the storage plan keeps host-side as
+    encoded chunks (``cost.storage_plan`` mode ``"streamed"``).  A chain
+    scanning one ALWAYS fuses: the unfused alternative would materialize a
+    decoded fact-table-sized intermediate — the very thing the memory
+    budget ruled out — and the VMEM sizing above prices the Pallas
+    resident path, not the chunked XLA loop, whose working set is one
+    chunk regardless of region shape (the kernel dispatch re-checks its
+    own residency contract per chunk).  The hint is relation-only: a
+    Project terminal over a streamed source yields a host-chunked
+    intermediate, but chains scanning *that* are sized by the cost model
+    as usual — a projected subset is far smaller than the fact table, so
+    forcing fusion there would trade cheap resident execution for
+    chained per-chunk merges with nothing to save.
     """
     from .cost import FusionCostModel
 
@@ -794,6 +825,7 @@ def fuse(plan: Plan, sigma=None, fusion=None) -> Plan:
     out_nodes: List[Node] = []
     i = 0
     nodes = plan.nodes
+    wet = set(streamed)
     while i < len(nodes):
         chain = _match_chain(nodes, i)
         if chain is None:
@@ -806,7 +838,18 @@ def fuse(plan: Plan, sigma=None, fusion=None) -> Plan:
             out_nodes.append(nodes[i])
             i += 1
             continue
-        out_nodes.extend(_decide_region(chain, shape, fusion))
+        if chain[0].source in wet:
+            out_nodes.append(
+                Pipeline(
+                    chain[-1].out,
+                    source=chain[0].source,
+                    stages=tuple(chain),
+                    partitions=0,
+                    part_sym="",
+                )
+            )
+        else:
+            out_nodes.extend(_decide_region(chain, shape, fusion))
         i = hi
     return Plan(tuple(out_nodes), plan.result, plan.choices, plan.params)
 

@@ -104,7 +104,9 @@ def pack_keys(table: Table, cols: Sequence[str], domains: Optional[Dict[str, int
 # ---------------------------------------------------------------------------
 
 
-def table_stats(t: Table) -> RelStats:
+def table_stats(t) -> RelStats:
+    if hasattr(t, "stats") and t.stats is not None:  # ChunkedTable: exact
+        return t.stats  # stats captured once at encode time (storage.py)
     cols = {}
     for name, arr in t.columns.items():
         a = np.asarray(arr)
@@ -123,4 +125,8 @@ def table_stats(t: Table) -> RelStats:
 
 
 def collect_stats(tables: Dict[str, Table]) -> CardModel:
+    """Σ from the actual data.  Accepts a mixed db of ``Table`` and
+    host-resident ``storage.ChunkedTable`` values — chunked relations carry
+    their exact stats from encode time, so Σ (and the capacities/choices
+    derived from it) is identical to the fully-decoded database's."""
     return CardModel({name: table_stats(t) for name, t in tables.items()})

@@ -120,3 +120,24 @@ def generate(scale: float = 0.01, seed: int = 0) -> TPCH:
     )
 
     return TPCH(lineitem, orders, customer, part, supplier, nation)
+
+
+def generate_chunked(
+    scale: float = 0.22,
+    seed: int = 0,
+    memory_budget_bytes: int = 16 << 20,
+    chunk_rows: int = 1 << 16,
+) -> Dict[str, object]:
+    """Generate at ``scale`` and apply the out-of-core storage plan: fact
+    relations the device ``memory_budget_bytes`` cannot hold decoded become
+    host-resident compressed ``ChunkedTable``s the engine streams chunk-by-
+    chunk (DESIGN.md §10); small dimensions stay device-resident.  This is
+    the large-scale entry point — decoded device residency stops being
+    assumed at exactly the point the budget says it must."""
+    from .storage import chunk_db
+
+    return chunk_db(
+        generate(scale, seed).tables(),
+        memory_budget_bytes=memory_budget_bytes,
+        chunk_rows=chunk_rows,
+    )

@@ -15,8 +15,10 @@ nodes, and this module realizes those nodes inside one ``shard_map``:
 * ``Exchange(shuffle)``      — ``_plan_exchange``: merge per-shard partial
   dictionaries by routing their entries to the hash-owner shard and
   re-building locally (the classic combiner: wire volume is
-  O(groups/shard), not O(rows)).
-* ``Exchange(allreduce)``    — psum of scalar ref records.
+  O(groups/shard), not O(rows)).  The rebuild is op-aware: each value lane
+  combines by the monoid ``legalize`` copied from the producing node.
+* ``Exchange(allreduce)``    — per-field psum/pmin/pmax of scalar ref
+  records (``Exchange.field_ops``).
 
 The hash route uses the same multiplicative mix as the dictionaries, so
 every repartition is exactly "partition by hash prefix" — each shard's
@@ -189,11 +191,30 @@ def _plan_exchange(node, built, *, axis: Axis):
     """Realize an Exchange node: route the per-shard partial dictionary's
     entries to their hash-owner shard (all-to-all) and merge with one local
     build — the per-shard-dictionary + Exchange pair of DESIGN.md §4.
-    ``allreduce`` exchanges (scalar Reduce results) are a psum."""
+
+    Both merge forms are **op-aware**: ``legalize`` copies the producing
+    node's per-lane combine monoids onto the Exchange, so shuffle merges
+    re-build with ``ops`` (each lane combines by its own monoid when
+    partials for one key meet on the owner shard) and ``allreduce``
+    exchanges (scalar Reduce records) psum/pmin/pmax per field."""
     from repro.exec import engine as E
 
     if node.kind == "allreduce":
-        return jax.tree.map(lambda v: lax.psum(v, axis), built)
+        fops = dict(getattr(node, "field_ops", ()) or ())
+        if not isinstance(built, dict) or all(
+            op == "sum" for op in fops.values()
+        ):
+            return jax.tree.map(lambda v: lax.psum(v, axis), built)
+        merged = {}
+        for name, v in built.items():
+            op = fops.get(name, "sum")
+            if op == "min":
+                merged[name] = lax.pmin(v, axis)
+            elif op == "max":
+                merged[name] = lax.pmax(v, axis)
+            else:
+                merged[name] = lax.psum(v, axis)
+        return merged
 
     mod = registry.get(built.res.ds)
     ks, vs, valid = built.res.arrays()
@@ -207,28 +228,11 @@ def _plan_exchange(node, built, *, axis: Axis):
     # this is the same total footprint a single-shard build of the global
     # input would use, just concentrated on the owning shard
     merge_cap = dbase.next_pow2(int(n_sh) * ks.shape[0])
-    t2 = mod.build(rk, rv, merge_cap, valid=rk != dbase.PAD)
+    ops = tuple(getattr(node, "ops", ()) or ())
+    kw = {} if dbase.all_sum(ops) else {"ops": ops}
+    t2 = mod.build(rk, rv, merge_cap, valid=rk != dbase.PAD, **kw)
     res = E.DictResult(built.res.ds, t2)
     return E.BuiltDict(res, built.choice, lanes=built.lanes, kind=built.kind)
-
-
-def _check_shardable_ops(plan) -> None:
-    """Semiring lanes under sharding: the cross-shard merges (shuffle
-    rebuild in ``_plan_exchange``, allreduce ``psum``) combine partials by
-    ``+`` — sound only for sum lanes.  min/max lanes would need an
-    op-aware exchange; refuse loudly rather than merge wrongly."""
-    from repro.core import plan as cplan
-
-    for n in plan.nodes:
-        stages = n.stages if isinstance(n, cplan.Pipeline) else (n,)
-        for s in stages:
-            ops = tuple(getattr(s, "ops", ()) or ())
-            if any(o != "sum" for o in ops):
-                raise NotImplementedError(
-                    f"non-sum semiring lanes {ops} on {s.out!r} are not "
-                    "supported under sharding: cross-shard dictionary and "
-                    "scalar merges combine partials by +"
-                )
 
 
 def sharded_executor(
@@ -270,7 +274,6 @@ def sharded_executor(
     else:
         default_params = None
 
-    _check_shardable_ops(plan)
     splan, props = cplan.legalize(plan, tuple(shard_rels))
     if fuse:
         # fuse the per-shard partial phase of the legalized plan: the
@@ -403,8 +406,8 @@ def sharded_shared_executor(
     so cross-shard merges stay **per query** (each query's partial
     dictionaries are shuffled/psum-ed independently; results are identical
     to running the queries one at a time).  Returns a callable
-    ``run(params_list) -> [result, ...]`` in ``plans`` order; non-sum
-    semiring lanes are rejected up front (sum-only exchanges)."""
+    ``run(params_list) -> [result, ...]`` in ``plans`` order; semiring
+    min/max lanes merge through the op-aware exchanges."""
     from jax.sharding import PartitionSpec as PSpec
 
     from repro.core import plan as cplan
@@ -417,7 +420,6 @@ def sharded_shared_executor(
     )
     splans, propss = [], []
     for p in plans:
-        _check_shardable_ops(p)
         sp_, props = cplan.legalize(p, tuple(shard_rels))
         splans.append(cplan.fuse(sp_, sigma=sigma))
         propss.append(props)

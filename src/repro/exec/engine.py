@@ -17,7 +17,7 @@ The ds-dispatch points (`build_dict`, `lookup_dict`) are where the paper's
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -377,6 +377,11 @@ def execute_plan(
             exchange_impl, repartition_impl,
         )
 
+    if plan.result is not None and isinstance(
+        env.get(plan.result), _PendingStream
+    ):
+        env[plan.result].force(env, refs, sigma, allow_sorted, params)
+
     return _plan_result(plan, env, refs)
 
 
@@ -416,6 +421,12 @@ def _exec_node(
     def frame_of(sym: str) -> Frame:
         v = env[sym]
         assert isinstance(v, Frame), f"{sym} is not a row frame"
+        p0 = v.tables[v.order[0]]
+        if isinstance(p0, _PendingStream):  # bare-node consumer: spill
+            p0 = p0.force(env, refs, sigma, allow_sorted, params)
+        if _is_chunked(p0):  # bare-node fallback: materialize the relation
+            v = Frame({**v.tables, v.order[0]: p0.decode()}, v.order, v.rels)
+            env[sym] = v
         return v
 
     if isinstance(node, P.Scan):
@@ -423,7 +434,9 @@ def _exec_node(
             src = env[node.source]
             if isinstance(src, BuiltDict):
                 t, rel = _dict_scan_table(src), None
-            elif isinstance(src, Table):
+            elif (
+                isinstance(src, (Table, _PendingStream)) or _is_chunked(src)
+            ):
                 t, rel = src, None
             else:
                 raise TypeError(f"cannot scan {node.source}")
@@ -509,6 +522,17 @@ def _exec_node(
         )
 
     elif isinstance(node, P.GroupBy):
+        fv = env[node.source]
+        if isinstance(fv, Frame) and _is_chunked(fv.tables[fv.order[0]]):
+            # bare group-by over a chunked relation: run it as a one-stage
+            # streamed region (same fold machinery as fused pipelines)
+            v0 = fv.order[0]
+            _run_streamed_pipeline(
+                node, [node], fv.tables[v0], v0, fv.rels.get(v0), env,
+                refs, db, sigma, allow_sorted, params,
+                P.needed_columns((node,)),
+            )
+            return
         f = frame_of(node.source)
         n = f.primary.nrows
         keys = jnp.asarray(
@@ -620,6 +644,220 @@ def _exec_node(
 
 
 # ---------------------------------------------------------------------------
+# out-of-core streaming (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+# Per-process streaming ledger, reset by ``reset_stream_stats``.  All fields
+# are deterministic byte arithmetic (JAX CPU exposes no allocator high-water
+# mark): ``h2d_bytes`` counts the encoded payload bytes that actually crossed
+# the host→device link, ``peak_chunk_bytes`` the largest decoded working set
+# a streamed region held on device at once (two chunks in flight — compute +
+# prefetch — plus in-transit encoded payloads), ``peak_state_bytes`` the
+# largest carried accumulator state.  Benchmarks read these to compare the
+# streamed device footprint against full residency.
+STREAM_STATS: Dict[str, int] = {}
+
+
+def reset_stream_stats() -> None:
+    STREAM_STATS.update(
+        regions=0, chunks=0, h2d_bytes=0, peak_chunk_bytes=0,
+        peak_state_bytes=0,
+    )
+
+
+reset_stream_stats()
+
+
+def _is_chunked(x) -> bool:
+    from repro.data.storage import is_chunked
+
+    return is_chunked(x)
+
+
+def _stream_capacity(meta_frame, keyexpr, ds: str, sigma, total_rows: int) -> int:
+    """Dictionary capacity for a streamed terminal.  MUST match what the
+    resident path would pick (same layout ⇒ bitwise-identical merge): the
+    Σ distinct estimate when available, else the TOTAL row count — never the
+    per-chunk row count."""
+    rel, cols, _ = _key_info(meta_frame, keyexpr)
+    if sigma is not None and rel is not None and cols and "*" not in cols:
+        try:
+            return capacity_for(ds, int(sigma.dist(rel, cols)))
+        except KeyError:
+            pass
+    return capacity_for(ds, total_rows)
+
+
+def _merge_groupby(table, keys, vals, ds, capacity, state, ops=(),
+                   sorted_merge: bool = False):
+    """One streamed group-by step: fold a chunk's rows into the carried
+    accumulator table.  The carried state's live entries are re-presented as
+    (key, value) rows CONCATENATED BEFORE the chunk's rows and rebuilt with
+    the unsorted build — XLA's scatter applies duplicate updates in row
+    order and the stable sort keeps state rows ahead of same-key chunk rows,
+    so the float accumulation order is exactly the resident left-fold:
+    bitwise-identical to a one-shot group-by over all rows.
+
+    ``sorted_merge`` (sorted-family dictionaries whose group key IS the
+    stream's sort key): the state's live keys are sorted and — because
+    chunks are contiguous slices of a key-sorted stream — every state key
+    precedes every chunk key, so the state-first concat's live subsequence
+    is already nondecreasing (PAD holes allowed anywhere by the
+    ``assume_sorted`` contract).  The stable argsort the unsorted build
+    would run is the identity permutation on live rows, so skipping it
+    feeds ``dedupe_sorted`` the exact same row sequence: bitwise-identical
+    output, minus an O((capacity + chunk) log) sort per chunk — the
+    dominant cost of streamed sort-dictionary group-bys."""
+    if vals.ndim == 1:
+        vals = vals[:, None]
+    mult = table.multiplicity()[:, None]
+    if dbase.all_sum(ops):
+        vals = vals * mult
+    else:
+        sel = jnp.asarray([o == "sum" for o in ops])
+        vals = jnp.where(sel[None, :], vals * mult, vals)
+    sk, sv = state.keys, state.vals
+    svalid = (sk != dbase.PAD) & (sk != dbase.EMPTY)
+    mk = jnp.concatenate([jnp.where(svalid, sk, dbase.PAD), keys])
+    mv = jnp.concatenate([sv, vals])
+    chunk_valid = (
+        table.mask if table.mask is not None
+        else jnp.ones(keys.shape, bool)
+    )
+    valid = jnp.concatenate([svalid, chunk_valid])
+    return build_dict(
+        ds, mk, mv, capacity, valid=valid, assume_sorted=sorted_merge,
+        ops=tuple(ops),
+    )
+
+
+class _SortedStreamState(NamedTuple):
+    """Carried accumulator of the sorted-stream fast path (a sorted-family
+    group-by whose key IS the stream's sort key).  Because chunks are
+    contiguous slices of a key-sorted stream, a group is COMPLETE the
+    moment the stream moves past its key — so instead of re-scattering a
+    full-capacity state every chunk, the fold appends each chunk's
+    completed groups to ``out_k``/``out_v`` at the running ``off`` and
+    carries only the single still-open boundary group (``bk``/``bv``)."""
+
+    out_k: jax.Array  # [capacity + cap_chunk] emitted unique keys, PAD tail
+    out_v: jax.Array  # [capacity + cap_chunk, V]
+    off: jax.Array  # scalar: rows of out_k filled so far
+    bk: jax.Array  # scalar: open boundary group's key (PAD when none)
+    bv: jax.Array  # [V] boundary group's partial fold
+    bvalid: jax.Array  # scalar bool
+
+
+def _sorted_stream_chunk_cap(chunk_rows: int) -> int:
+    # distinct keys in a chunk + the seeded boundary row, padded to the
+    # st_blocked leaf multiple
+    return -(-(chunk_rows + 1) // 128) * 128
+
+
+def _sorted_stream_init(cap: int, chunk_rows: int, n_lanes: int):
+    cc = _sorted_stream_chunk_cap(chunk_rows)
+    return _SortedStreamState(
+        jnp.full((cap + cc,), dbase.PAD, jnp.int32),
+        jnp.zeros((cap + cc, n_lanes), jnp.float32),
+        jnp.int32(0),
+        jnp.int32(dbase.PAD),
+        jnp.zeros((n_lanes,), jnp.float32),
+        jnp.asarray(False),
+    )
+
+
+def _sorted_stream_merge(
+    table, keys, vals, ds, capacity, state: _SortedStreamState, ops=(),
+    final: bool = False,
+):
+    """One sorted-stream fold step: group the chunk ALONE (O(chunk), no
+    capacity-sized work) seeded with the carried boundary partial, emit its
+    completed groups, carry the new boundary.
+
+    Bitwise-identical to the resident one-shot build: a group's rows are
+    contiguous in the key-sorted stream, and seeding the next chunk's
+    build with the boundary partial continues that group's left-fold in
+    exactly the resident contribution order (the seed row sits FIRST, so
+    ``(…fold so far…) + next row + …`` — never a partial-sum tree).  On
+    the ``final`` chunk the boundary is emitted too and the assembled
+    unique rows are laid out by one ``assume_sorted`` build at the
+    resident capacity — one exact identity-combine per slot."""
+    if vals.ndim == 1:
+        vals = vals[:, None]
+    mult = table.multiplicity()[:, None]
+    if dbase.all_sum(ops):
+        vals = vals * mult
+    else:
+        sel = jnp.asarray([o == "sum" for o in ops])
+        vals = jnp.where(sel[None, :], vals * mult, vals)
+    chunk_valid = (
+        table.mask if table.mask is not None
+        else jnp.ones(keys.shape, bool)
+    )
+    cap_chunk = state.out_k.shape[0] - capacity
+    mk = jnp.concatenate([state.bk[None], keys])
+    mv = jnp.concatenate([state.bv[None, :], vals])
+    valid = jnp.concatenate([state.bvalid[None], chunk_valid])
+    t = build_dict(
+        ds, mk, mv, cap_chunk, valid=valid, assume_sorted=True,
+        ops=tuple(ops),
+    ).table
+    c = t.n if final else jnp.maximum(t.n - 1, 0)
+    keep = jnp.arange(cap_chunk, dtype=jnp.int32) < c
+    wk = jnp.where(keep, t.keys, dbase.PAD)
+    wv = jnp.where(keep[:, None], t.vals, 0.0)
+    out_k = jax.lax.dynamic_update_slice(state.out_k, wk, (state.off,))
+    out_v = jax.lax.dynamic_update_slice(
+        state.out_v, wv, (state.off, jnp.int32(0))
+    )
+    if final:
+        fk = out_k[:capacity]
+        return build_dict(
+            ds, fk, out_v[:capacity], capacity, valid=fk != dbase.PAD,
+            assume_sorted=True, ops=tuple(ops),
+        ).table
+    has = t.n > 0
+    i = jnp.maximum(t.n - 1, 0)
+    return _SortedStreamState(
+        out_k, out_v, state.off + c,
+        jnp.where(has, t.keys[i], dbase.PAD),
+        jnp.where(has, t.vals[i], 0.0),
+        has,
+    )
+
+
+def _merge_dict_tables(ds, state, partial, capacity, ops=()):
+    """Merge a per-chunk partial aggregate dictionary (e.g. from the fused
+    kernel) into the carried state — state entries first, same combine
+    monoids per lane."""
+    sk, sv = state.keys, state.vals
+    pk, pv = partial.keys, partial.vals
+    v1 = (sk != dbase.PAD) & (sk != dbase.EMPTY)
+    v2 = (pk != dbase.PAD) & (pk != dbase.EMPTY)
+    mk = jnp.concatenate(
+        [jnp.where(v1, sk, dbase.PAD), jnp.where(v2, pk, dbase.PAD)]
+    )
+    mv = jnp.concatenate([sv, pv])
+    return build_dict(
+        ds, mk, mv, capacity, valid=jnp.concatenate([v1, v2]),
+        assume_sorted=False, ops=tuple(ops),
+    ).table
+
+
+def _empty_dict_state(ds: str, n_lanes: int, capacity: int, ops=()):
+    """Jit-stable zero-entry accumulator table (an all-invalid build) to
+    seed the streamed fold — its shapes equal every later merge's."""
+    return build_dict(
+        ds,
+        jnp.full((1,), dbase.PAD, jnp.int32),
+        jnp.zeros((1, n_lanes), jnp.float32),
+        capacity,
+        valid=jnp.zeros((1,), bool),
+        ops=tuple(ops),
+    ).table
+
+
+# ---------------------------------------------------------------------------
 # fused pipeline regions (DESIGN.md §7)
 # ---------------------------------------------------------------------------
 
@@ -661,18 +899,56 @@ def _run_pipeline(pipe, env, refs, db, sigma, allow_sorted, params):
             src = env[sc.source]
             if isinstance(src, BuiltDict):
                 t, rel = _dict_scan_table(src), None
-            elif isinstance(src, Table):
+            elif isinstance(src, _PendingStream):
+                if isinstance(stages[-1], P.HashBuild):
+                    # index terminals need the materialized rows: spill
+                    t, rel = src.force(env, refs, sigma, allow_sorted, params), None
+                else:
+                    # chain this pipeline's stages onto the pending loop
+                    _run_streamed_pipeline(
+                        pipe, stages[1:], src, sc.var, None, env, refs,
+                        db, sigma, allow_sorted, params, need,
+                    )
+                    return
+            elif isinstance(src, Table) or _is_chunked(src):
                 t, rel = src, None
             else:
                 raise TypeError(f"cannot scan {sc.source}")
         else:
             t, rel = db[sc.source], sc.source
+        if _is_chunked(t):
+            if isinstance(stages[-1], P.HashBuild):
+                # index terminals need global row ids: decode resident
+                want = need.get(sc.var, ())
+                t = t.decode(
+                    tuple(c for c in t.names() if c in want) or None
+                )
+            else:
+                _run_streamed_pipeline(
+                    pipe, stages[1:], t, sc.var, rel, env, refs, db,
+                    sigma, allow_sorted, params, need,
+                )
+                return
         f = Frame({sc.var: t}, (sc.var,), {sc.var: rel})
         rest = stages[1:]
     else:
         f = env[pipe.source]
         assert isinstance(f, Frame), pipe.source
         rest = stages
+        p0 = f.tables[f.order[0]]
+        if isinstance(p0, _PendingStream):
+            p0 = p0.force(env, refs, sigma, allow_sorted, params)
+            f = Frame({**f.tables, f.order[0]: p0}, f.order, f.rels)
+        if _is_chunked(p0):
+            if len(f.order) == 1 and not isinstance(stages[-1], P.HashBuild):
+                _run_streamed_pipeline(
+                    pipe, rest, p0, f.order[0], f.rels.get(f.order[0]),
+                    env, refs, db, sigma, allow_sorted, params, need,
+                )
+                return
+            f = Frame(
+                {**f.tables, f.order[0]: p0.decode()}, f.order, f.rels
+            )
 
     if _kernel_pipeline(pipe, rest, f, env, refs, sigma, allow_sorted, params, need):
         return
@@ -817,12 +1093,456 @@ def _make_region_fn(rest, f0, builts, src_cols0, sigma, allow_sorted, need):
     return jax.jit(run), holder
 
 
-def _region_stages(rest, f, denv, src_cols, pvals, sigma, allow_sorted, holder):
+class _StreamSegment(NamedTuple):
+    """One pipeline's worth of a streamed chunk loop: its stage list (after
+    the Scan), the var the stages address, and the resident build-side
+    inputs (dictionaries, pruned gather sources) captured at the time the
+    pipeline was reached — by which point plan order guarantees they
+    exist."""
+
+    out: str
+    key: str  # repr of (source, stages) — the statics cache key component
+    pipe: object  # the Pipeline node (kernel dispatch needs partitions etc.)
+    rest: tuple
+    var: str
+    rel: Optional[str]
+    builts: Dict[str, object]
+    src_cols: Dict[str, Dict[str, jax.Array]]
+    needed: Tuple[str, ...]  # pruned SOURCE columns (segment 0 only)
+    need: Dict[str, tuple]
+
+
+def _stream_segment(pipe, rest, var, rel, env, need, ct) -> _StreamSegment:
+    from repro.core import plan as P
+
+    dict_syms = []
+    for node in rest:
+        if isinstance(node, (P.HashProbe, P.GroupJoin)):
+            dict_syms.append(node.build)
+        elif isinstance(node, P.Reduce) and node.lookup_sym is not None:
+            dict_syms.append(node.lookup_sym)
+    dict_syms = tuple(dict.fromkeys(dict_syms))
+    builts = {s: env[s] for s in dict_syms}
+    src_cols: Dict[str, Dict[str, jax.Array]] = {}
+    for node in rest:
+        if isinstance(node, P.HashProbe):
+            b = builts[node.build]
+            wc = need.get(node.inner_var, ())
+            src_cols[node.out] = {
+                c: b.src.col(c) for c in b.src.names() if c in wc
+            }
+    want = need.get(var, ())
+    needed = tuple(c for c in ct.names() if c in want) or tuple(ct.names())
+    return _StreamSegment(
+        pipe.out,
+        repr((getattr(pipe, "source", None), tuple(rest))),
+        pipe, tuple(rest), var, rel, builts, src_cols, needed, dict(need),
+    )
+
+
+class _PendingStream:
+    """A streamed region whose Project-terminal output has NOT been
+    materialized.  ``env`` holds this placeholder; a downstream single-var
+    pipeline that scans it EXTENDS the chain instead — its stages run as
+    the next segment of the SAME chunk loop, so e.g. q9's lineitem pass
+    chains part-probe → supplier-probe → orders-probe+group-by with no
+    host spill in between.  Any consumer that needs the actual rows
+    (a bare-node frame access, an index-terminal region, a plan result)
+    calls ``force``, which runs the accumulated chain with its Project
+    terminal and spills each chunk to a ``HostChunkedTable`` — chaining is
+    an optimization, never a semantic dependency.  Each extension builds a
+    NEW pending sharing the prefix, so a second consumer of an
+    intermediate simply re-streams from the source."""
+
+    def __init__(self, ct, segments: tuple):
+        self.ct = ct
+        self.segments = segments
+
+    @property
+    def out(self) -> str:
+        return self.segments[-1].out
+
+    def names(self):  # metadata surface for needed-column pruning
+        term = self.segments[-1].rest[-1]
+        return tuple(name for name, _ in term.fields)
+
+    def force(self, env, refs, sigma, allow_sorted, params):
+        _exec_streamed_chain(
+            self.ct, self.segments, env, refs, sigma, allow_sorted, params
+        )
+        return env[self.out]
+
+
+def _make_streamed_chain_fn(
+    segments, chunk_rows, sorted_on0, spec, sigma, allow_sorted, cap,
+    final=False,
+):
+    """The streamed twin of ``_make_region_fn``: same closure/trace split
+    plus (a) the chunk arrives as its ENCODED payload and is decoded inside
+    the trace (``decode_traced`` — XLA fuses shift/mask unpack and gathers
+    straight into the region compute, no eager per-chunk dispatch),
+    (b) chained segments run back to back in the SAME trace — one
+    segment's Project output becomes the next segment's input frame, so
+    the whole multi-region chain over a chunk is ONE compiled computation
+    — and (c) one carried argument: the accumulator state a dict terminal
+    folds each chunk into (``None`` for Project/Reduce terminals).
+    ``spec`` is the chunk's static decode recipe; full uniformly-encoded
+    chunks share one spec, so one compile serves them all (a short final
+    chunk or a chunk that encoded differently costs one more)."""
+    from repro.kernels import decode as DK
+
+    metas = [
+        {
+            s: (b.res.ds, b.kind, b.lanes, b.choice)
+            for s, b in seg.builts.items()
+        }
+        for seg in segments
+    ]
+    n, colspecs = spec
+    holders = [[None, None] for _ in segments]
+
+    def run(payloads, dict_tables, src_cols, pvals, state):
+        cols = {}
+        for c, kind, bits, ref, block in colspecs:
+            if kind == "raw":
+                cols[c] = payloads[c]["data"]
+            else:
+                cols[c] = DK.decode_traced(
+                    kind, payloads[c], bits=bits, ref=ref, block=block,
+                    n=n, chunk_rows=chunk_rows,
+                )
+        if colspecs and colspecs[0][1] == "raw":
+            mask = payloads["__mask__"]["data"]
+        else:
+            mask = jnp.arange(chunk_rows, dtype=jnp.int32) < n
+        srt = sorted_on0
+        out = None
+        for j, seg in enumerate(segments):
+            f = Frame(
+                {
+                    seg.var: Table(
+                        cols, chunk_rows, mask=mask, sorted_on=srt
+                    )
+                },
+                (seg.var,),
+                {seg.var: seg.rel},
+            )
+            denv = {
+                s: BuiltDict(
+                    DictResult(ds, dict_tables[j][s]), choice,
+                    lanes=lanes, kind=kind,
+                )
+                for s, (ds, kind, lanes, choice) in metas[j].items()
+            }
+            last = j == len(segments) - 1
+            out = _region_stages(
+                seg.rest, f, denv, src_cols[j], pvals, sigma, allow_sorted,
+                holders[j],
+                stream=(
+                    (state, cap, final)
+                    if last and state is not None else None
+                ),
+            )
+            if not last:  # Project output feeds the next segment's frame
+                cols, mask = out
+                cols = dict(cols)
+                srt = tuple(holders[j][1] or ())
+        return out
+
+    return jax.jit(run), holders
+
+
+def _run_streamed_pipeline(
+    pipe, rest, ct, var, rel, env, refs, db, sigma, allow_sorted, params, need
+):
+    """Entry point for a region whose scanned input is host-resident
+    chunked storage (or a pending streamed chain).  A Project terminal does
+    NOT run yet: it publishes a ``_PendingStream`` so downstream pipelines
+    can chain onto the same chunk loop; a GroupBy/GroupJoin/Reduce terminal
+    executes the accumulated chain now (``_exec_streamed_chain``)."""
+    from repro.core import plan as P
+
+    if isinstance(ct, _PendingStream):
+        segments = ct.segments + (
+            _stream_segment(pipe, rest, var, rel, env, need, ct),
+        )
+        ct = ct.ct
+    else:
+        segments = (_stream_segment(pipe, rest, var, rel, env, need, ct),)
+    if isinstance(rest[-1], P.Project):
+        env[pipe.out] = _PendingStream(ct, segments)
+        REGION_MODES[pipe.out] = "streamed-deferred"
+        return
+    _exec_streamed_chain(ct, segments, env, refs, sigma, allow_sorted, params)
+
+
+def _exec_streamed_chain(ct, segments, env, refs, sigma, allow_sorted, params):
+    """Run a chain of fused regions as ONE pass over a chunked relation:
+    chunks cross the host→device link ENCODED (next chunk's upload
+    dispatched before the current chunk's compute — async overlap), decode
+    inside the compiled region fn, and flow through every chained segment's
+    stages in that same computation.  A GroupBy/GroupJoin terminal folds
+    each chunk into a carried accumulator sized for the FULL relation
+    (``_merge_groupby`` — bitwise equal to the resident one-shot build); a
+    Project terminal (a forced pending) spills each chunk's output back to
+    host as a ``HostChunkedTable`` that downstream regions stream the same
+    way; a Reduce terminal combines per-chunk scalar partials by each
+    lane's monoid.  At no point does a decoded fact-table-sized array
+    exist on device."""
+    import numpy as np
+
+    from repro.core import plan as P
+    from repro.data import storage as STG
+
+    seg0, seg_last = segments[0], segments[-1]
+    term = seg_last.rest[-1]
+    needed = seg0.needed
+    nchunks = ct.n_chunks
+
+    # -- carried accumulator for dict terminals -----------------------------
+    is_dict_term = isinstance(term, (P.GroupBy, P.GroupJoin))
+    state = None
+    cap = 0
+    sorted_stream = False
+    term_ops: Tuple[str, ...] = ()
+    if is_dict_term:
+        term_ops = tuple(term.ops) if isinstance(term, P.GroupBy) else ()
+        n_lanes = len(term.values) if isinstance(term, P.GroupBy) else 1
+        if len(segments) == 1:
+            meta_f = Frame(
+                {seg_last.var: ct}, (seg_last.var,), {seg_last.var: seg_last.rel}
+            )
+            cap = _stream_capacity(
+                meta_f, term.keyexpr, term.choice.ds, sigma, ct.nrows
+            )
+            # sorted-family terminal keyed by the stream's sort key: fold
+            # via completed-group emission (O(chunk) per chunk) instead of
+            # re-scattering a capacity-sized state
+            if allow_sorted and term.choice.ds.startswith("st"):
+                _, _, _srt = _key_info(meta_f, term.keyexpr)
+                sorted_stream = bool(_srt)
+        else:
+            # chained input is an intermediate (rel=None): Σ has no row for
+            # it, so size for the full source row count — exactly what the
+            # unchained spill-and-restream path would have picked
+            cap = capacity_for(term.choice.ds, ct.nrows)
+        state = (
+            _sorted_stream_init(cap, ct.chunk_rows, n_lanes)
+            if sorted_stream
+            else _empty_dict_state(term.choice.ds, n_lanes, cap, term_ops)
+        )
+        STREAM_STATS["peak_state_bytes"] = max(
+            STREAM_STATS["peak_state_bytes"],
+            sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(state)),
+        )
+
+    STREAM_STATS["regions"] += len(segments)
+    chunk_dec_bytes = ct.chunk_rows * (4 * len(needed) + 1)
+    # two decoded source chunks live at once (current compute + prefetched
+    # next) plus each chained segment's intermediate projection of the chunk
+    inter_bytes = sum(
+        ct.chunk_rows * (4 * len(seg.rest[-1].fields) + 1)
+        for seg in segments[:-1]
+    )
+    STREAM_STATS["peak_chunk_bytes"] = max(
+        STREAM_STATS["peak_chunk_bytes"], 2 * chunk_dec_bytes + inter_bytes
+    )
+
+    # -- try the fused Pallas kernel per chunk (TPU / forced) ---------------
+    if is_dict_term and nchunks and len(segments) == 1:
+        kstate = (
+            _empty_dict_state(term.choice.ds, n_lanes, cap, term_ops)
+            if sorted_stream else state
+        )
+        if _stream_kernel_chunks(
+            seg0, ct, needed, kstate, cap, term_ops, env, refs, sigma,
+            allow_sorted, params,
+        ):
+            return
+
+    # -- XLA streamed loop --------------------------------------------------
+    up_next = ct.upload_chunk(0, needed)
+    holders = None
+    host_chunks: list = []
+    host_masks: list = []
+    partials: list = []
+    statics_base = (
+        "streamed",
+        tuple(
+            (
+                seg.key,
+                seg.var,
+                seg.rel,
+                tuple(
+                    (s, b.res.ds, b.kind, b.lanes, b.choice)
+                    for s, b in seg.builts.items()
+                ),
+                tuple((o, tuple(sorted(cs))) for o, cs in seg.src_cols.items()),
+            )
+            for seg in segments
+        ),
+        (ct.sorted_on, ct.chunk_rows, tuple(sorted(needed))),
+        bool(allow_sorted),
+        cap,
+        _sigma_signature(sigma),
+    )
+    dict_tables = [
+        {s: b.res.table for s, b in seg.builts.items()} for seg in segments
+    ]
+    src_cols = [seg.src_cols for seg in segments]
+    for i in range(nchunks):
+        up, up_next = up_next, (
+            ct.upload_chunk(i + 1, needed) if i + 1 < nchunks else None
+        )
+        STREAM_STATS["h2d_bytes"] += up[1]
+        STREAM_STATS["chunks"] += 1
+        # the chunk's static decode recipe keys the region fn: the encoded
+        # payload goes straight into the jit and decodes in-trace (full
+        # uniformly-encoded chunks all hit one compiled fn)
+        spec = ct.chunk_decode_spec(i, needed)
+        final = sorted_stream and i == nchunks - 1
+        statics = statics_base + (spec, final)
+        entry = _REGION_CACHE.get(statics)
+        if entry is None:
+            entry = _make_streamed_chain_fn(
+                segments, ct.chunk_rows, ct.sorted_on, spec, sigma,
+                allow_sorted, cap, final=final,
+            )
+            if len(_REGION_CACHE) >= _REGION_CACHE_MAX:
+                _REGION_CACHE.pop(next(iter(_REGION_CACHE)))
+            _REGION_CACHE[statics] = entry
+        fn, holders = entry
+        out = fn(up[0], dict_tables, src_cols, dict(params or {}), state)
+        if is_dict_term:
+            state = out
+        elif holders[-1][0] == "table":
+            cols, mask = out
+            host_chunks.append({c: np.asarray(a) for c, a in cols.items()})
+            host_masks.append(
+                np.asarray(mask) if mask is not None
+                else np.ones((ct.chunk_rows,), bool)
+            )
+        else:  # refs
+            partials.append(out)
+
+    for seg in segments[:-1]:
+        REGION_MODES[seg.out] = f"streamed-chained:{nchunks}"
+    REGION_MODES[seg_last.out] = f"streamed:{nchunks}"
+
+    # -- publish the terminal -----------------------------------------------
+    if is_dict_term:
+        lanes = (
+            tuple(a for a, _ in term.values)
+            if isinstance(term, P.GroupBy)
+            else ("_0",)
+        )
+        env[term.out] = BuiltDict(
+            DictResult(term.choice.ds, state), term.choice, lanes=lanes
+        )
+    elif holders[-1][0] == "table":
+        env[term.out] = STG.HostChunkedTable(
+            chunks=host_chunks,
+            masks=host_masks,
+            chunk_rows=ct.chunk_rows,
+            nrows=ct.nrows,
+            schema={
+                c: str(a.dtype) for c, a in host_chunks[0].items()
+            },
+            sorted_on=tuple(holders[-1][1] or ()),
+        )
+    else:  # scalar ref record: combine per-lane monoid partials
+        fops = term.ops or ("sum",) * len(term.fields)
+        total = {}
+        for k, (name, _fx) in enumerate(term.fields):
+            acc = partials[0][name]
+            for p in partials[1:]:
+                v = p[name]
+                if fops[k] == "sum":
+                    acc = acc + v
+                elif fops[k] == "min":
+                    acc = jnp.minimum(acc, v)
+                else:
+                    acc = jnp.maximum(acc, v)
+            total[name] = acc
+        refs[term.out] = total
+
+
+def _stream_kernel_chunks(
+    seg, ct, needed, state, cap, term_ops, env, refs, sigma, allow_sorted,
+    params,
+):
+    """Per-chunk fused Pallas kernel dispatch for a single-segment dict
+    terminal (TPU / ``REPRO_FORCE_PALLAS=1``): each chunk's partial
+    aggregate merges into the carried state (``_merge_dict_tables``).
+    Returns False when the kernel declines the region — the XLA streamed
+    loop is the fallback."""
+    from repro.core import plan as P
+
+    pipe, rest, var, rel = seg.pipe, seg.rest, seg.var, seg.rel
+    term = rest[-1]
+    nchunks = ct.n_chunks
+    try:
+        t0 = ct.chunk_device(0, needed, pad=True)
+        f0 = Frame({var: t0}, (var,), {var: rel})
+        scratch_env, scratch_refs = dict(env), {}
+        ok = bool(
+            _kernel_pipeline(
+                pipe, rest, f0, scratch_env, scratch_refs, sigma,
+                allow_sorted, params, seg.need,
+            )
+        )
+    except Exception:
+        ok = False
+    if not ok:
+        return False
+    up_next = ct.upload_chunk(1, needed) if nchunks > 1 else None
+    state = _merge_dict_tables(
+        term.choice.ds, state, scratch_env[pipe.out].res.table, cap, term_ops
+    )
+    STREAM_STATS["chunks"] += 1
+    for i in range(1, nchunks):
+        up, up_next = up_next, (
+            ct.upload_chunk(i + 1, needed) if i + 1 < nchunks else None
+        )
+        STREAM_STATS["h2d_bytes"] += up[1]
+        t_i = ct.chunk_device(i, needed, pad=True, uploaded=up[0])
+        f_i = Frame({var: t_i}, (var,), {var: rel})
+        scratch_env, scratch_refs = dict(env), {}
+        assert _kernel_pipeline(
+            pipe, rest, f_i, scratch_env, scratch_refs, sigma,
+            allow_sorted, params, seg.need,
+        )
+        state = _merge_dict_tables(
+            term.choice.ds, state, scratch_env[pipe.out].res.table, cap,
+            term_ops,
+        )
+        STREAM_STATS["chunks"] += 1
+    REGION_MODES[pipe.out] = f"streamed-kernel:{nchunks}"
+    lanes = (
+        tuple(a for a, _ in term.values)
+        if isinstance(term, P.GroupBy)
+        else ("_0",)
+    )
+    env[term.out] = BuiltDict(
+        DictResult(term.choice.ds, state), term.choice, lanes=lanes
+    )
+    return True
+
+
+def _region_stages(
+    rest, f, denv, src_cols, pvals, sigma, allow_sorted, holder, stream=None
+):
     """Trace a region's stage list over an input frame — the ONE region body
     shared by the per-query jitted region fn (``_make_region_fn``) and the
     multi-branch shared-scan region fn (``_make_shared_region_fn``).  Sets
     ``holder[0]`` to the terminal kind and returns the terminal's raw value
-    (ref record / (cols, mask) / backend table)."""
+    (ref record / (cols, mask) / backend table).
+
+    ``stream=(state_table, capacity)`` switches a GroupBy/GroupJoin terminal
+    from a one-shot build to one streamed fold step: the chunk's rows merge
+    into the carried accumulator (``_merge_groupby``), which the driver
+    threads across chunks.  Every non-terminal stage is untouched — the
+    per-chunk select/probe/project math is the resident math."""
     from repro.core import llql as L
     from repro.core import plan as P
     from repro.core.lower import compile_rowfn_frame as _rowfn_frame
@@ -909,6 +1629,20 @@ def _region_stages(rest, f, denv, src_cols, pvals, sigma, allow_sorted, holder):
                 for _, fx in node.values
             ]
             vals = jnp.stack(lanes, axis=1)
+            if stream is not None:
+                state, cap, final = stream
+                holder[0] = "dict"
+                if isinstance(state, _SortedStreamState):
+                    return _sorted_stream_merge(
+                        f.primary, keys, vals, node.choice.ds, cap, state,
+                        ops=tuple(node.ops), final=final,
+                    )
+                d = _merge_groupby(
+                    f.primary, keys, vals, node.choice.ds, cap, state,
+                    ops=tuple(node.ops),
+                    sorted_merge=srt and node.choice.ds.startswith("st"),
+                )
+                return d.table
             cap = _capacity(f, node.keyexpr, node.choice.ds, sigma)
             d = groupby(
                 f.primary,
@@ -932,6 +1666,27 @@ def _region_stages(rest, f, denv, src_cols, pvals, sigma, allow_sorted, holder):
                 jnp.asarray(rowfn(node.f_expr, f.tables), jnp.float32),
                 (n,),
             )
+            if stream is not None:
+                state, cap, final = stream
+                g_vals, found = lookup_dict(
+                    b.res,
+                    keys,
+                    valid=f.primary.mask,
+                    sorted_probes=srt and (node.hinted or b.choice.hinted),
+                )
+                holder[0] = "dict"
+                if isinstance(state, _SortedStreamState):
+                    return _sorted_stream_merge(
+                        f.primary.with_mask(found), keys,
+                        f_vals[:, None] * g_vals, node.choice.ds, cap,
+                        state, final=final,
+                    )
+                d = _merge_groupby(
+                    f.primary.with_mask(found), keys,
+                    f_vals[:, None] * g_vals, node.choice.ds, cap, state,
+                    sorted_merge=srt and node.choice.ds.startswith("st"),
+                )
+                return d.table
             cap = _capacity(f, node.keyexpr, node.choice.ds, sigma)
             d = groupjoin(
                 f.primary,
@@ -1865,22 +2620,67 @@ class BoundExecutable:
         return self.executable.plan
 
 
+class StreamedExecutable:
+    """Executable facade for databases holding chunked (out-of-core)
+    relations.  The streamed driver is a host-side loop over chunks, so
+    there is no whole-plan jit to wrap — each call runs ``execute_plan``
+    eagerly; the per-chunk region functions inside are compiled once and
+    cached (``_REGION_CACHE``), so repeated calls and parameter rebinds
+    re-enter compiled code just like the resident ``Executable``."""
+
+    def __init__(self, plan, db: Dict[str, "Table"], sigma=None):
+        from repro.core import plan as P
+
+        self._default_params = None
+        if isinstance(plan, P.BoundPlan):
+            self._default_params = plan.binding_map()
+            plan = plan.plan
+        self.plan = plan
+        self.sigma = sigma
+        self.trace_count = 1  # region fns trace on first use, then cache
+        self.calls = 0
+
+    def coerce_params(self, params: Optional[Dict[str, object]]):
+        return coerce_bindings(self.plan, params, defaults=self._default_params)
+
+    def __call__(self, db: Dict[str, "Table"], params=None):
+        self.calls += 1
+        out = execute_plan(
+            self.plan, db, sigma=self.sigma,
+            params=self.coerce_params(params),
+        )
+        if isinstance(out, DictResult):
+            return PlanResult(out.ds, *out.arrays())
+        return out
+
+    def call_batched(self, db: Dict[str, "Table"], params_list):
+        return [self(db, p) for p in params_list]
+
+
 _EXEC_CACHE: Dict[tuple, Executable] = {}
 _EXEC_CACHE_STATS = {"hits": 0, "misses": 0}
 _EXEC_CACHE_MAX = 64  # evict oldest beyond this (long-running servers)
 
 
 def _db_signature(db: Dict[str, "Table"]) -> tuple:
-    return tuple(
-        (
-            rel,
-            t.nrows,
-            t.mask is None,
-            t.sorted_on,
-            tuple((c, str(a.dtype)) for c, a in sorted(t.columns.items())),
-        )
-        for rel, t in sorted(db.items())
-    )
+    sig = []
+    for rel, t in sorted(db.items()):
+        if _is_chunked(t):
+            sig.append((rel, "chunked") + tuple(t.signature()))
+        else:
+            sig.append(
+                (
+                    rel,
+                    t.nrows,
+                    t.mask is None,
+                    t.sorted_on,
+                    tuple(
+                        (c, str(a.dtype))
+                        for c, a in sorted(t.columns.items())
+                    ),
+                )
+            )
+    return tuple(sig)
 
 
 def _sigma_signature(sigma) -> tuple:
@@ -1913,7 +2713,12 @@ def cached_executable(plan, db: Dict[str, "Table"], sigma=None):
     ex = _EXEC_CACHE.get(key)
     if ex is None:
         _EXEC_CACHE_STATS["misses"] += 1
-        ex = Executable(plan, db, sigma=sigma)
+        cls = (
+            StreamedExecutable
+            if any(_is_chunked(t) for t in db.values())
+            else Executable
+        )
+        ex = cls(plan, db, sigma=sigma)
         if len(_EXEC_CACHE) >= _EXEC_CACHE_MAX:
             _EXEC_CACHE.pop(next(iter(_EXEC_CACHE)))
         _EXEC_CACHE[key] = ex

@@ -1,0 +1,295 @@
+"""Device-side decode of compressed column chunks (DESIGN.md §10).
+
+The host keeps out-of-core relations as per-chunk encoded columns
+(``data.storage``); what crosses the host→device link is the *encoded*
+payload, and these routines reconstruct the decoded column on device.  Two
+substrates share one set of tile-decode primitives:
+
+* :func:`decode_device` — jitted jnp decode of a whole chunk column (the
+  XLA streamed path).  Bit-for-bit identical to the host-side
+  ``EncodedColumn.decode()``: unpack is integer shifts and masks, FOR adds
+  an int32 frame reference (no overflow by construction: value ≤ column
+  max ≤ 2³¹), dictionary decode is a gather, RLE reconstructs by run-table
+  ``searchsorted`` — every op exact.
+* :func:`pallas_decode` — a Pallas kernel that decodes one column tile per
+  grid step **in-register**: the grid pipelines each tile's encoded slice
+  HBM→VMEM (bit-packed words are tile-aligned by the storage invariant, so
+  a step's slice is a fixed whole-word window), unpacks with vector
+  shifts/masks in VMEM, and writes only the decoded tile.  The same
+  per-tile bodies (:func:`decode_tile`) run inside ``fused_pipeline``'s
+  kernel when a region streams encoded fact columns.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+class EncodedStream(NamedTuple):
+    """One encoded column's device-side payload, ready to stream through a
+    kernel grid.  ``words`` is the tile-aligned packed stream
+    (bitpack/for/dict), ``values`` the dictionary slab ([d]) or RLE run
+    values ([nt, R]), ``ends`` the RLE cumulative within-tile run ends
+    ([nt, R])."""
+
+    kind: str  # "bitpack" | "for" | "dict" | "rle"
+    dtype: str  # decoded dtype name
+    words: Optional[jax.Array] = None
+    values: Optional[jax.Array] = None
+    ends: Optional[jax.Array] = None
+    bits: int = 0
+    ref: int = 0
+    block: int = 1024
+
+
+def words_per_tile(bits: int, block: int) -> int:
+    return block // (32 // bits)
+
+
+def encoded_stream(enc, payload=None) -> "EncodedStream":
+    """Build the kernel-facing :class:`EncodedStream` for one
+    ``storage.EncodedColumn`` (``payload``: already-uploaded device arrays;
+    defaults to the host payload — jnp converts lazily)."""
+    import jax.numpy as jnp
+
+    p = payload if payload is not None else {
+        k: jnp.asarray(v) for k, v in enc.payload.items()
+    }
+    if enc.kind == "rle":
+        return EncodedStream(
+            "rle", enc.dtype, values=p["values"], ends=p["ends"],
+            block=enc.block,
+        )
+    assert enc.kind in ("bitpack", "for", "dict"), enc.kind
+    return EncodedStream(
+        enc.kind,
+        enc.dtype,
+        words=p["words"],
+        values=p.get("values"),
+        bits=enc.meta["bits"],
+        ref=enc.meta.get("ref", 0),
+        block=enc.block,
+    )
+
+
+# ---------------------------------------------------------------------------
+# tile-level decode bodies (pure jnp — shared by XLA, Pallas, and tests)
+# ---------------------------------------------------------------------------
+
+
+def unpack_words(words: jax.Array, bits: int) -> jax.Array:
+    """int32 packed words -> int32 values in [0, 2**bits); the exact inverse
+    of ``storage.pack_bits`` (vectorized shift+mask, value order preserved:
+    word 0 holds values 0..vpw-1 from its low bits up)."""
+    vpw = 32 // bits
+    w = words.astype(jnp.uint32)  # bit-pattern preserving (modular convert)
+    shifts = (jnp.arange(vpw, dtype=jnp.uint32) * jnp.uint32(bits))[None, :]
+    mask = jnp.uint32((1 << bits) - 1)
+    return ((w[:, None] >> shifts) & mask).reshape(-1).astype(jnp.int32)
+
+
+def decode_tile(
+    kind: str,
+    *,
+    words_tile: Optional[jax.Array] = None,  # [wpt] packed words of one tile
+    values: Optional[jax.Array] = None,  # dict slab [d] | rle row [R]
+    ends_row: Optional[jax.Array] = None,  # rle row [R]
+    bits: int = 0,
+    ref: int = 0,
+    block: int = 1024,
+) -> jax.Array:
+    """Decode ONE tile to ``[block]`` values — the in-register body used by
+    both Pallas kernels (on a VMEM tile) and the jitted XLA decode (vmapped
+    over tiles for RLE, flat for packed kinds)."""
+    if kind in ("bitpack", "for"):
+        v = unpack_words(words_tile, bits)
+        # FOR: frame ref is the chunk min; v + ref ≤ column max, no overflow
+        return v + jnp.int32(ref) if ref else v
+    if kind == "dict":
+        codes = unpack_words(words_tile, bits)
+        return jnp.take(values, codes, axis=0)
+    if kind == "rle":
+        off = jax.lax.broadcasted_iota(jnp.int32, (block, 1), 0)
+        # run index = count of run-ends ≤ off (ends strictly increase to
+        # ``block``; padded entries repeat ``block``, never matched)
+        run = jnp.sum((ends_row[None, :] <= off).astype(jnp.int32), axis=1)
+        return jnp.take(values, run, axis=0)
+    raise ValueError(f"unknown encoding {kind!r}")
+
+
+def decode_traced(
+    kind: str,
+    payload,
+    *,
+    bits: int = 0,
+    ref: int = 0,
+    block: int = 1024,
+    n: int,
+    chunk_rows: int,
+) -> jax.Array:
+    """Decode one uploaded encoded column INSIDE an enclosing jit trace —
+    the region fn's first stage, so XLA fuses decode with the chunk's
+    compute and no eager per-chunk dispatch happens.  Returns the
+    ``[chunk_rows]`` column; a short final chunk (``n < chunk_rows``) is
+    padded by repeating its last row, exactly mirroring
+    ``ChunkedTable.chunk_device(pad=True)`` (every op here is integer
+    shift/mask/gather — exact, so fusion cannot move a bit)."""
+    if kind == "plain":
+        a = payload["data"][:n]
+    elif kind in ("bitpack", "for"):
+        v = unpack_words(payload["words"], bits)[:n]
+        a = v + jnp.int32(ref) if ref else v
+    elif kind == "dict":
+        a = jnp.take(
+            payload["values"], unpack_words(payload["words"], bits)[:n],
+            axis=0,
+        )
+    elif kind == "rle":
+        values, ends = payload["values"], payload["ends"]
+        nt = values.shape[0]
+        off = jax.lax.broadcasted_iota(jnp.int32, (nt, block), 1)
+        run = jax.vmap(
+            lambda e, o: jnp.searchsorted(e, o, side="right").astype(jnp.int32)
+        )(ends, off)
+        a = jnp.take_along_axis(values, run, axis=1).reshape(-1)[:n]
+    else:
+        raise ValueError(f"unknown encoding {kind!r}")
+    if n < chunk_rows:
+        a = jnp.concatenate([a, jnp.repeat(a[-1:], chunk_rows - n)])
+    return a
+
+
+# ---------------------------------------------------------------------------
+# whole-column decode on device (the XLA streamed path)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "ref", "n"))
+def _unpack_full(words, *, bits, ref, n):
+    v = unpack_words(words, bits)[:n]
+    return v + jnp.int32(ref) if ref else v
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "n"))
+def _dict_full(words, values, *, bits, n):
+    return jnp.take(values, unpack_words(words, bits)[:n], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "n"))
+def _rle_full(values, ends, *, block, n):
+    nt = values.shape[0]
+    off = jax.lax.broadcasted_iota(jnp.int32, (nt, block), 1)
+    run = jax.vmap(
+        lambda e, o: jnp.searchsorted(e, o, side="right").astype(jnp.int32)
+    )(ends, off)
+    return jnp.take_along_axis(values, run, axis=1).reshape(-1)[:n]
+
+
+def decode_device(enc, payload) -> jax.Array:
+    """Decode one ``storage.EncodedColumn`` from device-resident ``payload``
+    arrays (``{name: jnp array}``, the uploaded encoded bytes).  Returns the
+    decoded ``[n]`` column; bitwise equal to ``enc.decode()`` on host."""
+    if enc.kind == "plain":
+        return payload["data"]
+    if enc.kind in ("bitpack", "for"):
+        return _unpack_full(
+            payload["words"],
+            bits=enc.meta["bits"], ref=enc.meta.get("ref", 0), n=enc.n,
+        )
+    if enc.kind == "dict":
+        return _dict_full(
+            payload["words"], payload["values"], bits=enc.meta["bits"], n=enc.n
+        )
+    if enc.kind == "rle":
+        return _rle_full(
+            payload["values"], payload["ends"], block=enc.block, n=enc.n
+        )
+    raise ValueError(f"unknown encoding {enc.kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Pallas decode kernel: one tile per grid step, decoded in-register
+# ---------------------------------------------------------------------------
+
+
+def _packed_kernel(w_ref, o_ref, *, kind, bits, ref, block):
+    o_ref[...] = decode_tile(
+        kind, words_tile=w_ref[...], bits=bits, ref=ref, block=block
+    )
+
+
+def _packed_dict_kernel(w_ref, v_ref, o_ref, *, bits, block):
+    o_ref[...] = decode_tile(
+        "dict", words_tile=w_ref[...], values=v_ref[...], bits=bits,
+        block=block,
+    )
+
+
+def _rle_kernel(v_ref, e_ref, o_ref, *, block):
+    o_ref[...] = decode_tile(
+        "rle", values=v_ref[0], ends_row=e_ref[0], block=block
+    )
+
+
+def pallas_decode(enc, payload, *, interpret: bool = True) -> jax.Array:
+    """Decode one encoded column with a Pallas kernel: the grid walks tiles,
+    each step's encoded slice is pipelined HBM→VMEM by its BlockSpec and
+    decoded in-register (shift/mask unpack, slab gather, or RLE run-table
+    reconstruction) — the decoded column never exists host-side and the
+    H2D link carried only encoded bytes.  Bitwise equal to
+    :func:`decode_device` / host ``decode()``."""
+    kind, block, n = enc.kind, enc.block, enc.n
+    if kind == "plain":
+        return payload["data"]
+    nt = max(1, -(-n // block))
+    out_shape = jax.ShapeDtypeStruct((nt * block,), jnp.dtype(enc.dtype))
+    if kind == "rle":
+        values, ends = payload["values"], payload["ends"]
+        R = values.shape[1]
+        out = pl.pallas_call(
+            functools.partial(_rle_kernel, block=block),
+            grid=(nt,),
+            in_specs=[
+                pl.BlockSpec((1, R), lambda i: (i, 0)),
+                pl.BlockSpec((1, R), lambda i: (i, 0)),
+            ],
+            out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+            out_shape=out_shape,
+            interpret=interpret,
+        )(values, ends)
+        return out[:n]
+    bits = enc.meta["bits"]
+    wpt = words_per_tile(bits, block)
+    words = payload["words"]
+    if kind == "dict":
+        values = payload["values"]
+        out = pl.pallas_call(
+            functools.partial(_packed_dict_kernel, bits=bits, block=block),
+            grid=(nt,),
+            in_specs=[
+                pl.BlockSpec((wpt,), lambda i: (i,)),
+                pl.BlockSpec(values.shape, lambda i: (0,)),
+            ],
+            out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+            out_shape=jax.ShapeDtypeStruct(
+                (nt * block,), jnp.dtype(enc.dtype)
+            ),
+            interpret=interpret,
+        )(words, values)
+        return out[:n]
+    out = pl.pallas_call(
+        functools.partial(
+            _packed_kernel, kind=kind, bits=bits,
+            ref=enc.meta.get("ref", 0), block=block,
+        ),
+        grid=(nt,),
+        in_specs=[pl.BlockSpec((wpt,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nt * block,), jnp.int32),
+        interpret=interpret,
+    )(words)
+    return out[:n]

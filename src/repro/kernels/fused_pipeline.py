@@ -50,6 +50,7 @@ from repro.dicts.ht_linear import MAX_PROBES  # the XLA builder's probe bound:
 # tables arrive built by the dicts backends (chains up to MAX_PROBES), so the
 # kernel must probe at least as deep or it would silently miss displaced
 # keys.  Early termination makes the deep bound free on healthy tables.
+from .decode import EncodedStream, decode_tile, words_per_tile
 from .hash_probe import gather_slots  # the ONE miss-zeroing payload gather
 
 ROW_BLOCK = 1024
@@ -179,7 +180,11 @@ def radix_route(
 def _kernel(
     part_ref,
     *refs,
-    col_meta,  # ((name, dtype), ...) — cols then the live mask stream
+    col_meta,  # ((name, dtype, elems_per_tile, enc), ...) — DMA streams;
+    # enc None for raw columns, ("bitpack"|"for", bits, ref) or
+    # ("dict", bits, 0) for encoded word streams; live mask stream last
+    aux_meta,  # ((name, kind), ...) — pipelined decode aux inputs: "dict"
+    # -> 1 ref (value slab), "rle" -> 2 refs (per-tile values, run ends)
     dict_meta,  # ((sym, find, n_slabs, n_parts, cp), ...) in dict order
     scalar_names,
     row_fn,
@@ -189,15 +194,20 @@ def _kernel(
     block,
     part_terminal,
     lane_ops,
+    has_init,
 ):
     nc = len(col_meta)
     nd = sum(2 + m[2] for m in dict_meta)
+    na = sum(1 if k == "dict" else 2 for _, k in aux_meta)
+    ni = 2 if has_init else 0
     ns = len(scalar_names)
     hbm_refs = refs[:nc]
     dict_refs = refs[nc : nc + nd]
-    scalar_refs = refs[nc + nd : nc + nd + ns]
-    # remaining refs: outputs | col buffers [2, block] ×nc | col sems | acc
-    rest = list(refs[nc + nd + ns :])
+    aux_refs = refs[nc + nd : nc + nd + na]
+    init_refs = refs[nc + nd + na : nc + nd + na + ni]
+    scalar_refs = refs[nc + nd + na + ni : nc + nd + na + ni + ns]
+    # remaining refs: outputs | col buffers [2, epb] ×nc | col sems | acc
+    rest = list(refs[nc + nd + na + ni + ns :])
     n_out = 2 if out_spec[0] == "dict" else 1
     out_refs = rest[:n_out]
     buf_refs = rest[n_out : n_out + nc]
@@ -207,9 +217,12 @@ def _kernel(
     i = pl.program_id(0)
 
     # -- double-buffered fact stream: start i+1's DMA before waiting on i ---
+    # encoded word streams copy ``elems_per_tile`` < block int32 words per
+    # step (the compression win crosses the HBM link too)
     def dma(c, slot, t):
+        epb = col_meta[c][2]
         return pltpu.make_async_copy(
-            hbm_refs[c].at[pl.ds(t * block, block)],
+            hbm_refs[c].at[pl.ds(t * epb, epb)],
             buf_refs[c].at[slot],
             sem_ref.at[c, slot],
         )
@@ -229,9 +242,34 @@ def _kernel(
     for c in range(nc):
         dma(c, cur, i).wait()
 
-    cols = {
-        name: buf_refs[c][cur] for c, (name, _) in enumerate(col_meta[:-1])
-    }
+    aux_by_name = {}
+    a = 0
+    for name, kind in aux_meta:
+        take = 1 if kind == "dict" else 2
+        aux_by_name[name] = aux_refs[a : a + take]
+        a += take
+
+    cols = {}
+    for c, (name, _dt, _epb, enc) in enumerate(col_meta[:-1]):
+        tile = buf_refs[c][cur]
+        if enc is None:
+            cols[name] = tile
+        elif enc[0] == "dict":  # in-register unpack + slab gather
+            cols[name] = decode_tile(
+                "dict", words_tile=tile,
+                values=aux_by_name[name][0][...], bits=enc[1], block=block,
+            )
+        else:  # bitpack / frame-of-reference: shift+mask (+ ref add)
+            cols[name] = decode_tile(
+                enc[0], words_tile=tile, bits=enc[1], ref=enc[2],
+                block=block,
+            )
+    for name, kind in aux_meta:
+        if kind == "rle":  # no word stream at all: per-tile run tables
+            vr, er = aux_by_name[name]
+            cols[name] = decode_tile(
+                "rle", values=vr[...][0], ends_row=er[...][0], block=block
+            )
     live = buf_refs[nc - 1][cur] != 0
 
     # -- resident dictionaries: family find + payload gathers ---------------
@@ -270,12 +308,20 @@ def _kernel(
 
         @pl.when(fresh)
         def _init():
-            tk_scr[...] = jnp.full_like(tk_scr, dbase.EMPTY)
-            # per-lane combine identities (all-zeros when every lane sums)
-            tv_scr[...] = (
-                jnp.zeros_like(tv_scr)
-                + dbase.lane_identity_row(lane_ops, tv_scr.shape[1])[None, :]
-            )
+            if has_init:
+                # streamed chunk fold: seed the accumulator with the carried
+                # state instead of an empty table
+                tk_scr[...] = init_refs[0][...]
+                tv_scr[...] = init_refs[1][...]
+            else:
+                tk_scr[...] = jnp.full_like(tk_scr, dbase.EMPTY)
+                # per-lane combine identities (zeros when every lane sums)
+                tv_scr[...] = (
+                    jnp.zeros_like(tv_scr)
+                    + dbase.lane_identity_row(lane_ops, tv_scr.shape[1])[
+                        None, :
+                    ]
+                )
 
         ks = jnp.where(live, keys, dbase.PAD)
         tk, tv = accumulate(tk_scr[...], tv_scr[...], ks, vals, live)
@@ -352,17 +398,35 @@ def fused_pipeline(
     block: int = ROW_BLOCK,
     interpret: bool = True,
     lane_ops: Optional[Tuple[str, ...]] = None,  # per-lane combine monoids
+    encoded: Optional[Dict[str, EncodedStream]] = None,  # compressed streams
+    init: Optional[Tuple[jax.Array, jax.Array]] = None,  # carried dict state
 ):
     """Run one fused region.  Returns ``(table_keys [C], table_vals [C, V])``
     for dictionary terminals (the ``accumulate`` hook's layout — duplicate
     keys aggregated; ``[P, Cp]``/``[P, Cp, V]`` when the terminal is
     partitioned) or ``sums [V]`` for scalar Reduce terminals.  With
     ``radix``, ``cols``/``live`` must already be tile-aligned by
-    :func:`radix_route`."""
+    :func:`radix_route`.
+
+    ``encoded`` maps column names (disjoint from ``cols``) to
+    :class:`~repro.kernels.decode.EncodedStream` payloads: those columns
+    cross HBM→VMEM *compressed* — bit-packed word windows ride the same
+    double-buffered DMA at ``block//vpw`` words per tile, dictionary slabs
+    and RLE run tables arrive as pipelined per-tile blocks — and decode
+    in-register before ``row_fn`` sees them.  ``init=(keys, vals)`` seeds a
+    (non-partitioned) dictionary terminal's accumulator with carried state,
+    turning one call into one fold step of a chunked out-of-core stream.
+    """
     n = live.shape[0]
     accumulate = accumulate or functools.partial(
         ht_linear.resident_accumulate, max_probes=MAX_PROBES, ops=lane_ops
     )
+    encoded = dict(encoded or {})
+    assert not (encoded and radix is not None), (
+        "encoded streams are tile-positional — radix routing operates on "
+        "decoded rows"
+    )
+    assert not set(encoded) & set(cols), "a column is either raw or encoded"
     col_names = tuple(sorted(cols))
     if radix is None:
         pad = -n % block
@@ -381,9 +445,43 @@ def fused_pipeline(
         part_terminal = radix.part_terminal
 
     col_meta = tuple(
-        (c, cols_p[k].dtype) for k, c in enumerate(col_names)
-    ) + (("__live__", live_p.dtype),)
-    streams = cols_p + [live_p]
+        (c, cols_p[k].dtype, block, None) for k, c in enumerate(col_names)
+    )
+    streams = list(cols_p)
+    aux_meta = []
+    aux_args = []
+    aux_specs = []
+    for name in sorted(encoded):
+        es = encoded[name]
+        assert es.block == block, (name, es.block, block)
+        if es.kind in ("bitpack", "for", "dict"):
+            wpt = words_per_tile(es.bits, block)
+            assert es.words.shape[0] == n_tiles * wpt, (
+                name, es.words.shape, n_tiles, wpt,
+            )
+            col_meta += (
+                (name, es.words.dtype, wpt,
+                 (es.kind, es.bits, es.ref)),
+            )
+            streams.append(es.words)
+            if es.kind == "dict":
+                aux_meta.append((name, "dict"))
+                aux_args.append(es.values)
+                aux_specs.append(
+                    pl.BlockSpec(es.values.shape, lambda i, pr: (0,))
+                )
+        else:  # rle: no word stream — per-tile run tables only
+            assert es.kind == "rle", es.kind
+            assert es.values.shape[0] == n_tiles, (name, es.values.shape)
+            R = es.values.shape[1]
+            aux_meta.append((name, "rle"))
+            aux_args += [es.values, es.ends]
+            aux_specs += [
+                pl.BlockSpec((1, R), lambda i, pr: (i, 0)),
+                pl.BlockSpec((1, R), lambda i, pr: (i, 0)),
+            ]
+    col_meta += (("__live__", live_p.dtype, block, None),)
+    streams.append(live_p)
     stream_specs = [
         pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY) for _ in streams
     ]
@@ -469,9 +567,25 @@ def fused_pipeline(
         out_shape = [jax.ShapeDtypeStruct((1, V), jnp.float32)]
         acc_scratch = [pltpu.VMEM((1, V), jnp.float32)]
 
+    init_args = []
+    init_specs = []
+    if init is not None:
+        assert out_spec[0] == "dict" and not part_terminal, (
+            "carried state applies to non-partitioned dictionary terminals"
+        )
+        tk0, tv0 = init
+        init_args = [tk0, tv0]
+        init_specs = [
+            pl.BlockSpec(tk0.shape, lambda i, pr: (0,)),
+            pl.BlockSpec(tv0.shape, lambda i, pr: (0, 0)),
+        ]
+
     nc = len(streams)
     scratch = (
-        [pltpu.VMEM((2, block), s.dtype) for s in streams]
+        [
+            pltpu.VMEM((2, col_meta[k][2]), s.dtype)
+            for k, s in enumerate(streams)
+        ]
         + [pltpu.SemaphoreType.DMA((nc, 2))]
         + acc_scratch
     )
@@ -479,7 +593,8 @@ def fused_pipeline(
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(n_tiles,),
-        in_specs=stream_specs + dict_specs + scalar_specs,
+        in_specs=stream_specs + dict_specs + aux_specs + init_specs
+        + scalar_specs,
         out_specs=out_specs,
         scratch_shapes=scratch,
     )
@@ -487,6 +602,7 @@ def fused_pipeline(
         functools.partial(
             _kernel,
             col_meta=col_meta,
+            aux_meta=tuple(aux_meta),
             dict_meta=tuple(dict_meta),
             scalar_names=scalar_names,
             row_fn=row_fn,
@@ -496,11 +612,12 @@ def fused_pipeline(
             block=block,
             part_terminal=part_terminal,
             lane_ops=lane_ops,
+            has_init=init is not None,
         ),
         grid_spec=grid_spec,
         out_shape=out_shape,
         interpret=interpret,
-    )(tile_part, *streams, *dict_args, *scalar_args)
+    )(tile_part, *streams, *dict_args, *aux_args, *init_args, *scalar_args)
     if out_spec[0] == "dict":
         tk, tv = out
         if part_terminal:

@@ -292,19 +292,54 @@ def test_shared_executable_demux_and_cache(db, sigma):
 # ---------------------------------------------------------------------------
 
 
-def test_non_sum_lanes_refused_under_sharding():
-    """Cross-shard merges (exchange rebuilds, psum of partials) combine by
-    +; plans carrying min/max lanes must be rejected loudly, not silently
-    mis-merged."""
-    from repro.exec import distributed as D
+def test_non_sum_lanes_merge_correctly_under_sharding():
+    """Cross-shard merges are op-aware: ``legalize`` copies the producing
+    node's per-lane monoids onto the Exchange, and ``_plan_exchange``
+    re-builds shuffled partials with those ops (min/max lanes combine by
+    min/max, never +).  Runs the min/max/sum group-by sharded over 4
+    virtual devices and checks against the single-shard answer."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
 
-    plan = compile_plan(_minmax_prog(), {})
-    with pytest.raises(NotImplementedError, match="semiring"):
-        D._check_shardable_ops(plan)
-    S, _ = _minmax_data()
-    fused = P.fuse(plan, sigma=collect_stats({"S": S}))
-    with pytest.raises(NotImplementedError, match="semiring"):
-        D._check_shardable_ops(fused)
+    here = os.path.dirname(__file__)
+    src = os.path.join(here, "..", "src")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.pathsep.join([src, here])
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(
+            """
+            import numpy as np
+            from repro import compat
+            from repro.core import plan as P
+            from repro.core.lower import compile as compile_plan
+            from repro.data.table import collect_stats
+            from repro.exec import distributed as D
+            from repro.exec import engine as E
+            from test_shared_scan import _minmax_data, _minmax_prog
+
+            S, ref = _minmax_data()
+            plan = compile_plan(_minmax_prog(), {})
+            mesh = compat.make_mesh((4,), ("data",))
+            got = D.execute_plan_sharded(
+                plan, {"S": S}, mesh, "data", shard_rels=("S",),
+                sigma=collect_stats({"S": S}),
+            ).items_np()
+            assert set(got) == set(ref), (set(got), set(ref))
+            for g, (lo, hi, tot) in ref.items():
+                np.testing.assert_allclose(got[g][0], lo, rtol=1e-6)
+                np.testing.assert_allclose(got[g][1], hi, rtol=1e-6)
+                np.testing.assert_allclose(got[g][2], tot, rtol=1e-4)
+            print("MINMAX_SHARDED_OK")
+            """
+        )],
+        capture_output=True, text=True, env=env, timeout=540,
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "MINMAX_SHARDED_OK" in out.stdout
 
 
 # ---------------------------------------------------------------------------
