@@ -95,11 +95,11 @@ def _query_entry(qname, q, db, sigma, delta, repeats):
     syn = synthesize(q.llql(), sigma, delta)
     plan = compile_plan(q.llql(), syn.choices)
     fplan = P.fuse(plan, sigma=sigma)
-    E.REGION_MODES.clear()
     E.execute_plan(fplan, db, sigma=sigma, params=q.defaults)  # trace paths
+    rep = E.last_report()
     paths = {
         n.out: {
-            "path": E.REGION_MODES.get(n.out, "xla"),
+            "path": rep.mode(n.out, "xla"),
             "stages": len(n.stages),
             **(
                 {"radix": n.partitions, "part_sym": n.part_sym}

@@ -115,10 +115,19 @@ def run(
         for k in ref:
             np.testing.assert_allclose(got[k], ref[k], rtol=1e-5, atol=1e-5)
 
-    # deterministic memory ledger for one full streamed pass
-    E.reset_stream_stats()
-    run_streamed()
-    stats = dict(E.STREAM_STATS)
+    # deterministic memory ledger for one full streamed pass, aggregated
+    # from the per-execution ExecutionReports (peaks max, counters sum)
+    reports = []
+    for ex, pv in zip(ex_str, params):
+        ex(cdb, pv)
+        reports.append(E.last_report())
+    stats = {
+        "regions": sum(r.streamed_regions for r in reports),
+        "chunks": sum(r.chunks for r in reports),
+        "h2d_bytes": sum(r.h2d_bytes for r in reports),
+        "peak_chunk_bytes": max(r.peak_chunk_bytes for r in reports),
+        "peak_state_bytes": max(r.peak_state_bytes for r in reports),
+    }
     assert stats["regions"] >= len(streamed_rels), stats
     fact_decoded = sum(
         4 * db[r].nrows * len(db[r].names()) for r in streamed_rels

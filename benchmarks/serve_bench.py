@@ -22,9 +22,9 @@ import numpy as np
 from repro.core.cost import AnalyticCostModel
 from repro.core.synthesis import synthesize
 from repro.data import tpch
-from repro.data.table import collect_stats
 from repro.exec import engine as E
-from repro.exec.queries import QUERIES
+from repro.exec.queries import REGISTRY as QUERIES
+from repro.session import connect
 from .common import emit, write_record
 
 # per-query parameter samplers: fresh bindings drawn over sensible domains
@@ -72,11 +72,12 @@ def run(
 
     rng = np.random.default_rng(seed)
     db = tpch.generate(scale=scale, seed=seed).tables()
-    sigma = collect_stats(db)
     delta = AnalyticCostModel()
+    session = connect(db, delta=delta)
+    sigma = session.sigma
 
     # -- warm path: compile once per shape, serve a mixed stream -----------
-    srv = QueryServer(db, delta=delta, max_batch=max_batch)
+    srv = QueryServer(session, max_batch=max_batch)
     srv.warm_up()
     for qname, params in _workload(rng, requests):
         srv.submit(qname, **params)

@@ -18,11 +18,10 @@ from __future__ import annotations
 import jax
 import numpy as np
 
-from repro.core.cost import AnalyticCostModel, DictChoice, NetCostModel
-from repro.core.synthesis import synthesize
+from repro.core.cost import AnalyticCostModel, DictChoice
 from repro.data import tpch
-from repro.data.table import collect_stats
-from repro.exec.queries import FACT_RELS, QUERIES
+from repro.exec.queries import FACT_RELS, REGISTRY as QUERIES
+from repro.session import connect
 from .common import bench, emit, write_record
 
 ALL_SYMS = ("Agg", "Sd", "OD", "QtyAgg", "CN", "SN", "PX", "Ragg")
@@ -33,28 +32,27 @@ def run(scale: float = 0.02, repeats: int = 3, seed: int = 0):
 
     delta = load_model() or AnalyticCostModel()
     db = tpch.generate(scale=scale, seed=seed).tables()
-    sigma = collect_stats(db)
+    session = connect(db, delta=delta)
     backends = ("ht_linear", "ht_twochoice", "st_sorted", "st_blocked")
     for qname, q in sorted(QUERIES.items()):
         times = {}
         for ds in backends:
+            # the forced single-policy arm stays on the raw query API: the
+            # point is to bypass Alg. 1, which the Session always runs
             choices = {s: DictChoice(ds, hinted=ds.startswith("st")) for s in ALL_SYMS}
             fn = lambda: q.run(db, choices)
             sec = bench(fn, repeats=repeats)
             times[ds] = sec
             emit(f"fig11_{qname}/single/{ds}", sec * 1e6, f"ms={sec*1e3:.2f}")
-        syn = synthesize(q.llql(), sigma, delta)
-        tuned_choices = dict(syn.choices)
-        for s in ALL_SYMS:
-            tuned_choices.setdefault(s, next(iter(syn.choices.values())))
-        fn = lambda: q.run(db, tuned_choices)
+        fn = lambda: session.query(qname)
         sec = bench(fn, repeats=repeats)
+        tuned = session.shape(qname).choices
         best, worst = min(times.values()), max(times.values())
         emit(
             f"fig11_{qname}/tuned",
             sec * 1e6,
             f"ms={sec*1e3:.2f},vs_best={sec/best:.2f}x,vs_worst={sec/worst:.2f}x,"
-            f"plan={'|'.join(f'{k}:{v}' for k, v in sorted(syn.choices.items()))}",
+            f"plan={'|'.join(f'{k}:{v}' for k, v in sorted(tuned.items()))}",
         )
 
 
@@ -66,15 +64,11 @@ def run_dist(
     out: str = "BENCH_tpch_dist.json",
 ):
     """Distributed smoke: every query sharded over an N-way mesh with the
-    fact tables actually sharded, timed against the single-shard executor,
-    written as a uniform BENCH record (``common.write_record``) the CI perf
-    gate diffs against ``benchmarks/baselines/BENCH_tpch_dist.json``."""
-    from repro import compat
-    from repro.core import plan as cplan
-    from repro.core.lower import compile as compile_plan
+    fact tables actually sharded (``connect(db, shards=N)``), timed against
+    a single-shard session, written as a uniform BENCH record
+    (``common.write_record``) the CI perf gate diffs against
+    ``benchmarks/baselines/BENCH_tpch_dist.json``."""
     from repro.costmodel import load_model
-    from repro.exec import distributed as D
-    from repro.exec import engine as E
 
     n_dev = jax.device_count()
     if n_dev < shards:
@@ -84,31 +78,32 @@ def run_dist(
         )
     delta = load_model() or AnalyticCostModel()
     db = tpch.generate(scale=scale, seed=seed).tables()
-    sigma = collect_stats(db)
-    mesh = compat.make_mesh((shards,), ("data",))
+    single = connect(db, delta=delta)
+    session = connect(db, shards=shards, delta=delta)
     results = {}
-    for qname, q in sorted(QUERIES.items()):
-        syn = synthesize(
-            q.llql(), sigma, delta,
-            net=NetCostModel(n_shards=shards), sharded_rels=FACT_RELS,
-        )
-        plan = compile_plan(q.llql(), syn.choices)
-        # time through .arrays(): the result wrappers are plain dataclasses
-        # jax.block_until_ready cannot see into.  Both paths go through the
-        # executable caches so repeats hit the existing traces (compile
-        # excluded, matching bench()'s contract).  Both run the fused
-        # production form: the single-shard plan is fused here, the sharded
-        # executor fuses its legalized plan internally (DESIGN.md §7).
-        ex1 = E.cached_executable(cplan.fuse(plan, sigma=sigma), db, sigma=sigma)
-        sec_1 = bench(lambda: ex1(db, q.defaults).arrays(), repeats=repeats)
-        run_n = D.cached_sharded_executor(
-            plan, db, mesh, "data", shard_rels=FACT_RELS, sigma=sigma
-        )
-        sec_n = bench(lambda: run_n(q.defaults).arrays(), repeats=repeats)
+    for qname in sorted(QUERIES):
+        # warm both shapes through the Session funnel (planning + compile,
+        # populates the ExecutionReport), then time the executor surface
+        # via .arrays() — the result wrappers are plain dataclasses
+        # jax.block_until_ready cannot see into, and timing through
+        # session.query would charge the python result-dict materialization
+        # the committed baseline never paid
+        single.query(qname)
+        session.query(qname)
+        rep = session.report()
+        ex1 = single.shape(qname).executable
+        exn = session.shape(qname).executable
+        bound = QUERIES[qname].bind_defaults({})
+        sec_1 = bench(lambda: ex1(db, bound).arrays(), repeats=repeats)
+        sec_n = bench(lambda: exn(bound).arrays(), repeats=repeats)
         results[f"tpch_dist/{qname}"] = {
             "seconds": sec_n,
             "ms_single": sec_1 * 1e3,
-            "choices": {s: str(c) for s, c in sorted(syn.choices.items())},
+            "choices": {
+                s: str(c)
+                for s, c in sorted(session.shape(qname).choices.items())
+            },
+            "report_shards": rep.shards if rep is not None else 0,
         }
         emit(
             f"tpch_dist_{qname}/shards{shards}",

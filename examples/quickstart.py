@@ -7,7 +7,10 @@
 3. collect Σ statistics from the data;
 4. load the installed dictionary cost model Δ (or the analytic prior);
 5. run Algorithm 1 — greedy per-dictionary implementation choice;
-6. execute the lowered vectorized plan and print the explain output;
+6. open the Session façade (``repro.connect``) and execute — one
+   ``session.query(name, **params)`` runs the whole synthesize → fuse →
+   cached-executable funnel; ``session.report()`` returns the structured
+   per-region ExecutionReport of the call;
 7. bind-and-rerun: the query's date knob is a free ``?date`` Param, so a
    fresh binding reuses the already-jitted executable — zero synthesis,
    zero retracing (DESIGN.md §6);
@@ -15,22 +18,26 @@
    ``plan.merge_shared_scans`` fuses their scan-rooted regions, one
    jitted executable runs the batch and demuxes per-query results,
    bitwise-identical to running them separately (DESIGN.md §9);
-9. out of core: rerun q1 under a device memory budget smaller than the
-   decoded lineitem table — ``storage.chunk_db`` keeps the fact table
-   host-side as compressed column chunks and the engine streams them
-   through the query, bitwise-identical to the resident run
-   (DESIGN.md §10).
+9. out of core: rerun q1 through a session opened under a device memory
+   budget smaller than the decoded lineitem table — the session chunks
+   the fact table host-side (compressed column chunks) and the engine
+   streams them through the query, bitwise-identical to the resident
+   run (DESIGN.md §10);
+10. adapt: a ``connect(db, adapt=True)`` session races the near-cost
+    Alg.-1 candidates on warm-up, validates them bitwise, and serves the
+    measured winner (DESIGN.md §11).
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+import repro
 from repro.core import llql as L
 from repro.core import operators as O
 from repro.core.cost import AnalyticCostModel, infer_cost
 from repro.core.synthesis import synthesize
 from repro.data import tpch
 from repro.data.table import collect_stats
-from repro.exec.queries import QUERIES
+from repro.exec.queries import REGISTRY as QUERIES
 
 
 def main() -> None:
@@ -62,30 +69,31 @@ def main() -> None:
     print("\n== cost breakdown of the chosen plan:")
     print(res.cost.explain())
 
-    print("\n== executing the lowered plan ...")
-    out = q.run(db, res.choices)
+    print("\n== executing through the Session façade ...")
+    session = repro.connect(db, delta=delta)
+    out = session.query("q3")
     rows = sorted(out.items())[:5]
     print(f"   {len(out)} groups; first rows:")
     for k, v in rows:
         print(f"   orderkey={k}: revenue={float(v[0]):.2f}")
+    print("   report:", session.report().summary().replace("\n", "; "))
 
     ref = q.reference(db)
     ok = all(abs(float(out[k][0]) - float(ref[k][0])) < 1e-1 for k in ref)
     print(f"   matches the numpy oracle: {ok}")
 
     print("\n== bind-and-rerun: fresh ?date bindings, one compiled shape ...")
-    from repro.core.lower import compile as compile_plan
     from repro.exec import engine as E
 
-    plan = compile_plan(prog, res.choices)
-    ex = E.cached_executable(plan, db, sigma=sigma)  # hit: q.run compiled it
+    ex = session.shape("q3").executable
     for date in (0.05, 0.1, 0.2):
-        groups = len(ex(db, {"date": date}).items_np())
+        groups = len(session.query("q3", date=date))
         print(f"   ?date={date}: {groups} groups (traces={ex.trace_count})")
     print(f"   executable cache: {E.exec_cache_stats()}")
 
     print("\n== shared scan: q1 + q18 batched through one lineitem pass ...")
     from repro.core import plan as P
+    from repro.core.lower import compile as compile_plan
 
     pair = ("q1", "q18")
     plans = [
@@ -111,30 +119,47 @@ def main() -> None:
     li = db["lineitem"]
     decoded = 4 * li.nrows * len(li.names())
     budget = 1 << 20  # ~40% of decoded lineitem at scale 0.01
-    cdb = S.chunk_db(db, memory_budget_bytes=budget, chunk_rows=1 << 13)
-    wet = sorted(r for r, t in cdb.items() if S.is_chunked(t))
+    ooc = repro.connect(
+        db, memory_budget=budget, chunk_rows=1 << 13, delta=delta
+    )
     enc = sum(
-        c.nbytes for chunk in cdb["lineitem"].chunks for c in chunk.values()
+        c.nbytes for chunk in ooc.db["lineitem"].chunks for c in chunk.values()
     )
     print(
         f"   budget {budget>>10}KiB < lineitem decoded {decoded>>10}KiB"
         f" -> host-side chunks, {decoded/enc:.2f}x compressed"
     )
-    q1 = QUERIES["q1"]
-    plan1 = P.fuse(
-        compile_plan(q1.llql(), {}), sigma=sigma, streamed=wet
-    )
-    E.REGION_MODES.clear()
-    streamed = E.execute_plan(
-        plan1, cdb, sigma=sigma,
-        params=E.coerce_bindings(plan1, q1.bind_defaults({})),
-    ).items_np()
-    resident = q1.run(db, {})
+    streamed = ooc.query("q1")
+    rep = ooc.report()
+    resident = QUERIES["q1"].run(db, {})
     same = set(streamed) == set(resident) and all(
         bool((streamed[k] == resident[k]).all()) for k in streamed
     )
-    print(f"   region modes: {dict(E.REGION_MODES)}")
+    print(f"   region modes: {rep.modes()}")
+    print(
+        f"   chunks={rep.chunks}, h2d={rep.h2d_bytes>>10}KiB,"
+        f" peak chunk={rep.peak_chunk_bytes>>10}KiB"
+    )
     print(f"   q1 streamed == resident (bitwise): {same}")
+
+    print("\n== adapt: race near-cost candidates, serve the measured winner ...")
+    adaptive = repro.connect(db, adapt=True)
+    adaptive.query("q18")
+    info = adaptive.explain("q18")
+    for race in info["races"]:
+        for lane in race["lanes"]:
+            measured = (
+                f"{lane['measured_ms']:.2f}ms"
+                if lane["measured_ms"] is not None
+                else "-"
+            )
+            print(
+                f"   lane swapped={lane['swapped']}"
+                f" modeled={lane['modeled_ms']:.2f}ms"
+                f" measured={measured}"
+                f" validated={lane['validated']}"
+            )
+    print(f"   serving choices: {info['choices']}")
 
 
 if __name__ == "__main__":

@@ -1,4 +1,23 @@
 """DBFlex-JAX: fine-tuned data structures for analytical query processing,
-re-derived for TPU pods.  See DESIGN.md."""
+re-derived for TPU pods.  See DESIGN.md.
 
-__version__ = "1.0.0"
+The public entry point is :func:`repro.connect`::
+
+    import repro
+    session = repro.connect(db, memory_budget=..., shards=..., adapt=...)
+    result = session.query("q18", threshold=200)
+    print(session.report().summary())
+"""
+
+__version__ = "1.1.0"
+
+__all__ = ["connect", "Session"]
+
+
+def __getattr__(name):
+    # lazy: importing `repro` must stay light (the session pulls in jax)
+    if name in ("connect", "Session"):
+        from repro import session as _session
+
+        return getattr(_session, {"connect": "connect", "Session": "Session"}[name])
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

@@ -125,9 +125,19 @@ class AnalyticCostModel:
     plausible values — the default, stable for unit tests) or
     ``"calibrated"`` (fitted from the measured sweep), or an explicit
     table.  Only *relative* shape matters for synthesis.
+
+    ``corrections`` is the ONLINE recalibration table (DESIGN.md §11): a
+    per-(ds, op[, ordered]) multiplicative factor, updated from
+    measured-vs-predicted residuals by the adaptive planner
+    (``core.adapt``) as raced candidates report real wall times.  It
+    starts empty (identity) and deforms the installed constants toward
+    what this process actually measures — the serving-time continuation
+    of the offline profiled regression.
     """
 
-    def __init__(self, scale: float = 1.0, constants="prior") -> None:
+    def __init__(
+        self, scale: float = 1.0, constants="prior", corrections=None
+    ) -> None:
         self.scale = scale
         if constants == "prior":
             self.table = PRIOR_OP_NS
@@ -135,10 +145,42 @@ class AnalyticCostModel:
             self.table = CALIBRATED_OP_NS
         else:
             self.table = dict(constants)
+        self.corrections: Dict[tuple, float] = dict(corrections or {})
 
     @classmethod
     def calibrated(cls, scale: float = 1.0) -> "AnalyticCostModel":
         return cls(scale, constants="calibrated")
+
+    @staticmethod
+    def op_key(ds: str, op: str, ordered: bool) -> tuple:
+        if ds.startswith("ht"):
+            return (ds, op)
+        if ds.startswith("st"):
+            return (ds, op, bool(ordered))
+        raise KeyError(f"unknown dictionary implementation {ds!r}")
+
+    def correction(self, ds: str, op: str, ordered: bool = False) -> float:
+        return self.corrections.get(self.op_key(ds, op, ordered), 1.0)
+
+    def apply_residual(
+        self,
+        ds: str,
+        op: str,
+        ordered: bool,
+        ratio: float,
+        alpha: float = 0.5,
+    ) -> float:
+        """One online-recalibration step: nudge the (ds, op) correction a
+        geometric ``alpha`` of the way toward the observed
+        measured/predicted ratio (predicted under the CURRENT corrections,
+        so repeated consistent observations converge the factor).  Returns
+        the updated correction."""
+        key = self.op_key(ds, op, ordered)
+        ratio = min(max(float(ratio), 1e-3), 1e3)
+        cur = self.corrections.get(key, 1.0)
+        new = min(max(cur * ratio ** float(alpha), 1e-4), 1e4)
+        self.corrections[key] = new
+        return new
 
     @staticmethod
     def shape_factor(ds: str, op: str, size: float, ordered: bool) -> float:
@@ -162,13 +204,12 @@ class AnalyticCostModel:
         n = max(0.0, float(n))
         if n == 0.0:
             return 0.0
-        if ds.startswith("ht"):
-            key = (ds, op)
-        elif ds.startswith("st"):
-            key = (ds, op, bool(ordered))
-        else:  # pragma: no cover - unknown backend
-            raise KeyError(f"unknown dictionary implementation {ds!r}")
-        per = self.table[key] * self.shape_factor(ds, op, size, ordered)
+        key = self.op_key(ds, op, ordered)
+        per = (
+            self.table[key]
+            * self.corrections.get(key, 1.0)
+            * self.shape_factor(ds, op, size, ordered)
+        )
         return self.scale * n * per * 1e-9
 
 
@@ -291,6 +332,13 @@ class FusionCostModel:
     # payload; this is the TPU translation of the paper's cache-consciousness
     # argument, and the term that makes co-residing a partitioned slab worth
     # one extra routing pass over the fact stream
+    # -- chained out-of-core streaming (DESIGN.md §10/§11) ------------------
+    chunk_rows: float = float(1 << 16)  # mirrors storage.CHUNK_ROWS — the
+    # planner's estimate of how many source rows one streamed chunk holds
+    spill_budget: int = 8 << 20  # device bytes a spilled-and-decoded chained
+    # intermediate may occupy: beyond it the spill-and-run-resident
+    # alternative is not available and the downstream chain MUST stay fused
+    # onto the pending stream
 
     def dict_bytes(self, capacity: float, lanes: float) -> float:
         """VMEM footprint of a resident dictionary slab."""
@@ -336,6 +384,39 @@ class FusionCostModel:
             * self.partition_pass_factor
         )
         return (float(saved_bytes) - route) / self.hbm_bytes_per_sec
+
+    def delta_chained(
+        self,
+        inter_rows: float,
+        inter_cols: float,
+        state_bytes: float,
+        n_chunks: float,
+    ) -> float:
+        """Seconds saved by CHAINING a downstream region onto a pending
+        Project-terminal streamed intermediate instead of spilling the
+        projection and running the consumer resident.
+
+        Chaining re-folds a carried accumulator per source chunk, and
+        because the chained intermediate has no Σ row the state is sized
+        for the FULL source row count; XLA's functional update rewrites
+        that whole buffer every chunk, so the chained terminal pays
+        ``n_chunks × state_bytes`` of state traffic where the resident
+        consumer of a spilled intermediate pays it once.  Spilling pays
+        the intermediate's host round-trip (write + re-read) instead.
+        Below small scales the oversized per-chunk state rewrite dominates
+        (~10x measured) and this goes negative → spill; a decoded
+        intermediate larger than ``spill_budget`` has no resident
+        alternative, so chaining is forced (``+inf``)."""
+        decoded = float(inter_rows) * 4.0 * max(1.0, float(inter_cols))
+        if decoded > self.spill_budget:
+            return float("inf")
+        spill = (
+            float(inter_rows)
+            * (self.col_bytes * float(inter_cols) + self.mask_bytes)
+            + float(state_bytes)
+        )
+        merge = max(1.0, float(n_chunks)) * float(state_bytes)
+        return (spill - merge) / self.hbm_bytes_per_sec
 
     def delta_share(self, saved_bytes: float, resident_bytes: float) -> float:
         """Seconds saved by merging fused regions from *different* plans

@@ -797,12 +797,15 @@ def fuse(plan: Plan, sigma=None, fusion=None, streamed=()) -> Plan:
     budget ruled out — and the VMEM sizing above prices the Pallas
     resident path, not the chunked XLA loop, whose working set is one
     chunk regardless of region shape (the kernel dispatch re-checks its
-    own residency contract per chunk).  The hint is relation-only: a
-    Project terminal over a streamed source yields a host-chunked
-    intermediate, but chains scanning *that* are sized by the cost model
-    as usual — a projected subset is far smaller than the fact table, so
-    forcing fusion there would trade cheap resident execution for
-    chained per-chunk merges with nothing to save.
+    own residency contract per chunk).  A Project terminal over a streamed
+    source yields a *pending* host-chunked intermediate; a chain scanning
+    THAT faces its own costed decision (``fusion.delta_chained``): fusing
+    chains it onto the chunk loop, paying a capacity-sized carried-state
+    rewrite per chunk, while leaving the chain unfused spills the
+    projected intermediate and runs the consumer resident — far cheaper
+    below small scales (the intermediate is a narrow subset of the fact
+    table), mandatory-to-avoid above them (the decoded intermediate no
+    longer fits ``fusion.spill_budget``).
     """
     from .cost import FusionCostModel
 
@@ -826,6 +829,10 @@ def fuse(plan: Plan, sigma=None, fusion=None, streamed=()) -> Plan:
     i = 0
     nodes = plan.nodes
     wet = set(streamed)
+    # pending-stream intermediates: out symbol of a force-fused
+    # Project-terminal chain over a streamed source -> (intermediate rows,
+    # intermediate cols, streamed source rows)
+    pending: Dict[str, Tuple[float, float, float]] = {}
     while i < len(nodes):
         chain = _match_chain(nodes, i)
         if chain is None:
@@ -838,20 +845,69 @@ def fuse(plan: Plan, sigma=None, fusion=None, streamed=()) -> Plan:
             out_nodes.append(nodes[i])
             i += 1
             continue
-        if chain[0].source in wet:
+        src = chain[0].source
+        if src in wet:
+            src_rows = shape.rows.get(chain[0].out, fusion.default_rows)
             out_nodes.append(
                 Pipeline(
                     chain[-1].out,
-                    source=chain[0].source,
+                    source=src,
                     stages=tuple(chain),
                     partitions=0,
                     part_sym="",
                 )
             )
+            if isinstance(chain[-1], Project):
+                pending[chain[-1].out] = (
+                    shape.rows.get(chain[-1].out, fusion.default_rows),
+                    float(len(chain[-1].fields)),
+                    src_rows,
+                )
+        elif src in pending:
+            if _chained_delta(chain, pending[src], shape, fusion) > 0.0:
+                # chaining wins: the usual costed decision (fused regions
+                # scanning the pending symbol join its chunk loop)
+                decided = _decide_region(chain, shape, fusion)
+                out_nodes.extend(decided)
+                for nd in decided:
+                    if (
+                        isinstance(nd, Pipeline)
+                        and nd.source == src
+                        and isinstance(nd.stages[-1], Project)
+                    ):
+                        pending[nd.out] = (
+                            shape.rows.get(nd.out, fusion.default_rows),
+                            float(len(nd.stages[-1].fields)),
+                            pending[src][2],
+                        )
+            else:  # spill the pending intermediate; consumer runs resident
+                out_nodes.extend(chain)
         else:
             out_nodes.extend(_decide_region(chain, shape, fusion))
         i = hi
     return Plan(tuple(out_nodes), plan.result, plan.choices, plan.params)
+
+
+def _chained_delta(
+    chain: List[Node], inter: Tuple[float, float, float], shape: "_Shape",
+    fusion,
+) -> float:
+    """Δ_chained for a chain scanning a pending streamed intermediate: the
+    per-chunk carried-state rewrite a dictionary terminal pays when chained
+    versus spilling the projection and running resident.  Non-dictionary
+    terminals carry no capacity-sized state (Reduce folds scalars, Project
+    streams through), so chaining them is free."""
+    inter_rows, inter_cols, src_rows = inter
+    term = chain[-1]
+    state_bytes = 0.0
+    if isinstance(term, (GroupBy, GroupJoin)):
+        lanes = float(len(term.values)) if isinstance(term, GroupBy) else 1.0
+        # the chained terminal has no Σ row for its intermediate input, so
+        # the engine sizes the carried state for the FULL source row count
+        # (engine._exec_streamed_chain) — capacity ≈ 2× next-pow2 rows
+        state_bytes = fusion.dict_bytes(2.0 * src_rows, lanes)
+    n_chunks = max(1.0, src_rows / float(fusion.chunk_rows))
+    return fusion.delta_chained(inter_rows, inter_cols, state_bytes, n_chunks)
 
 
 def _match_chain(nodes: Tuple[Node, ...], i: int) -> Optional[List[Node]]:

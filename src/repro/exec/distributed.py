@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Dict, Tuple, Union
 
 import jax
@@ -313,6 +314,19 @@ def sharded_executor(
     # parameter values are replicated scalars; stable dtypes keep the trace
     param_specs = {name: PSpec() for name in plan.param_names()}
     trace_counter = [0]
+    # ExecutionReport plumbing: execute_plan's per-region telemetry fires as
+    # Python side effects *at trace time* inside shard_map; capture that
+    # trace report once per retrace and republish it per call with the
+    # measured wall time (same protocol as the single-shard Executable)
+    report_state = {"trace": None, "seen": 0}
+
+    def publish(wall_s: float) -> None:
+        if trace_counter[0] != report_state["seen"]:
+            report_state["trace"] = E.last_report()
+            report_state["seen"] = trace_counter[0]
+        E.republish_report(
+            report_state["trace"], wall_s, trace_counter[0], shards=n_sh
+        )
 
     def coerce(params):
         return E.coerce_bindings(plan, params, defaults=default_params)
@@ -354,9 +368,16 @@ def sharded_executor(
         )
 
         def run_scalar(params=None):
-            return wrapped_scalar(cols_in, masks_in, coerce(params))
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(
+                wrapped_scalar(cols_in, masks_in, coerce(params))
+            )
+            publish(time.perf_counter() - t0)
+            run_scalar.last_report = E.last_report()
+            return out
 
         run_scalar.trace_counter = trace_counter
+        run_scalar.last_report = None
         return run_scalar
 
     def body(cols, masks, pvals):
@@ -379,12 +400,18 @@ def sharded_executor(
     ds = getattr(result_node, "choice", None)
 
     def run(params=None):
-        ks, vs, valid = wrapped(cols_in, masks_in, coerce(params))
+        t0 = time.perf_counter()
+        ks, vs, valid = jax.block_until_ready(
+            wrapped(cols_in, masks_in, coerce(params))
+        )
+        publish(time.perf_counter() - t0)
+        run.last_report = E.last_report()
         return ShardedDictResult(
             ds.ds if ds is not None else "ht_linear", ks, vs, valid.astype(bool)
         )
 
     run.trace_counter = trace_counter
+    run.last_report = None
     return run
 
 
@@ -513,12 +540,22 @@ def sharded_shared_executor(
         )
     )
 
+    report_state = {"trace": None, "seen": 0}
+
     def run(params_list=None):
         params_list = list(params_list or [None] * len(plans))
         coerced = tuple(
             E.coerce_bindings(p, params_list[i]) for i, p in enumerate(plans)
         )
-        flat = wrapped(cols_in, masks_in, coerced)
+        t0 = time.perf_counter()
+        flat = jax.block_until_ready(wrapped(cols_in, masks_in, coerced))
+        wall = time.perf_counter() - t0
+        if trace_counter[0] != report_state["seen"]:
+            report_state["trace"] = E.last_report()
+            report_state["seen"] = trace_counter[0]
+        run.last_report = E.republish_report(
+            report_state["trace"], wall, trace_counter[0], shards=n_sh
+        )
         res = []
         for (kind, choice), o in zip(kinds, flat):
             if kind == "refs":
@@ -534,6 +571,7 @@ def sharded_shared_executor(
         return res
 
     run.trace_counter = trace_counter
+    run.last_report = None
     run.shared_plan = shared
     return run
 

@@ -16,7 +16,9 @@ The ds-dispatch points (`build_dict`, `lookup_dict`) are where the paper's
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import time
+
+from dataclasses import dataclass, field
 from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
@@ -371,18 +373,28 @@ def execute_plan(
     env: Dict[str, object] = {}
     refs: Dict[str, object] = {}
 
-    for node in plan.nodes:
-        _exec_node(
-            node, env, refs, db, sigma, allow_sorted, params,
-            exchange_impl, repartition_impl,
-        )
+    rep = _begin_report()
+    t_plan = time.perf_counter()
+    try:
+        for node in plan.nodes:
+            t_node = time.perf_counter()
+            _exec_node(
+                node, env, refs, db, sigma, allow_sorted, params,
+                exchange_impl, repartition_impl,
+            )
+            if isinstance(node, P.Pipeline):
+                rec = rep.regions.get(node.out)
+                if rec is not None and rec.wall_s == 0.0:
+                    rec.wall_s = time.perf_counter() - t_node
 
-    if plan.result is not None and isinstance(
-        env.get(plan.result), _PendingStream
-    ):
-        env[plan.result].force(env, refs, sigma, allow_sorted, params)
+        if plan.result is not None and isinstance(
+            env.get(plan.result), _PendingStream
+        ):
+            env[plan.result].force(env, refs, sigma, allow_sorted, params)
 
-    return _plan_result(plan, env, refs)
+        return _plan_result(plan, env, refs)
+    finally:
+        _end_report(rep, time.perf_counter() - t_plan)
 
 
 def _plan_result(plan, env, refs):
@@ -647,14 +659,15 @@ def _exec_node(
 # out-of-core streaming (DESIGN.md §10)
 # ---------------------------------------------------------------------------
 
-# Per-process streaming ledger, reset by ``reset_stream_stats``.  All fields
-# are deterministic byte arithmetic (JAX CPU exposes no allocator high-water
+# DEPRECATED per-process streaming ledger, reset by ``reset_stream_stats``.
+# Kept populated for external callers; in-repo readers use the structured
+# ``ExecutionReport`` (``last_report()``) instead.  All fields are
+# deterministic byte arithmetic (JAX CPU exposes no allocator high-water
 # mark): ``h2d_bytes`` counts the encoded payload bytes that actually crossed
 # the host→device link, ``peak_chunk_bytes`` the largest decoded working set
 # a streamed region held on device at once (two chunks in flight — compute +
 # prefetch — plus in-transit encoded payloads), ``peak_state_bytes`` the
-# largest carried accumulator state.  Benchmarks read these to compare the
-# streamed device footprint against full residency.
+# largest carried accumulator state.
 STREAM_STATS: Dict[str, int] = {}
 
 
@@ -666,6 +679,203 @@ def reset_stream_stats() -> None:
 
 
 reset_stream_stats()
+
+
+# ---------------------------------------------------------------------------
+# structured execution telemetry (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class RegionRecord:
+    """Telemetry for ONE fused region, keyed by its terminal symbol.
+
+    ``mode`` is the execution path that produced the region's result
+    ("xla", "xla-radix-planned", "kernel-resident", "kernel-radix",
+    "streamed:N", "streamed-chained:N", "streamed-kernel:N",
+    "streamed-deferred", "shared:N"); ``family`` is the terminal
+    dictionary's ds annotation when the terminal builds one.  ``wall_s``
+    comes from timed dispatch: real elapsed time for the eager streamed
+    paths, trace-time dispatch for jitted resident regions (the end-to-end
+    call wall lives on the report)."""
+
+    sym: str
+    mode: str = ""
+    family: str = ""
+    wall_s: float = 0.0
+    chunks: int = 0
+    h2d_bytes: int = 0
+
+
+@dataclass
+class ExecutionReport:
+    """Structured per-execution telemetry, attached to every
+    ``execute_plan`` / ``execute_shared_plan`` / sharded call.
+
+    Replaces the ``REGION_MODES`` / ``STREAM_STATS`` string-dict globals
+    (still maintained as deprecated views): ``regions`` maps each fused
+    region's terminal symbol to its :class:`RegionRecord`; the scalar
+    fields aggregate the streaming ledger for the whole execution.
+    ``wall_s`` is the end-to-end wall time of the call that produced the
+    report; ``traced`` marks reports whose region detail was captured at
+    trace time (jitted resident path) and republished per call."""
+
+    regions: Dict[str, RegionRecord] = field(default_factory=dict)
+    wall_s: float = 0.0
+    chunks: int = 0
+    h2d_bytes: int = 0
+    peak_chunk_bytes: int = 0
+    peak_state_bytes: int = 0
+    streamed_regions: int = 0
+    trace_count: int = 0
+    shards: int = 1
+    traced: bool = False
+
+    def modes(self) -> Dict[str, str]:
+        """``{terminal symbol: execution mode}`` — the old REGION_MODES view."""
+        return {s: r.mode for s, r in self.regions.items()}
+
+    def mode(self, sym: str, default: str = "") -> str:
+        rec = self.regions.get(sym)
+        return rec.mode if rec is not None else default
+
+    def region(self, sym: str) -> Optional[RegionRecord]:
+        return self.regions.get(sym)
+
+    def copy(self) -> "ExecutionReport":
+        rep = ExecutionReport(
+            regions={
+                s: RegionRecord(
+                    r.sym, r.mode, r.family, r.wall_s, r.chunks, r.h2d_bytes
+                )
+                for s, r in self.regions.items()
+            },
+        )
+        for f in (
+            "wall_s", "chunks", "h2d_bytes", "peak_chunk_bytes",
+            "peak_state_bytes", "streamed_regions", "trace_count", "shards",
+            "traced",
+        ):
+            setattr(rep, f, getattr(self, f))
+        return rep
+
+    def summary(self) -> str:
+        parts = [f"wall={self.wall_s * 1e3:.2f}ms"]
+        if self.shards > 1:
+            parts.append(f"shards={self.shards}")
+        if self.chunks:
+            parts.append(
+                f"chunks={self.chunks} h2d={self.h2d_bytes >> 10}KiB"
+            )
+        lines = [" ".join(parts)]
+        for s, r in self.regions.items():
+            lines.append(f"  {s}: {r.mode}" + (f" [{r.family}]" if r.family else ""))
+        return "\n".join(lines)
+
+
+_ACTIVE_REPORTS: List[ExecutionReport] = []
+_LAST_REPORT = ExecutionReport()
+
+
+def last_report() -> ExecutionReport:
+    """The ExecutionReport of the most recent execution in this process —
+    an ``execute_plan`` / ``execute_shared_plan`` call or an executable /
+    sharded-executor dispatch (which republish their trace-time report
+    with the measured per-call wall time)."""
+    return _LAST_REPORT
+
+
+def publish_report(rep: ExecutionReport) -> ExecutionReport:
+    """Install ``rep`` as ``last_report()`` (used by executables and the
+    sharded executor to surface per-call reports)."""
+    global _LAST_REPORT
+    _LAST_REPORT = rep
+    return rep
+
+
+def republish_report(
+    base: Optional[ExecutionReport],
+    wall_s: float,
+    trace_count: int = 0,
+    shards: int = 1,
+) -> ExecutionReport:
+    """Copy a trace-time report and publish it with this call's measured
+    wall time — the jitted resident path replays a compiled function, so
+    region structure is static per shape while wall time is per call."""
+    rep = base.copy() if base is not None else ExecutionReport()
+    rep.traced = base is not None
+    rep.wall_s = wall_s
+    rep.trace_count = trace_count
+    rep.shards = shards
+    return publish_report(rep)
+
+
+def _begin_report() -> ExecutionReport:
+    rep = ExecutionReport()
+    _ACTIVE_REPORTS.append(rep)
+    return rep
+
+
+def _end_report(rep: ExecutionReport, wall_s: float) -> None:
+    if rep in _ACTIVE_REPORTS:
+        _ACTIVE_REPORTS.remove(rep)
+    rep.wall_s = wall_s
+    publish_report(rep)
+
+
+def _record_region(
+    sym: str,
+    mode: str,
+    family: str = "",
+    chunks: int = 0,
+    h2d_bytes: int = 0,
+    wall_s: float = 0.0,
+) -> None:
+    """Write one region's telemetry to the active report AND the legacy
+    ``REGION_MODES`` view (kept for external callers)."""
+    REGION_MODES[sym] = mode
+    if _ACTIVE_REPORTS:
+        rep = _ACTIVE_REPORTS[-1]
+        rec = rep.regions.get(sym)
+        if rec is None:
+            rec = rep.regions[sym] = RegionRecord(sym=sym)
+        rec.mode = mode
+        if family:
+            rec.family = family
+        rec.chunks += chunks
+        rec.h2d_bytes += h2d_bytes
+        rec.wall_s += wall_s
+
+
+def _account_stream(
+    regions: int = 0,
+    chunks: int = 0,
+    h2d_bytes: int = 0,
+    peak_chunk_bytes: int = 0,
+    peak_state_bytes: int = 0,
+) -> None:
+    """Update the streaming ledger on the active report AND the legacy
+    ``STREAM_STATS`` view."""
+    STREAM_STATS["regions"] += regions
+    STREAM_STATS["chunks"] += chunks
+    STREAM_STATS["h2d_bytes"] += h2d_bytes
+    STREAM_STATS["peak_chunk_bytes"] = max(
+        STREAM_STATS["peak_chunk_bytes"], peak_chunk_bytes
+    )
+    STREAM_STATS["peak_state_bytes"] = max(
+        STREAM_STATS["peak_state_bytes"], peak_state_bytes
+    )
+    if _ACTIVE_REPORTS:
+        rep = _ACTIVE_REPORTS[-1]
+        rep.streamed_regions += regions
+        rep.chunks += chunks
+        rep.h2d_bytes += h2d_bytes
+        rep.peak_chunk_bytes = max(rep.peak_chunk_bytes, peak_chunk_bytes)
+        rep.peak_state_bytes = max(rep.peak_state_bytes, peak_state_bytes)
+
+
+def _terminal_family(term) -> str:
+    return getattr(getattr(term, "choice", None), "ds", "") or ""
 
 
 def _is_chunked(x) -> bool:
@@ -918,11 +1128,11 @@ def _run_pipeline(pipe, env, refs, db, sigma, allow_sorted, params):
             t, rel = db[sc.source], sc.source
         if _is_chunked(t):
             if isinstance(stages[-1], P.HashBuild):
-                # index terminals need global row ids: decode resident
-                want = need.get(sc.var, ())
-                t = t.decode(
-                    tuple(c for c in t.names() if c in want) or None
-                )
+                # index terminals need global row ids AND their src serves
+                # downstream probe gathers, which may read columns this
+                # region itself never touches: decode resident, whole
+                # (acceptable for dimension tables — see ROADMAP)
+                t = t.decode(None)
             else:
                 _run_streamed_pipeline(
                     pipe, stages[1:], t, sc.var, rel, env, refs, db,
@@ -952,8 +1162,10 @@ def _run_pipeline(pipe, env, refs, db, sigma, allow_sorted, params):
 
     if _kernel_pipeline(pipe, rest, f, env, refs, sigma, allow_sorted, params, need):
         return
-    REGION_MODES[pipe.out] = (
-        "xla-radix-planned" if getattr(pipe, "partitions", 0) else "xla"
+    _record_region(
+        pipe.out,
+        "xla-radix-planned" if getattr(pipe, "partitions", 0) else "xla",
+        family=_terminal_family(rest[-1]),
     )
 
     # -- referenced dictionaries and pruned gather sources ------------------
@@ -1271,7 +1483,7 @@ def _run_streamed_pipeline(
         segments = (_stream_segment(pipe, rest, var, rel, env, need, ct),)
     if isinstance(rest[-1], P.Project):
         env[pipe.out] = _PendingStream(ct, segments)
-        REGION_MODES[pipe.out] = "streamed-deferred"
+        _record_region(pipe.out, "streamed-deferred")
         return
     _exec_streamed_chain(ct, segments, env, refs, sigma, allow_sorted, params)
 
@@ -1294,6 +1506,7 @@ def _exec_streamed_chain(ct, segments, env, refs, sigma, allow_sorted, params):
     from repro.core import plan as P
     from repro.data import storage as STG
 
+    t_chain = time.perf_counter()
     seg0, seg_last = segments[0], segments[-1]
     term = seg_last.rest[-1]
     needed = seg0.needed
@@ -1331,12 +1544,12 @@ def _exec_streamed_chain(ct, segments, env, refs, sigma, allow_sorted, params):
             if sorted_stream
             else _empty_dict_state(term.choice.ds, n_lanes, cap, term_ops)
         )
-        STREAM_STATS["peak_state_bytes"] = max(
-            STREAM_STATS["peak_state_bytes"],
-            sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(state)),
+        _account_stream(
+            peak_state_bytes=sum(
+                a.size * a.dtype.itemsize for a in jax.tree.leaves(state)
+            ),
         )
 
-    STREAM_STATS["regions"] += len(segments)
     chunk_dec_bytes = ct.chunk_rows * (4 * len(needed) + 1)
     # two decoded source chunks live at once (current compute + prefetched
     # next) plus each chained segment's intermediate projection of the chunk
@@ -1344,8 +1557,9 @@ def _exec_streamed_chain(ct, segments, env, refs, sigma, allow_sorted, params):
         ct.chunk_rows * (4 * len(seg.rest[-1].fields) + 1)
         for seg in segments[:-1]
     )
-    STREAM_STATS["peak_chunk_bytes"] = max(
-        STREAM_STATS["peak_chunk_bytes"], 2 * chunk_dec_bytes + inter_bytes
+    _account_stream(
+        regions=len(segments),
+        peak_chunk_bytes=2 * chunk_dec_bytes + inter_bytes,
     )
 
     # -- try the fused Pallas kernel per chunk (TPU / forced) ---------------
@@ -1390,12 +1604,13 @@ def _exec_streamed_chain(ct, segments, env, refs, sigma, allow_sorted, params):
         {s: b.res.table for s, b in seg.builts.items()} for seg in segments
     ]
     src_cols = [seg.src_cols for seg in segments]
+    chain_h2d = 0
     for i in range(nchunks):
         up, up_next = up_next, (
             ct.upload_chunk(i + 1, needed) if i + 1 < nchunks else None
         )
-        STREAM_STATS["h2d_bytes"] += up[1]
-        STREAM_STATS["chunks"] += 1
+        chain_h2d += up[1]
+        _account_stream(chunks=1, h2d_bytes=up[1])
         # the chunk's static decode recipe keys the region fn: the encoded
         # payload goes straight into the jit and decodes in-trace (full
         # uniformly-encoded chunks all hit one compiled fn)
@@ -1426,8 +1641,15 @@ def _exec_streamed_chain(ct, segments, env, refs, sigma, allow_sorted, params):
             partials.append(out)
 
     for seg in segments[:-1]:
-        REGION_MODES[seg.out] = f"streamed-chained:{nchunks}"
-    REGION_MODES[seg_last.out] = f"streamed:{nchunks}"
+        _record_region(seg.out, f"streamed-chained:{nchunks}", chunks=nchunks)
+    _record_region(
+        seg_last.out,
+        f"streamed:{nchunks}",
+        family=_terminal_family(term),
+        chunks=nchunks,
+        h2d_bytes=chain_h2d,
+        wall_s=time.perf_counter() - t_chain,
+    )
 
     # -- publish the terminal -----------------------------------------------
     if is_dict_term:
@@ -1481,6 +1703,7 @@ def _stream_kernel_chunks(
     pipe, rest, var, rel = seg.pipe, seg.rest, seg.var, seg.rel
     term = rest[-1]
     nchunks = ct.n_chunks
+    t_kern = time.perf_counter()
     try:
         t0 = ct.chunk_device(0, needed, pad=True)
         f0 = Frame({var: t0}, (var,), {var: rel})
@@ -1499,12 +1722,14 @@ def _stream_kernel_chunks(
     state = _merge_dict_tables(
         term.choice.ds, state, scratch_env[pipe.out].res.table, cap, term_ops
     )
-    STREAM_STATS["chunks"] += 1
+    _account_stream(chunks=1)
+    kern_h2d = 0
     for i in range(1, nchunks):
         up, up_next = up_next, (
             ct.upload_chunk(i + 1, needed) if i + 1 < nchunks else None
         )
-        STREAM_STATS["h2d_bytes"] += up[1]
+        kern_h2d += up[1]
+        _account_stream(h2d_bytes=up[1])
         t_i = ct.chunk_device(i, needed, pad=True, uploaded=up[0])
         f_i = Frame({var: t_i}, (var,), {var: rel})
         scratch_env, scratch_refs = dict(env), {}
@@ -1516,8 +1741,15 @@ def _stream_kernel_chunks(
             term.choice.ds, state, scratch_env[pipe.out].res.table, cap,
             term_ops,
         )
-        STREAM_STATS["chunks"] += 1
-    REGION_MODES[pipe.out] = f"streamed-kernel:{nchunks}"
+        _account_stream(chunks=1)
+    _record_region(
+        pipe.out,
+        f"streamed-kernel:{nchunks}",
+        family=_terminal_family(term),
+        chunks=nchunks,
+        h2d_bytes=kern_h2d,
+        wall_s=time.perf_counter() - t_kern,
+    )
     lanes = (
         tuple(a for a, _ in term.values)
         if isinstance(term, P.GroupBy)
@@ -1741,12 +1973,12 @@ KERNEL_SLOTS = 1 << 16  # per-dictionary resident slot bound of the fused
 # kernel (mirrors FusionCostModel.kernel_slots — a bigger slab radix-
 # partitions instead of de-fusing)
 
-# Execution-mode log per fused region (keyed by the region's terminal
-# symbol): "kernel-resident" / "kernel-radix" for the Pallas paths,
+# DEPRECATED execution-mode log per fused region (keyed by the region's
+# terminal symbol): "kernel-resident" / "kernel-radix" for the Pallas paths,
 # "xla" / "xla-radix-planned" for the compiled region function.  Written at
 # trace time — the mode is a static property of (region, policy, dict
-# metadata) — and read by benchmarks to attribute speedups to the path that
-# actually produced them.
+# metadata).  Kept populated for external callers; in-repo readers use
+# ``last_report().regions`` (the same modes plus family/wall/chunk detail).
 REGION_MODES: Dict[str, str] = {}
 
 
@@ -2044,7 +2276,11 @@ def _kernel_pipeline(pipe, rest, f, env, refs, sigma, allow_sorted, params, need
         interpret=interpret,
         lane_ops=term_ops or None,
     )
-    REGION_MODES[term.out] = "kernel-radix" if radix_sym else "kernel-resident"
+    _record_region(
+        term.out,
+        "kernel-radix" if radix_sym else "kernel-resident",
+        family=_terminal_family(term),
+    )
     if out_spec[0] == "dict":
         tk, tv = out
         if part_terminal:  # [P, Cacc(*V)] per-partition scratches: flatten
@@ -2261,7 +2497,9 @@ def _run_shared_region(region, envs, refss, db, sigma, allow_sorted, params_list
             term, out, holder[0], holder[1], f,
             envs[br.plan_idx], refss[br.plan_idx],
         )
-        REGION_MODES[term.out] = f"shared:{n_br}"
+        _record_region(
+            term.out, f"shared:{n_br}", family=_terminal_family(term)
+        )
 
 
 def execute_shared_plan(
@@ -2291,6 +2529,24 @@ def execute_shared_plan(
     envs: List[Dict[str, object]] = [{} for _ in range(nplans)]
     refss: List[Dict[str, object]] = [{} for _ in range(nplans)]
 
+    rep = _begin_report()
+    t_plan = time.perf_counter()
+    try:
+        return _execute_shared_plan_body(
+            sp, db, sigma, allow_sorted, params_list, exchange_impl,
+            repartition_impl, envs, refss, rep,
+        )
+    finally:
+        _end_report(rep, time.perf_counter() - t_plan)
+
+
+def _execute_shared_plan_body(
+    sp, db, sigma, allow_sorted, params_list, exchange_impl,
+    repartition_impl, envs, refss, rep,
+):
+    from repro.core import plan as P
+
+    nplans = len(sp.plans)
     region_of: Dict[Tuple[int, str], int] = {}
     for ri, rg in enumerate(sp.regions):
         for b in rg.branches:
@@ -2320,19 +2576,30 @@ def execute_shared_plan(
                 if ri is not None and not done[ri]:
                     break  # stalled on a pending shared region
                 if ri is None:
+                    t_node = time.perf_counter()
                     _exec_node(
                         nd, envs[i], refss[i], db, sigma, allow_sorted,
                         params_list[i], exchange_impl, repartition_impl,
                     )
+                    if isinstance(nd, P.Pipeline):
+                        rec = rep.regions.get(nd.out)
+                        if rec is not None and rec.wall_s == 0.0:
+                            rec.wall_s = time.perf_counter() - t_node
                 pos[i] += 1
                 progress = True
         if all(pos[i] >= len(p.nodes) for i, p in enumerate(sp.plans)):
             break
         for ri, rg in enumerate(sp.regions):
             if not done[ri] and _ready(rg):
+                t_rg = time.perf_counter()
                 _run_shared_region(
                     rg, envs, refss, db, sigma, allow_sorted, params_list
                 )
+                dt = time.perf_counter() - t_rg
+                for b in rg.branches:
+                    rec = rep.regions.get(b.pipe.stages[-1].out)
+                    if rec is not None and rec.wall_s == 0.0:
+                        rec.wall_s = dt
                 done[ri] = True
                 progress = True
         if not progress:  # pragma: no cover
@@ -2356,6 +2623,8 @@ class SharedExecutable:
         self.sigma = sigma
         self.trace_count = 0
         self.calls = 0
+        self.last_report: Optional[ExecutionReport] = None
+        self._trace_report: Optional[ExecutionReport] = None
         self._metas: Optional[Tuple[Tuple[str, object], ...]] = None
         self._sorted_meta = {rel: t.sorted_on for rel, t in db.items()}
 
@@ -2370,6 +2639,7 @@ class SharedExecutable:
             outs = execute_shared_plan(
                 self.sp, local, sigma=self.sigma, params_list=list(pvals_list)
             )
+            self._trace_report = last_report()
             metas, flat = [], []
             for out in outs:
                 if isinstance(out, DictResult):
@@ -2401,7 +2671,11 @@ class SharedExecutable:
     def __call__(self, db: Dict[str, "Table"], params_list=None):
         self.calls += 1
         cols, masks = Executable._db_arrays(db)
+        t0 = time.perf_counter()
         out = self._fn(cols, masks, self.coerce_params(params_list))
+        self.last_report = republish_report(
+            self._trace_report, time.perf_counter() - t0, self.trace_count
+        )
         res = []
         for (kind, aux), o in zip(self._metas, out):
             if kind == "dict":
@@ -2512,6 +2786,8 @@ class Executable:
         self.sigma = sigma
         self.trace_count = 0
         self.calls = 0
+        self.last_report: Optional[ExecutionReport] = None
+        self._trace_report: Optional[ExecutionReport] = None
         self._meta: Optional[Tuple[str, object]] = None
         self._sorted_meta = {rel: t.sorted_on for rel, t in db.items()}
 
@@ -2524,6 +2800,7 @@ class Executable:
                     rc, n, mask=masks[rel], sorted_on=self._sorted_meta[rel]
                 )
             out = execute_plan(self.plan, local, sigma=self.sigma, params=pvals)
+            self._trace_report = last_report()  # region structure is static
             if isinstance(out, DictResult):
                 self._meta = ("dict", out.ds)
                 return out.arrays()
@@ -2565,7 +2842,14 @@ class Executable:
     def __call__(self, db: Dict[str, "Table"], params=None):
         self.calls += 1
         cols, masks = self._db_arrays(db)
-        return self._wrap(self._fn(cols, masks, self.coerce_params(params)))
+        # Dispatch stays async (callers force results when they read them;
+        # adapt racing blocks explicitly), so wall_s here is dispatch wall.
+        t0 = time.perf_counter()
+        out = self._fn(cols, masks, self.coerce_params(params))
+        self.last_report = republish_report(
+            self._trace_report, time.perf_counter() - t0, self.trace_count
+        )
+        return self._wrap(out)
 
     def call_batched(self, db: Dict[str, "Table"], params_list):
         """One stacked (vmapped) execution of B same-shape requests.  The
@@ -2588,7 +2872,11 @@ class Executable:
         }
         self.calls += 1
         cols, masks = self._db_arrays(db)
+        t0 = time.perf_counter()
         out = self._vfn(cols, masks, stacked)
+        self.last_report = republish_report(
+            self._trace_report, time.perf_counter() - t0, self.trace_count
+        )
         return [
             self._wrap(jax.tree.map(lambda a: a[i], out)) for i in range(b)
         ]
@@ -2616,6 +2904,10 @@ class BoundExecutable:
         return self.executable.trace_count
 
     @property
+    def last_report(self) -> Optional[ExecutionReport]:
+        return self.executable.last_report
+
+    @property
     def plan(self):
         return self.executable.plan
 
@@ -2639,6 +2931,7 @@ class StreamedExecutable:
         self.sigma = sigma
         self.trace_count = 1  # region fns trace on first use, then cache
         self.calls = 0
+        self.last_report: Optional[ExecutionReport] = None
 
     def coerce_params(self, params: Optional[Dict[str, object]]):
         return coerce_bindings(self.plan, params, defaults=self._default_params)
@@ -2649,6 +2942,9 @@ class StreamedExecutable:
             self.plan, db, sigma=self.sigma,
             params=self.coerce_params(params),
         )
+        rep = last_report()  # eager driver: the report is per call already
+        rep.trace_count = self.trace_count
+        self.last_report = rep
         if isinstance(out, DictResult):
             return PlanResult(out.ds, *out.arrays())
         return out

@@ -10,10 +10,20 @@ Each query exposes:
 * ``run(db, choices, **params)`` — ``lower.compile(llql(), choices)`` →
   physical plan → ``engine.cached_executable``: the first call per (plan,
   schema) jits the whole plan, later calls with fresh parameter bindings
-  reuse the trace (zero synthesis, zero retracing — DESIGN.md §6);
+  reuse the trace (zero synthesis, zero retracing — DESIGN.md §6).  One
+  generic method on :class:`Query` — the former five per-query wrappers
+  survive only as deprecated shims;
 * ``reference(db, **params)`` — a numpy oracle for correctness tests;
 * ``defaults`` — the binding used when a knob is not supplied (the former
   baked-in constants).
+
+Queries register by name in ``REGISTRY`` (``QUERIES`` is the historical
+alias), which is what lets ``repro.connect(db).query("q18", threshold=200)``
+resolve by name; ``register`` adds user-defined queries to the same
+namespace.  ``queries.run(qname, db, ...)`` and the ``qN_run`` module
+functions are deprecated shims over ``REGISTRY[qname].run`` — new code
+should go through ``repro.connect`` (the Session façade plans, fuses,
+caches, and reports; see DESIGN.md §11).
 
 The queries are structurally faithful simplifications (same joins, same
 group-bys, same selectivity knobs); text/date predicates act on the encoded
@@ -103,12 +113,21 @@ def _run_llql(
 class Query:
     name: str
     llql: Callable[[], L.Expr]
-    run: Callable[..., Dict[int, np.ndarray]]
     reference: Callable[..., Dict[int, np.ndarray]]
     defaults: Dict[str, object] = None  # free-Param fallback binding
 
     def bind_defaults(self, params: Dict[str, object]) -> Dict[str, object]:
         return {**(self.defaults or {}), **params}
+
+    def run(
+        self, db, choices: GammaDict = None, **params
+    ) -> Dict[int, np.ndarray]:
+        """The ONE generic execution path every registered query shares:
+        compile this query's LLQL under ``choices`` and run it through the
+        executable cache with ``params`` bound over ``defaults``."""
+        return _run_llql(
+            self.llql(), db, choices or {}, self.bind_defaults(params)
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -138,7 +157,8 @@ def q1_llql() -> L.Expr:
 
 
 def q1_run(db, choices, **params):
-    return _run_llql(q1_llql(), db, choices, QUERIES["q1"].bind_defaults(params))
+    """Deprecated shim — use ``REGISTRY["q1"].run`` or the Session façade."""
+    return REGISTRY["q1"].run(db, choices, **params)
 
 
 def q1_reference(db, date: float = 0.9):
@@ -185,7 +205,8 @@ def q3_llql() -> L.Expr:
 
 
 def q3_run(db, choices, **params):
-    return _run_llql(q3_llql(), db, choices, QUERIES["q3"].bind_defaults(params))
+    """Deprecated shim — use ``REGISTRY["q3"].run`` or the Session façade."""
+    return REGISTRY["q3"].run(db, choices, **params)
 
 
 def q3_reference(db, date: float = 0.05):
@@ -309,7 +330,8 @@ def q5_llql() -> L.Expr:
 
 
 def q5_run(db, choices, **params):
-    return _run_llql(q5_llql(), db, choices, QUERIES["q5"].bind_defaults(params))
+    """Deprecated shim — use ``REGISTRY["q5"].run`` or the Session façade."""
+    return REGISTRY["q5"].run(db, choices, **params)
 
 
 def q5_reference(db, region: int = 0):
@@ -430,7 +452,8 @@ def q9_llql() -> L.Expr:
 
 
 def q9_run(db, choices, **params):
-    return _run_llql(q9_llql(), db, choices, QUERIES["q9"].bind_defaults(params))
+    """Deprecated shim — use ``REGISTRY["q9"].run`` or the Session façade."""
+    return REGISTRY["q9"].run(db, choices, **params)
 
 
 def q9_reference(db, color: int = 3):
@@ -499,7 +522,8 @@ def q18_llql() -> L.Expr:
 
 
 def q18_run(db, choices, **params):
-    return _run_llql(q18_llql(), db, choices, QUERIES["q18"].bind_defaults(params))
+    """Deprecated shim — use ``REGISTRY["q18"].run`` or the Session façade."""
+    return REGISTRY["q18"].run(db, choices, **params)
 
 
 def q18_reference(db, threshold: float = 150.0):
@@ -517,13 +541,30 @@ def q18_reference(db, threshold: float = 150.0):
     }
 
 
-QUERIES: Dict[str, Query] = {
-    "q1": Query("q1", q1_llql, q1_run, q1_reference, {"date": 0.9}),
-    "q3": Query("q3", q3_llql, q3_run, q3_reference, {"date": 0.05}),
-    "q5": Query("q5", q5_llql, q5_run, q5_reference, {"region": 0}),
-    "q9": Query("q9", q9_llql, q9_run, q9_reference, {"color": 3}),
-    "q18": Query("q18", q18_llql, q18_run, q18_reference, {"threshold": 150.0}),
+# the query namespace: name → (llql, reference oracle, default binding).
+# ``session.query("q18", threshold=200)`` resolves here; QUERIES is the
+# historical alias external callers and the test suite import.
+REGISTRY: Dict[str, Query] = {
+    "q1": Query("q1", q1_llql, q1_reference, {"date": 0.9}),
+    "q3": Query("q3", q3_llql, q3_reference, {"date": 0.05}),
+    "q5": Query("q5", q5_llql, q5_reference, {"region": 0}),
+    "q9": Query("q9", q9_llql, q9_reference, {"color": 3}),
+    "q18": Query("q18", q18_llql, q18_reference, {"threshold": 150.0}),
 }
+QUERIES = REGISTRY
+
+
+def register(query: Query) -> Query:
+    """Add a user-defined query to the namespace (returns it, so usable as
+    a decorator-ish helper around a ``Query(...)`` literal)."""
+    REGISTRY[query.name] = query
+    return query
+
+
+def run(qname: str, db, choices: GammaDict = None, **params):
+    """Deprecated shim for the pre-Session API: ``queries.run("q1", db)``.
+    New code goes through ``repro.connect(db).query(qname, **params)``."""
+    return REGISTRY[qname].run(db, choices, **params)
 
 # The TPC-H fact tables: row-sharded by default under the distributed
 # executor; every dimension table is replicated.  With both fact tables

@@ -11,6 +11,15 @@ Algorithm 1 synthesis, plan lowering, and the whole-plan jit — via
 warm hit: zero synthesis, zero retracing, parameters passed as runtime
 scalars (DESIGN.md §6).
 
+The server fronts a :class:`repro.session.Session` — the single planning
+funnel (synthesize → fuse → storage plan → cached executable) — instead of
+wiring db/Δ/Σ/caches itself: pass ``QueryServer(session)``; passing a raw
+``{relation: Table}`` db dict (the pre-Session constructor) still works as
+a deprecated shim that opens a session internally.  Adaptive sessions
+(``connect(db, adapt=...)``) race near-cost plans once at shape warm-up,
+so serving always rides the measured winner with zero per-request
+replanning (trace counts stay flat — DESIGN.md §11).
+
 Micro-batching: each ``step()`` drains up to ``max_batch`` queued requests
 for the *same* query shape and runs them as a single vmapped execution
 (``Executable.call_batched``), padded to power-of-two buckets so the number
@@ -33,9 +42,6 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core.cost import AnalyticCostModel
-from repro.core.synthesis import synthesize
-from repro.data.table import collect_stats
 from repro.exec import engine as E
 from repro.exec.queries import QUERIES, Query
 
@@ -75,18 +81,30 @@ class _Shape:
 class QueryServer:
     def __init__(
         self,
-        db,
+        session,
         delta=None,
         queries: Optional[Dict[str, Query]] = None,
         max_batch: int = 8,
         share_scans: bool = False,
     ):
-        self.db = db
-        self.delta = delta or AnalyticCostModel()
-        self.queries = dict(queries or QUERIES)
+        from repro.session import Session, connect
+
+        if not isinstance(session, Session):
+            # deprecated shim: a raw {relation: Table} db dict opens a
+            # session on the spot (the old constructor-soup signature)
+            session = connect(session, delta=delta, queries=queries)
+        if session.mesh is not None:
+            raise ValueError(
+                "QueryServer micro-batches through vmapped executables; "
+                "serve sharded sessions through session.query directly"
+            )
+        self.session = session
+        self.db = session.db
+        self.delta = session.delta
+        self.queries = dict(queries or session.queries or QUERIES)
         self.max_batch = max_batch
         self.share_scans = share_scans
-        self.sigma = collect_stats(db)
+        self.sigma = session.sigma
         self.queue: List[QueryRequest] = []
         self.finished: List[QueryResponse] = []
         self._shapes: Dict[str, _Shape] = {}
@@ -113,21 +131,19 @@ class QueryServer:
             return shape
         q = self.queries[qname]
         t0 = time.perf_counter()
-        res = synthesize(q.llql(), self.sigma, self.delta)
-        self.counters["synth_runs"] += 1
-        from repro.core import plan as P
-        from repro.core.lower import compile as compile_plan
-
-        # the served shape is the fused production form (DESIGN.md §7)
-        plan = P.fuse(compile_plan(q.llql(), res.choices), sigma=self.sigma)
-        ex = E.cached_executable(plan, self.db, sigma=self.sigma)
+        # the session is the planning funnel: synthesize → fuse → cached
+        # executable, plus — for adaptive sessions — the warm-up race, so
+        # the installed executable is already the measured winner
+        ss = self.session.shape(q)
+        ex = ss.executable
         # trigger the trace now so the first serve measures warm execution
         ex(self.db, q.bind_defaults({}))
         shape = _Shape(
-            q, ex, dict(res.choices), time.perf_counter() - t0, plan=plan
+            q, ex, dict(ss.choices), time.perf_counter() - t0, plan=ss.plan
         )
         self._shapes[qname] = shape
         self.counters["cold_compiles"] += 1
+        self.counters["synth_runs"] += ss.synth_runs
         return shape
 
     def warm_up(self, qnames=None, batch_buckets: bool = True) -> None:

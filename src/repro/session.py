@@ -1,0 +1,324 @@
+"""The unified Session façade — one planning funnel for the whole system.
+
+``repro.connect(db, memory_budget=..., shards=..., adapt=...)`` returns a
+:class:`Session` that fronts the full paper pipeline: every
+``session.query(llql_or_name, **params)`` internally runs
+
+    synthesize (Alg. 1) → legalize → fuse (Δ_fuse, chunk-aware) →
+    storage plan → cached executable → execute
+
+with the cold half paid once per query *shape* and every later call a warm
+cache hit.  The session owns the pieces the old API made callers wire by
+hand — ``chunk_db`` + the matching ``FusionCostModel(chunk_rows=...)`` for
+out-of-core databases, the mesh + ``Δ_net`` for sharded execution,
+``plan.fuse(streamed=...)``, the executable caches — and replaces the
+``REGION_MODES``/``STREAM_STATS`` globals with ``session.report()``, the
+structured :class:`repro.exec.engine.ExecutionReport` of the last call.
+
+With ``adapt=`` truthy the session plans through
+:class:`repro.core.adapt.AdaptivePlanner`: near-cost Alg.-1 candidates are
+raced on warm-up traffic, validated bitwise, and the measured winner per
+``(plan fingerprint, binding bucket)`` serves steady-state requests with
+zero replanning; measured-vs-predicted residuals recalibrate the cost
+model online (DESIGN.md §11).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.core import llql as L
+from repro.core import plan as P
+from repro.core.adapt import AdaptConfig, AdaptivePlanner, result_items
+from repro.core.cost import AnalyticCostModel, FusionCostModel, NetCostModel
+from repro.core.lower import compile as compile_plan
+from repro.core.synthesis import synthesize
+from repro.data import storage as S
+from repro.data.table import collect_stats
+from repro.exec import engine as E
+from repro.exec.queries import FACT_RELS, REGISTRY, Query
+
+
+@dataclass
+class Shape:
+    """One compiled query shape owned by a session."""
+
+    query: Query
+    choices: Dict[str, object]
+    plan: object  # fused physical plan (shared-scan merge input)
+    executable: object  # E.Executable / StreamedExecutable, or sharded run
+    planner: Optional[AdaptivePlanner] = None
+    compile_s: float = 0.0
+    served: int = 0
+    synth_runs: int = 0
+
+
+class Session:
+    """See module docstring.  Construct via :func:`connect`."""
+
+    def __init__(
+        self,
+        db,
+        memory_budget: Optional[int] = None,
+        chunk_rows: int = S.CHUNK_ROWS,
+        shards: int = 0,
+        adapt: Union[bool, AdaptConfig] = False,
+        delta=None,
+        queries: Optional[Dict[str, Query]] = None,
+        allow_sorted: bool = True,
+    ):
+        if memory_budget is not None and shards > 1:
+            raise ValueError(
+                "out-of-core streaming and sharded execution are separate "
+                "executors; open one session per regime"
+            )
+        self.base_db = db
+        self.sigma = collect_stats(db)
+        self.delta = delta if delta is not None else AnalyticCostModel()
+        self.queries = dict(queries if queries is not None else REGISTRY)
+        self.allow_sorted = allow_sorted
+        self.adapt_config: Optional[AdaptConfig] = None
+        if adapt:
+            self.adapt_config = (
+                adapt if isinstance(adapt, AdaptConfig) else AdaptConfig()
+            )
+
+        # storage plan: chunk what the budget can't keep resident, and tell
+        # the fusion model the REAL chunk geometry so Δ_chained prices the
+        # spill-vs-chain decision with the n_chunks the engine will run
+        self.memory_budget = memory_budget
+        self.chunk_rows = chunk_rows
+        if memory_budget is not None:
+            self.db = S.chunk_db(
+                db, memory_budget_bytes=memory_budget, chunk_rows=chunk_rows
+            )
+            self.fusion = dataclasses.replace(
+                FusionCostModel(), chunk_rows=float(chunk_rows)
+            )
+        else:
+            self.db = db
+            self.fusion = None
+        self.streamed: Tuple[str, ...] = tuple(
+            sorted(r for r, t in self.db.items() if S.is_chunked(t))
+        )
+
+        # sharded execution: one mesh per session, fact tables row-sharded
+        self.shards = int(shards or 0)
+        self.mesh = None
+        self.axis = "data"
+        self.shard_rels: Tuple[str, ...] = ()
+        self.net = None
+        if self.shards > 1:
+            import jax
+
+            from repro import compat
+
+            if jax.device_count() < self.shards:
+                raise ValueError(
+                    f"need {self.shards} devices, have {jax.device_count()}; "
+                    "set XLA_FLAGS=--xla_force_host_platform_device_count=N"
+                )
+            self.mesh = compat.make_mesh((self.shards,), (self.axis,))
+            self.shard_rels = FACT_RELS
+            self.net = NetCostModel(n_shards=self.shards)
+
+        self._shapes: Dict[str, Shape] = {}
+        self._last_report: Optional[E.ExecutionReport] = None
+
+    # -- planning funnel -----------------------------------------------------
+    def _resolve(self, q: Union[str, Query, L.Expr]) -> Tuple[str, Query]:
+        if isinstance(q, str):
+            query = self.queries.get(q)
+            if query is None:
+                raise KeyError(
+                    f"unknown query {q!r}; registered: {sorted(self.queries)}"
+                )
+            return q, query
+        if isinstance(q, Query):
+            return q.name, q
+        if isinstance(q, L.Expr):
+            # ad-hoc LLQL program: key the shape cache by plan fingerprint
+            expr = q
+            fp = compile_plan(expr, {}).fingerprint()
+            name = f"llql:{fp[:12]}"
+            return name, Query(name, lambda: expr, None, None)
+        raise TypeError(f"cannot plan a {type(q).__name__}")
+
+    def _build(self, expr: L.Expr, choices):
+        """choices → (fused plan, executor) through the cached back ends."""
+        if self.mesh is not None:
+            from repro.exec import distributed as D
+
+            plan = compile_plan(expr, choices)
+            run = D.cached_sharded_executor(
+                plan, self.db, self.mesh, self.axis,
+                shard_rels=self.shard_rels, sigma=self.sigma,
+            )
+            return plan, run
+        plan = P.fuse(
+            compile_plan(expr, choices),
+            sigma=self.sigma,
+            streamed=self.streamed,
+            fusion=self.fusion,
+        )
+        ex = E.cached_executable(plan, self.db, sigma=self.sigma)
+        return plan, ex
+
+    def _call(self, executable, params):
+        if self.mesh is not None:
+            return executable(params)
+        return executable(self.db, params)
+
+    def shape(self, q: Union[str, Query, L.Expr]) -> Shape:
+        """The compiled shape for a query — cold pipeline once, cached after.
+        Adaptive sessions additionally run the warm-up race here (on the
+        query's default binding), so the installed executable is already
+        the measured winner when the first request lands."""
+        name, query = self._resolve(q)
+        shape = self._shapes.get(name)
+        if shape is not None:
+            return shape
+        expr = query.llql()
+        t0 = time.perf_counter()
+        planner = None
+        synth_runs = 1
+        if self.adapt_config is not None:
+            fp = compile_plan(expr, {}).fingerprint()
+            planner = AdaptivePlanner(
+                expr, self.sigma, self.delta,
+                make_executor=lambda ch: _ParamRunner(self, expr, ch),
+                config=self.adapt_config,
+                fingerprint=fp,
+                net=self.net,
+                sharded_rels=self.shard_rels or None,
+            )
+            choices = planner.choose(query.bind_defaults({}))
+            synth_runs = len(planner.races)  # one enumerate per race round
+        else:
+            choices = dict(
+                synthesize(
+                    expr, self.sigma, self.delta,
+                    net=self.net, sharded_rels=self.shard_rels or None,
+                ).choices
+            )
+        plan, ex = self._build(expr, choices)
+        shape = Shape(
+            query, dict(choices), plan, ex,
+            planner=planner,
+            compile_s=time.perf_counter() - t0,
+            synth_runs=synth_runs,
+        )
+        self._shapes[name] = shape
+        return shape
+
+    # -- the public entry point ----------------------------------------------
+    def query(
+        self, q: Union[str, Query, L.Expr], **params
+    ) -> Dict[int, np.ndarray]:
+        """Execute ``q`` under this session's planning funnel and return its
+        ``{key: np.ndarray}`` result.  ``q`` is a registered query name
+        (``queries.REGISTRY``), a ``Query`` object, or a raw LLQL program."""
+        shape = self.shape(q)
+        bound = shape.query.bind_defaults(params)
+        if shape.planner is not None:
+            choices = shape.planner.choose(bound)
+            if choices != shape.choices:
+                # a race moved the winner: reinstall (cached — no re-jit)
+                shape.choices = dict(choices)
+                shape.plan, shape.executable = self._build(
+                    shape.query.llql(), choices
+                )
+            shape.synth_runs = len(shape.planner.races)
+        out = self._call(shape.executable, bound)
+        shape.served += 1
+        self._last_report = E.last_report()
+        return result_items(out)
+
+    # -- observability -------------------------------------------------------
+    def report(self) -> Optional[E.ExecutionReport]:
+        """The structured ExecutionReport of this session's last query."""
+        return self._last_report
+
+    def explain(self, q: Union[str, Query, L.Expr]) -> Dict[str, object]:
+        """Planning summary for a shape: chosen Γ, fused plan modes, and —
+        for adaptive sessions — the race history."""
+        shape = self.shape(q)
+        out: Dict[str, object] = {
+            "choices": {s: str(c) for s, c in sorted(shape.choices.items())},
+            "compile_s": shape.compile_s,
+            "served": shape.served,
+            "streamed": self.streamed,
+            "shards": self.shards,
+        }
+        if shape.planner is not None:
+            out["races"] = [
+                {
+                    "bucket": rec.bucket,
+                    "lanes": [
+                        {
+                            "swapped": ln.candidate.swapped or "<winner>",
+                            "modeled_ms": ln.candidate.modeled_s * 1e3,
+                            "measured_ms": (
+                                ln.measured_s * 1e3
+                                if ln.measured_s < float("inf")
+                                else None
+                            ),
+                            "validated": ln.validated,
+                        }
+                        for ln in rec.lanes
+                    ],
+                }
+                for rec in shape.planner.races
+            ]
+        return out
+
+
+class _ParamRunner:
+    """Adapter: AdaptivePlanner's ``run(params)`` contract over a session's
+    executor for one fixed Γ (built lazily, reusing the executable caches)."""
+
+    def __init__(self, session: Session, expr: L.Expr, choices):
+        self.session = session
+        self.expr = expr
+        self.choices = choices
+        self._ex = None
+
+    def __call__(self, params=None):
+        if self._ex is None:
+            _, self._ex = self.session._build(self.expr, self.choices)
+        return self.session._call(self._ex, params)
+
+
+def connect(
+    db,
+    memory_budget: Optional[int] = None,
+    chunk_rows: int = S.CHUNK_ROWS,
+    shards: int = 0,
+    adapt: Union[bool, AdaptConfig] = False,
+    delta=None,
+    queries: Optional[Dict[str, Query]] = None,
+    allow_sorted: bool = True,
+) -> Session:
+    """Open a :class:`Session` over ``db`` (a ``{relation: Table}`` dict).
+
+    * ``memory_budget`` (bytes) — relations the budget can't keep resident
+      are compressed + chunked and streamed per region (DESIGN.md §10);
+    * ``shards`` — execute over an N-way mesh with the fact tables
+      row-sharded (choices synthesized under Δ_net);
+    * ``adapt`` — ``True`` or an :class:`AdaptConfig`: race near-cost plans
+      on warm-up traffic, validate bitwise, serve the measured winner.
+    """
+    return Session(
+        db,
+        memory_budget=memory_budget,
+        chunk_rows=chunk_rows,
+        shards=shards,
+        adapt=adapt,
+        delta=delta,
+        queries=queries,
+        allow_sorted=allow_sorted,
+    )

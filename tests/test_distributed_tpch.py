@@ -171,3 +171,39 @@ def test_shared_scan_pairs_sharded_match_single_shard(shards):
         """
     )
     assert f"SHARED_DIST_OK shards={shards}" in out
+
+
+def test_adaptive_racing_validates_bitwise_sharded():
+    """ISSUE-8 acceptance: racing is bitwise-validated on all five queries
+    under sharded execution too — an adaptive 4-shard session races >= 2
+    lanes per query (wide band) and every lane's result must be
+    byte-identical to the model-chosen sharded plan."""
+    out = _run(
+        """
+        from repro.core.adapt import AdaptConfig
+        from repro.exec.queries import REGISTRY
+        from repro.data import tpch
+        from repro.session import connect
+
+        db = tpch.generate(scale=0.002, seed=3).tables()
+        session = connect(
+            db, shards=4,
+            adapt=AdaptConfig(band=50.0, top_k=2, warmup=1, repeats=1),
+        )
+        for qname in sorted(REGISTRY):
+            session.query(qname)
+            planner = session.shape(qname).planner
+            assert planner.races, qname
+            for rec in planner.races:
+                assert len(rec.lanes) >= 2, (
+                    qname, [l.candidate.swapped for l in rec.lanes]
+                )
+                for lane in rec.lanes:
+                    assert lane.validated, (qname, lane.candidate.swapped)
+            rep = session.report()
+            assert rep is not None and rep.shards == 4, qname
+            print(qname, "OK")
+        print("ADAPT_DIST_OK")
+        """
+    )
+    assert "ADAPT_DIST_OK" in out

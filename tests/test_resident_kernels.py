@@ -201,9 +201,10 @@ def test_engine_kernel_path_any_family(ds, rng):
     plan = P.Plan(nodes, "Agg")
     fused = P.fuse(plan, sigma=sigma)
     assert any(isinstance(n, P.Pipeline) for n in fused.nodes)
-    E.REGION_MODES.clear()
     got = E.execute_plan(fused, db, sigma=sigma).items_np()
-    assert E.REGION_MODES.get("Agg") == "kernel-resident", E.REGION_MODES
+    rep = E.last_report()
+    assert rep.mode("Agg") == "kernel-resident", rep.modes()
+    assert rep.region("Agg").family == ds  # telemetry carries the terminal ds
     ref = E.execute_plan(plan, db, sigma=sigma).items_np()
     assert set(got) == set(ref)
     for k in ref:
@@ -265,9 +266,8 @@ def test_engine_radix_path_oversized_dict(rng):
     fused = P.fuse(plan, sigma=sigma)
     pipe = next(n for n in fused.nodes if isinstance(n, P.Pipeline))
     assert pipe.partitions >= 2 and pipe.part_sym == "G"
-    E.REGION_MODES.clear()
     got = E.execute_plan(fused, db, sigma=sigma).items_np()
-    assert E.REGION_MODES.get("Agg") == "kernel-radix"
+    assert E.last_report().mode("Agg") == "kernel-radix"
     ref = E.execute_plan(plan, db, sigma=sigma).items_np()
     assert set(got) == set(ref)
     for k in ref:
@@ -285,9 +285,8 @@ def test_engine_radix_path_oversized_dict(rng):
         assert not registry.resident("ht_thirdparty")
         plan3 = mk("ht_thirdparty")
         fused3 = P.fuse(plan3, sigma=sigma)
-        E.REGION_MODES.clear()
         got3 = E.execute_plan(fused3, db, sigma=sigma).items_np()
-        assert E.REGION_MODES.get("Agg", "xla").startswith("xla")
+        assert E.last_report().mode("Agg", "xla").startswith("xla")
         assert set(got3) == set(ref)
     finally:
         registry._REGISTRY.pop("ht_thirdparty", None)

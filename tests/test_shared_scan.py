@@ -233,9 +233,8 @@ def test_shared_pair_bitwise_equal_to_per_query(pair, db, sigma):
     plans, params = zip(*(_fused(qn, sigma) for qn in pair))
     sp = P.merge_shared_scans(list(plans), sigma=sigma)
     assert sp.regions, pair  # every listed pair must actually merge
-    E.REGION_MODES.clear()
     shared = E.execute_shared_plan(sp, db, sigma=sigma, params_list=list(params))
-    modes = dict(E.REGION_MODES)
+    modes = E.last_report().modes()
     per = [
         E.execute_plan(p, db, sigma=sigma, params=pv)
         for p, pv in zip(plans, params)
@@ -245,7 +244,7 @@ def test_shared_pair_bitwise_equal_to_per_query(pair, db, sigma):
             assert a.dtype == b.dtype and a.shape == b.shape
             assert (a == b).all()
     # each merged terminal reports the shared mode with its branch count
-    # (REGION_MODES is symbol-keyed: skip terminals whose name is also a
+    # (the report is symbol-keyed: skip terminals whose name is also a
     # non-covered node of the other plan — e.g. two plans both building an
     # "Agg" — where the later per-plan region legitimately overwrites it)
     covered = {

@@ -147,19 +147,19 @@ def test_streamed_bitwise_vs_resident(tpch_pair, qname):
     plan = P.fuse(compile_plan(q.llql(), choices), sigma=sigma)
     params = E.coerce_bindings(plan, q.bind_defaults({}))
     ref = E.execute_plan(plan, db, sigma=sigma, params=params).items_np()
-    E.reset_stream_stats()
-    E.REGION_MODES.clear()
     got = E.execute_plan(plan, cdb, sigma=sigma, params=params).items_np()
+    rep = E.last_report()
     assert set(got) == set(ref)
     for k in ref:
         np.testing.assert_array_equal(got[k], ref[k])
     # streaming actually engaged, and only encoded bytes crossed the link
     assert any(
-        m.startswith("streamed") for m in E.REGION_MODES.values()
-    ), E.REGION_MODES
-    assert E.STREAM_STATS["regions"] >= 1
-    assert E.STREAM_STATS["chunks"] >= 2
-    assert E.STREAM_STATS["peak_chunk_bytes"] < sum(
+        m.startswith("streamed") for m in rep.modes().values()
+    ), rep.modes()
+    assert rep.streamed_regions >= 1
+    assert rep.chunks >= 2
+    assert rep.wall_s > 0.0
+    assert rep.peak_chunk_bytes < sum(
         4 * t.nrows * len(t.names())
         for rel, t in db.items()
         if S.is_chunked(cdb[rel])
