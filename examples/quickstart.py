@@ -25,7 +25,12 @@
    run (DESIGN.md §10);
 10. adapt: a ``connect(db, adapt=True)`` session races the near-cost
     Alg.-1 candidates on warm-up, validates them bitwise, and serves the
-    measured winner (DESIGN.md §11).
+    measured winner (DESIGN.md §11);
+11. fault tolerance: inject a persistent device OOM at the kernel-launch
+    site — the session walks the degradation ladder (fused →
+    materialized → streamed), trips circuit breakers on the broken
+    rungs, and keeps serving results bitwise-identical to the clean run
+    (DESIGN.md §12).
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -160,6 +165,25 @@ def main() -> None:
                 f" validated={lane['validated']}"
             )
     print(f"   serving choices: {info['choices']}")
+
+    print("\n== fault tolerance: persistent device OOM -> streamed rung ...")
+    from repro.testing import faults
+
+    ft = repro.connect(db)
+    clean = ft.query("q1")
+    with faults.injected("kernel-launch", mode="always", error="oom"):
+        degraded = ft.query("q1")  # fused OOMs, materialized OOMs, streamed serves
+        rep = ft.report()
+    breakers = {
+        f"{q}/{mode}": f"{left:.0f}s" for (q, mode), left in ft.breakers().items()
+    }
+    same = set(degraded) == set(clean) and all(
+        bool((degraded[k] == clean[k]).all()) for k in degraded
+    )
+    print(f"   served from rung {rep.degraded} ({rep.degradation}),"
+          f" faults={rep.faults}")
+    print(f"   open circuit breakers: {breakers}")
+    print(f"   degraded == clean (bitwise): {same}")
 
 
 if __name__ == "__main__":

@@ -33,6 +33,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 import jax.numpy as jnp
 
 from repro.data.table import Table
+from repro.errors import PlanError
 from . import llql as L
 from . import plan as P
 from .cardinality import CardModel
@@ -74,8 +75,10 @@ _UN = {
 }
 
 
-class _Unsupported(Exception):
-    pass
+class _Unsupported(PlanError):
+    """An LLQL shape outside the recognized lowering forms.  Subclasses the
+    typed :class:`repro.errors.PlanError` (permanent — retry is useless);
+    ``run`` still catches it locally to fall back to the interpreter."""
 
 
 def compile_rowfn_frame(

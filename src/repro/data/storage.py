@@ -375,6 +375,9 @@ class ChunkedTable:
         payload: ``(n, ((col, kind, bits, ref, block), ...))``.  Hashable;
         part of the region-fn cache key (full chunks of a uniformly
         encoded column share one spec, so one compile serves them all)."""
+        from repro.testing import faults as _faults
+
+        _faults.check("chunk-decode", detail=f"chunk {i}")
         enc = self.chunks[i]
         names = tuple(cols) if cols is not None else tuple(enc)
         return (
@@ -396,6 +399,9 @@ class ChunkedTable:
         — only encoded bytes cross the link."""
         import jax
 
+        from repro.testing import faults as _faults
+
+        _faults.check("h2d", detail=f"chunk {i}")
         enc = self.chunks[i]
         names = tuple(cols) if cols is not None else tuple(enc)
         nbytes = sum(enc[c].nbytes for c in names)
@@ -487,6 +493,9 @@ class HostChunkedTable:
     def chunk_decode_spec(self, i: int, cols: Optional[Sequence[str]] = None):
         """Spill chunks are stored decoded+padded; the region fn reads the
         uploaded arrays verbatim and the live mask from the payload."""
+        from repro.testing import faults as _faults
+
+        _faults.check("chunk-decode", detail=f"spill chunk {i}")
         ch = self.chunks[i]
         names = tuple(cols) if cols is not None else tuple(ch)
         return (self.chunk_rows, tuple((c, "raw", 0, 0, 0) for c in names))
@@ -494,6 +503,9 @@ class HostChunkedTable:
     def upload_chunk(self, i: int, cols: Optional[Sequence[str]] = None):
         import jax
 
+        from repro.testing import faults as _faults
+
+        _faults.check("h2d", detail=f"spill chunk {i}")
         ch = self.chunks[i]
         names = tuple(cols) if cols is not None else tuple(ch)
         nbytes = sum(ch[c].nbytes for c in names) + self.masks[i].nbytes

@@ -25,10 +25,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import errors as _errors
 from repro.dicts import base as dbase
 from repro.dicts import registry
 from repro.kernels import ops as kops
 from repro.data.table import Table
+from repro.testing import faults as _faults
 
 
 @dataclass
@@ -49,6 +51,17 @@ class DictResult:
 
     def size(self) -> int:
         return int(registry.get(self.ds).size(self.table))
+
+
+def _safe_gather(a: jax.Array, idx: jax.Array) -> jax.Array:
+    """``a[idx]`` tolerant of zero-row gather sources.  A gather from an
+    empty relation only ever happens under an all-false found mask (nothing
+    can match an empty build side), so indexing a one-row zero pad instead
+    is semantics-preserving — XLA's gather itself rejects slice size 1 on a
+    0-length axis."""
+    if a.shape[0] == 0:
+        a = jnp.zeros((1,) + a.shape[1:], a.dtype)
+    return a[idx]
 
 
 def capacity_for(ds: str, n_distinct: int) -> int:
@@ -106,6 +119,9 @@ def build_dict(
     assume_sorted: bool = False,
     ops: Optional[Tuple[str, ...]] = None,
 ) -> DictResult:
+    # injection point: dictionary construction (fires at trace time when the
+    # build runs inside a jitted region — models cold-path build failures)
+    _faults.check("dict-build", detail=ds)
     ops = None if dbase.all_sum(ops) else tuple(ops)
     if valid is not None:
         # masked rows become PAD holes; the sorted fast path survives the
@@ -226,7 +242,8 @@ def fk_join(
     cols = dict(left.columns)
     for c in take:
         cols[prefix + c] = jnp.where(
-            found, right.col(c)[ridx], jnp.zeros((), right.col(c).dtype)
+            found, _safe_gather(right.col(c), ridx),
+            jnp.zeros((), right.col(c).dtype),
         )
     return Table(cols, left.nrows, mask=found, sorted_on=left.sorted_on)
 
@@ -521,7 +538,8 @@ def _exec_node(
         src_t = b.src
         gcols = {
             c: jnp.where(
-                found, src_t.col(c)[ridx], jnp.zeros((), src_t.col(c).dtype)
+                found, _safe_gather(src_t.col(c), ridx),
+                jnp.zeros((), src_t.col(c).dtype),
             )
             for c in src_t.names()
         }
@@ -730,6 +748,12 @@ class ExecutionReport:
     trace_count: int = 0
     shards: int = 1
     traced: bool = False
+    # fault-tolerance ledger (DESIGN.md §12) — stamped by Session/QueryServer
+    faults: int = 0  # typed faults observed while producing this result
+    retries: int = 0  # same-mode retry attempts consumed
+    degraded: int = 0  # ladder rungs descended (0 = primary mode)
+    shed: int = 0  # requests shed by admission/deadline in the same round
+    degradation: str = ""  # final rung when degraded ("materialized"|"streamed")
 
     def modes(self) -> Dict[str, str]:
         """``{terminal symbol: execution mode}`` — the old REGION_MODES view."""
@@ -754,7 +778,7 @@ class ExecutionReport:
         for f in (
             "wall_s", "chunks", "h2d_bytes", "peak_chunk_bytes",
             "peak_state_bytes", "streamed_regions", "trace_count", "shards",
-            "traced",
+            "traced", "faults", "retries", "degraded", "shed", "degradation",
         ):
             setattr(rep, f, getattr(self, f))
         return rep
@@ -767,6 +791,10 @@ class ExecutionReport:
             parts.append(
                 f"chunks={self.chunks} h2d={self.h2d_bytes >> 10}KiB"
             )
+        if self.degraded:
+            parts.append(f"degraded={self.degradation or '?'}")
+        if self.faults or self.retries:
+            parts.append(f"faults={self.faults} retries={self.retries}")
         lines = [" ".join(parts)]
         for s, r in self.regions.items():
             lines.append(f"  {s}: {r.mode}" + (f" [{r.family}]" if r.family else ""))
@@ -1160,6 +1188,11 @@ def _run_pipeline(pipe, env, refs, db, sigma, allow_sorted, params):
                 {**f.tables, f.order[0]: p0.decode()}, f.order, f.rels
             )
 
+    # injection point: resident fused-region dispatch (Pallas OR fused-XLA).
+    # The materialized node-by-node executor has no Pipeline nodes and the
+    # streamed paths returned above, so only the fused rung can fail here —
+    # this is what lets tests drive exactly one fused→materialized descent.
+    _faults.check("fused-region", detail=pipe.out)
     if _kernel_pipeline(pipe, rest, f, env, refs, sigma, allow_sorted, params, need):
         return
     _record_region(
@@ -1714,6 +1747,8 @@ def _stream_kernel_chunks(
                 allow_sorted, params, seg.need,
             )
         )
+    except _errors.ReproError:
+        raise  # injected/typed failure, not a kernel decline
     except Exception:
         ok = False
     if not ok:
@@ -1801,7 +1836,7 @@ def _region_stages(
             ridx = jnp.where(found, vals[:, 0].astype(jnp.int32), 0)
             gcols = {
                 c: jnp.where(
-                    found, a[ridx], jnp.zeros((), a.dtype)
+                    found, _safe_gather(a, ridx), jnp.zeros((), a.dtype)
                 )  # pruned: only columns later stages read are gathered
                 for c, a in src_cols[node.out].items()
             }
@@ -2671,8 +2706,12 @@ class SharedExecutable:
     def __call__(self, db: Dict[str, "Table"], params_list=None):
         self.calls += 1
         cols, masks = Executable._db_arrays(db)
+        _faults.check("kernel-launch", detail="shared")
         t0 = time.perf_counter()
-        out = self._fn(cols, masks, self.coerce_params(params_list))
+        try:
+            out = self._fn(cols, masks, self.coerce_params(params_list))
+        except Exception as e:  # noqa: BLE001
+            _raise_classified(e)
         self.last_report = republish_report(
             self._trace_report, time.perf_counter() - t0, self.trace_count
         )
@@ -2698,6 +2737,7 @@ def cached_shared_executable(sp, db: Dict[str, "Table"], sigma=None):
     key = (sp.fingerprint(), _db_signature(db), _sigma_signature(sigma))
     ex = _SHARED_EXEC_CACHE.get(key)
     if ex is None:
+        _faults.check("compile", detail="shared")
         ex = SharedExecutable(sp, db, sigma=sigma)
         if len(_SHARED_EXEC_CACHE) >= _EXEC_CACHE_MAX:
             _SHARED_EXEC_CACHE.pop(next(iter(_SHARED_EXEC_CACHE)))
@@ -2747,6 +2787,17 @@ _KIND_DTYPES = {
 }
 
 
+def _raise_classified(err: BaseException):
+    """Executor-boundary error translation: re-raise ``err`` as its typed
+    classification (``errors.classify``) chained via ``from``, or unchanged
+    when it is none of our business.  Nothing above the executor needs to
+    string-match an XLA message."""
+    typed = _errors.classify(err)
+    if typed is not None and typed is not err:
+        raise typed from err
+    raise err
+
+
 def coerce_bindings(plan, params, defaults=None):
     """Validate a parameter binding against ``plan.params`` and coerce every
     value to its declared scalar dtype — stable dtypes keep the jit avals
@@ -2764,6 +2815,58 @@ def coerce_bindings(plan, params, defaults=None):
         name: jnp.asarray(params[name], _KIND_DTYPES.get(kind, jnp.float32))
         for name, kind in plan.params
     }
+
+
+def validate_binding(plan, params, defaults=None):
+    """API-boundary binding validation (DESIGN.md §12): raises a permanent
+    :class:`repro.errors.PlanError` — unknown names, missing bindings, NaN
+    floats, and kind-incompatible values are caller bugs that must surface
+    *before* tracing, not as a shape error deep inside jit.
+
+    ``coerce_bindings`` (above) keeps its legacy ``KeyError`` contract for
+    internal callers; this is the typed front door used by ``Session.query``
+    and ``QueryServer``.  Returns the merged plain-python binding dict."""
+    merged = {**(defaults or {}), **(params or {})}
+    declared = dict(plan.params)
+    unknown = sorted(set(merged) - set(declared))
+    if unknown:
+        raise _errors.PlanError(
+            f"unknown parameter(s) {unknown}; "
+            f"declared: {sorted(declared)}"
+        )
+    missing = sorted(set(declared) - set(merged))
+    if missing:
+        raise _errors.PlanError(f"missing binding(s) for {missing}")
+    for name, kind in plan.params:
+        v = merged[name]
+        if isinstance(v, (jax.Array, np.ndarray, np.generic)):
+            if np.ndim(v) != 0:
+                raise _errors.PlanError(
+                    f"parameter {name!r} must be a scalar, got shape "
+                    f"{np.shape(v)}"
+                )
+            v = np.asarray(v).item()
+        if kind == "double":
+            if isinstance(v, bool) or not isinstance(v, (int, float)):
+                raise _errors.PlanError(
+                    f"parameter {name!r} is double; got "
+                    f"{type(v).__name__} {v!r}"
+                )
+            if isinstance(v, float) and v != v:
+                raise _errors.PlanError(f"parameter {name!r} is NaN")
+        elif kind in ("int", "string"):
+            if isinstance(v, bool) or not isinstance(v, (int, np.integer)):
+                raise _errors.PlanError(
+                    f"parameter {name!r} is {kind} (integral); got "
+                    f"{type(v).__name__} {v!r}"
+                )
+        elif kind == "bool":
+            if not isinstance(v, (bool, np.bool_)):
+                raise _errors.PlanError(
+                    f"parameter {name!r} is bool; got "
+                    f"{type(v).__name__} {v!r}"
+                )
+    return merged
 
 
 class Executable:
@@ -2784,6 +2887,9 @@ class Executable:
             plan = plan.plan
         self.plan = plan
         self.sigma = sigma
+        self.fused_regions = sum(
+            isinstance(n, P.Pipeline) for n in plan.nodes
+        )
         self.trace_count = 0
         self.calls = 0
         self.last_report: Optional[ExecutionReport] = None
@@ -2842,10 +2948,22 @@ class Executable:
     def __call__(self, db: Dict[str, "Table"], params=None):
         self.calls += 1
         cols, masks = self._db_arrays(db)
+        # injection point: resident whole-plan dispatch.  The streamed
+        # executor never passes through here — which is why streaming is the
+        # degradation ladder's last rung.  ``fused-region`` is checked here
+        # (not only inside ``_run_pipeline``, which runs at trace time) so
+        # warm calls hit it too; the materialized node-by-node plan has no
+        # Pipeline nodes and skips it — one rung of the ladder.
+        _faults.check("kernel-launch")
+        if self.fused_regions:
+            _faults.check("fused-region")
         # Dispatch stays async (callers force results when they read them;
         # adapt racing blocks explicitly), so wall_s here is dispatch wall.
         t0 = time.perf_counter()
-        out = self._fn(cols, masks, self.coerce_params(params))
+        try:
+            out = self._fn(cols, masks, self.coerce_params(params))
+        except Exception as e:  # noqa: BLE001 — boundary translation only
+            _raise_classified(e)
         self.last_report = republish_report(
             self._trace_report, time.perf_counter() - t0, self.trace_count
         )
@@ -2872,8 +2990,14 @@ class Executable:
         }
         self.calls += 1
         cols, masks = self._db_arrays(db)
+        _faults.check("kernel-launch")
+        if self.fused_regions:
+            _faults.check("fused-region")
         t0 = time.perf_counter()
-        out = self._vfn(cols, masks, stacked)
+        try:
+            out = self._vfn(cols, masks, stacked)
+        except Exception as e:  # noqa: BLE001
+            _raise_classified(e)
         self.last_report = republish_report(
             self._trace_report, time.perf_counter() - t0, self.trace_count
         )
@@ -2938,10 +3062,13 @@ class StreamedExecutable:
 
     def __call__(self, db: Dict[str, "Table"], params=None):
         self.calls += 1
-        out = execute_plan(
-            self.plan, db, sigma=self.sigma,
-            params=self.coerce_params(params),
-        )
+        try:
+            out = execute_plan(
+                self.plan, db, sigma=self.sigma,
+                params=self.coerce_params(params),
+            )
+        except Exception as e:  # noqa: BLE001
+            _raise_classified(e)
         rep = last_report()  # eager driver: the report is per call already
         rep.trace_count = self.trace_count
         self.last_report = rep
@@ -3009,6 +3136,10 @@ def cached_executable(plan, db: Dict[str, "Table"], sigma=None):
     ex = _EXEC_CACHE.get(key)
     if ex is None:
         _EXEC_CACHE_STATS["misses"] += 1
+        # injection point: cold-shape executable construction.  Fires before
+        # the cache insert, so a failed compile leaves no entry behind and a
+        # retry re-enters the compile from scratch.
+        _faults.check("compile", detail=str(plan.fingerprint())[:40])
         cls = (
             StreamedExecutable
             if any(_is_chunked(t) for t in db.values())
@@ -3030,6 +3161,9 @@ def exec_cache_stats() -> Dict[str, int]:
 def clear_exec_cache() -> None:
     _EXEC_CACHE.clear()
     _SHARED_EXEC_CACHE.clear()
+    # the per-region jitted fns survive executable reconstruction; keeping
+    # them would let a "cold" rebuild skip trace-time work (dict builds)
+    _REGION_CACHE.clear()
     _EXEC_CACHE_STATS.update(hits=0, misses=0)
 
 

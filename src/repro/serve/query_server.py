@@ -30,18 +30,43 @@ fairness).  With ``share_scans=True`` a round's batch may mix *different*
 query shapes whose plans share a fact-table scan: the batch executes as one
 ``SharedPlan`` pass (``plan.merge_shared_scans`` +
 ``engine.cached_shared_executable`` — DESIGN.md §9) and responses demux
-back to their requests by rid.  Warm/cold latency and throughput counters
-are exposed through ``stats()`` — ``benchmarks/serve_bench.py`` turns them
-into the BENCH_serve.json record the CI perf gate enforces.
+back to their requests by rid.
+
+Fault tolerance (DESIGN.md §12) — every submitted request terminates with a
+result or a *typed* error, never silence:
+
+* **admission** — the queue is bounded (``max_queue``); beyond it
+  ``submit`` raises :class:`AdmissionRejected` carrying the observed depth
+  and a retry-after hint derived from warm throughput;
+* **deadlines** — ``submit(..., deadline_s=...)``: expired requests are
+  swept to :class:`DeadlineExceeded` responses, and a request is never
+  *placed* in a round that the shape's warm-latency EWMA predicts will
+  miss its deadline (shed early, with the prediction attached);
+* **validation** — bindings are checked per request against the shape's
+  declared params (typed ``PlanError`` response), so one malformed request
+  cannot poison its batch;
+* **retry** — transient faults (injected, compile) retry the batch with
+  exponential backoff + deterministic jitter, capped per request;
+* **degradation** — a device OOM or exhausted retries falls back to
+  per-request execution through ``Session.execute_shape``, which walks the
+  validated degradation ladder (fused → materialized → streamed) under the
+  session's per-(shape, mode) circuit breakers.
+
+Warm/cold latency and throughput counters are exposed through ``stats()``
+— ``benchmarks/serve_bench.py`` and ``benchmarks/serve_fault_bench.py``
+turn them into the BENCH records the CI perf gates enforce.
 """
 from __future__ import annotations
 
+import random
 import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro import errors
+from repro.core.adapt import result_items
 from repro.exec import engine as E
 from repro.exec.queries import QUERIES, Query
 
@@ -52,6 +77,8 @@ class QueryRequest:
     qname: str
     params: Dict[str, object]
     t_submit: float = 0.0
+    deadline_s: Optional[float] = None  # relative budget given at submit
+    t_deadline: Optional[float] = None  # absolute (perf_counter) deadline
 
 
 @dataclass
@@ -59,10 +86,17 @@ class QueryResponse:
     rid: int
     qname: str
     params: Dict[str, object]
-    result: Dict[int, np.ndarray]
+    result: Optional[Dict[int, np.ndarray]]
     latency_s: float
     warm: bool  # shape was already compiled when this request ran
     batch_size: int = 1
+    error: Optional[BaseException] = None  # typed ReproError on failure
+    retries: int = 0  # transient-fault retries consumed
+    degraded: str = ""  # ladder rung that produced the result, if not primary
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None
 
 
 @dataclass
@@ -74,8 +108,10 @@ class _Shape:
     choices: Dict[str, object]
     compile_s: float  # cold cost actually paid: synthesis + lowering + jit
     plan: object = None  # fused physical plan (shared-scan merge input)
+    session_shape: object = None  # repro.session.Shape (ladder entry point)
     served: int = 0
     busy_s: float = 0.0  # execution wall attributed to this shape
+    ewma_s: Optional[float] = None  # warm batch-wall EWMA (deadline predictor)
 
 
 class QueryServer:
@@ -86,6 +122,12 @@ class QueryServer:
         queries: Optional[Dict[str, Query]] = None,
         max_batch: int = 8,
         share_scans: bool = False,
+        max_queue: int = 1024,
+        max_retries: int = 3,
+        backoff_s: float = 0.001,
+        backoff_cap_s: float = 0.05,
+        default_deadline_s: Optional[float] = None,
+        seed: int = 0,
     ):
         from repro.session import Session, connect
 
@@ -94,9 +136,10 @@ class QueryServer:
             # session on the spot (the old constructor-soup signature)
             session = connect(session, delta=delta, queries=queries)
         if session.mesh is not None:
-            raise ValueError(
-                "QueryServer micro-batches through vmapped executables; "
-                "serve sharded sessions through session.query directly"
+            raise errors.UnsupportedSessionError(
+                f"QueryServer micro-batches through vmapped executables and "
+                f"cannot front a sharded session ({session.shards} shards); "
+                f"serve sharded sessions through session.query directly"
             )
         self.session = session
         self.db = session.db
@@ -104,6 +147,12 @@ class QueryServer:
         self.queries = dict(queries or session.queries or QUERIES)
         self.max_batch = max_batch
         self.share_scans = share_scans
+        self.max_queue = max_queue
+        self.max_retries = max_retries
+        self.backoff_s = backoff_s
+        self.backoff_cap_s = backoff_cap_s
+        self.default_deadline_s = default_deadline_s
+        self._rng = random.Random(seed)  # deterministic backoff jitter
         self.sigma = session.sigma
         self.queue: List[QueryRequest] = []
         self.finished: List[QueryResponse] = []
@@ -119,6 +168,14 @@ class QueryServer:
             "cold_compiles": 0,
             "synth_runs": 0,
             "warm_hits": 0,
+            # fault-tolerance ledger (DESIGN.md §12)
+            "rejected": 0,  # AdmissionRejected at submit
+            "shed_deadline": 0,  # expired or predicted-to-miss requests
+            "invalid": 0,  # PlanError responses (binding validation)
+            "retries": 0,  # transient-fault retry attempts
+            "faults": 0,  # typed faults observed while serving
+            "degraded": 0,  # responses produced below the primary rung
+            "errors": 0,  # responses carrying a typed error
         }
         self._lat = {"warm": [], "cold": []}
         self._busy = {"warm": 0.0, "cold": 0.0}
@@ -139,7 +196,8 @@ class QueryServer:
         # trigger the trace now so the first serve measures warm execution
         ex(self.db, q.bind_defaults({}))
         shape = _Shape(
-            q, ex, dict(ss.choices), time.perf_counter() - t0, plan=ss.plan
+            q, ex, dict(ss.choices), time.perf_counter() - t0,
+            plan=ss.plan, session_shape=ss,
         )
         self._shapes[qname] = shape
         self.counters["cold_compiles"] += 1
@@ -168,31 +226,69 @@ class QueryServer:
                 )
 
     # -- request intake ------------------------------------------------------
-    def submit(self, qname: str, **params) -> int:
+    def submit(
+        self, qname: str, deadline_s: Optional[float] = None, **params
+    ) -> int:
+        """Enqueue a request; returns its rid.  Raises ``KeyError`` for an
+        unregistered query name and :class:`AdmissionRejected` (typed, with
+        queue depth + retry-after hint) when the bounded queue is full —
+        load shedding happens at the door, not by silent starvation."""
         if qname not in self.queries:
             raise KeyError(f"unknown query {qname!r}")
+        depth = len(self.queue) + len(self._round)
+        if depth >= self.max_queue:
+            self.counters["rejected"] += 1
+            raise errors.AdmissionRejected(
+                f"queue full ({depth}/{self.max_queue})",
+                queue_depth=depth,
+                retry_after_s=self._retry_after_hint(depth),
+            )
         rid = self._next_rid
         self._next_rid += 1
+        now = time.perf_counter()
+        if deadline_s is None:
+            deadline_s = self.default_deadline_s
         self.queue.append(
-            QueryRequest(rid, qname, dict(params), t_submit=time.perf_counter())
+            QueryRequest(
+                rid, qname, dict(params), t_submit=now,
+                deadline_s=deadline_s,
+                t_deadline=(
+                    now + deadline_s if deadline_s is not None else None
+                ),
+            )
         )
         self.counters["requests"] += 1
         return rid
+
+    def _retry_after_hint(self, depth: int) -> float:
+        """How long until the queue has likely drained a batch: pending
+        rounds × the mean warm batch wall (50ms floor when cold)."""
+        walls = [
+            s.ewma_s for s in self._shapes.values() if s.ewma_s is not None
+        ]
+        per_batch = (sum(walls) / len(walls)) if walls else 0.05
+        return max(1, depth // max(1, self.max_batch)) * per_batch
 
     # -- serving loop --------------------------------------------------------
     def _mergeable(self, qa: str, qb: str) -> bool:
         """Whether the two shapes' plans share a fused scan prefix — decided
         once per (pair, Σ) by actually running the merge pass on the two
-        fused plans and caching whether it produced a region."""
+        fused plans and caching whether it produced a region.  A typed
+        failure while probing (e.g. an injected compile fault on a cold
+        shape) just disables sharing for this round — the head shape's own
+        resolution is retried under the batch retry loop."""
         from repro.core import plan as P
 
         key = tuple(sorted((qa, qb)))
         hit = self._compat.get(key)
         if hit is None:
-            sp = P.merge_shared_scans(
-                [self._shape(qa).plan, self._shape(qb).plan],
-                sigma=self.sigma,
-            )
+            try:
+                sp = P.merge_shared_scans(
+                    [self._shape(qa).plan, self._shape(qb).plan],
+                    sigma=self.sigma,
+                )
+            except errors.ReproError:
+                return False  # not cached: probe again next round
             hit = bool(sp.regions)
             self._compat[key] = hit
         return hit
@@ -222,13 +318,111 @@ class QueryServer:
         self._round = rest
         return batch
 
-    def step(self) -> List[QueryResponse]:
-        """Serve one micro-batch; returns its responses ([] when idle)."""
-        batch = self._take_batch()
-        if not batch:
-            return []
-        warm = all(r.qname in self._shapes for r in batch)
-        t0 = time.perf_counter()  # cold batches count compile in busy time
+    # -- fault handling -------------------------------------------------------
+    def _fail(self, req: QueryRequest, err: BaseException, warm: bool,
+              retries: int = 0) -> QueryResponse:
+        """Terminate ``req`` with a typed error response — the no-silence
+        guarantee: every submitted request reaches ``finished``."""
+        resp = QueryResponse(
+            rid=req.rid, qname=req.qname, params=req.params, result=None,
+            latency_s=time.perf_counter() - req.t_submit, warm=warm,
+            error=err, retries=retries,
+        )
+        self.counters["errors"] += 1
+        self.counters["responses"] += 1
+        self.finished.append(resp)
+        return resp
+
+    def _sweep_expired(self, now: float) -> List[QueryResponse]:
+        """Expired requests get DeadlineExceeded, not silence."""
+        out = []
+        for store in (self._round, self.queue):
+            keep = []
+            for req in store:
+                if req.t_deadline is not None and now > req.t_deadline:
+                    self.counters["shed_deadline"] += 1
+                    out.append(self._fail(
+                        req,
+                        errors.DeadlineExceeded(
+                            f"deadline {req.deadline_s:.3f}s expired before "
+                            f"service", deadline_s=req.deadline_s,
+                        ),
+                        warm=req.qname in self._shapes,
+                    ))
+                else:
+                    keep.append(req)
+            store[:] = keep
+        return out
+
+    def _shed_predicted_misses(
+        self, batch: List[QueryRequest], now: float
+    ):
+        """Deadline-aware batching: a request is never placed in a round
+        that the shape's warm batch-wall EWMA predicts will miss its
+        deadline — shed NOW with the prediction attached, rather than
+        burning a round to produce a result nobody can use.  Shapes with no
+        latency history are admitted (no counters, no prediction).
+        Returns ``(kept requests, shed responses)``."""
+        kept, shed = [], []
+        for req in batch:
+            est = None
+            shape = self._shapes.get(req.qname)
+            if shape is not None:
+                est = shape.ewma_s
+            if (
+                req.t_deadline is not None
+                and est is not None
+                and now + est > req.t_deadline
+            ):
+                self.counters["shed_deadline"] += 1
+                shed.append(self._fail(
+                    req,
+                    errors.DeadlineExceeded(
+                        f"round predicted to miss deadline "
+                        f"({est * 1e3:.2f}ms predicted)",
+                        deadline_s=req.deadline_s, predicted_s=est,
+                    ),
+                    warm=True,
+                ))
+            else:
+                kept.append(req)
+        return kept, shed
+
+    def _validate(self, batch: List[QueryRequest]):
+        """Per-request binding validation against the shape's declared
+        params — a malformed request gets a typed ``PlanError`` response
+        and cannot poison the rest of its batch.  Returns
+        ``(kept requests, rejected responses)``."""
+        kept, bad = [], []
+        for req in batch:
+            shape = self._shapes.get(req.qname)
+            if shape is None:
+                try:
+                    shape = self._shape(req.qname)
+                except Exception:  # noqa: BLE001 — resolution failures are
+                    # the batch retry loop's job; keep the request in play
+                    kept.append(req)
+                    continue
+            try:
+                E.validate_binding(
+                    shape.plan, req.params,
+                    defaults=shape.query.bind_defaults({}),
+                )
+            except errors.PlanError as pe:
+                self.counters["invalid"] += 1
+                bad.append(self._fail(req, pe, warm=True))
+                continue
+            kept.append(req)
+        return kept, bad
+
+    def _backoff(self, attempt: int) -> None:
+        """Exponential backoff with deterministic jitter, capped."""
+        base = min(self.backoff_s * (2 ** (attempt - 1)), self.backoff_cap_s)
+        time.sleep(base + self._rng.uniform(0.0, base))
+
+    def _execute_batch(self, batch: List[QueryRequest]):
+        """One attempt at the fast batched path.  Returns
+        ``(shapes, results)``; raises typed errors on failure."""
         qnames = [r.qname for r in batch]
         if len(set(qnames)) == 1:
             shape = self._shape(batch[0].qname)
@@ -237,38 +431,105 @@ class QueryServer:
                 results = [shape.executable(self.db, bindings[0])]
             else:
                 results = shape.executable.call_batched(self.db, bindings)
-            shapes = [shape] * len(batch)
-        else:
-            # cross-query batch: ONE shared pass over the common scan
-            # prefix (plan.merge_shared_scans), demuxed by request order
-            from repro.core import plan as P
+            return [shape] * len(batch), results
+        # cross-query batch: ONE shared pass over the common scan
+        # prefix (plan.merge_shared_scans), demuxed by request order
+        from repro.core import plan as P
 
-            shapes = [self._shape(q) for q in qnames]
-            sp = P.merge_shared_scans(
-                [s.plan for s in shapes], sigma=self.sigma
-            )
-            ex = E.cached_shared_executable(sp, self.db, sigma=self.sigma)
-            bindings = [
-                s.query.bind_defaults(r.params)
-                for s, r in zip(shapes, batch)
-            ]
-            results = ex(self.db, bindings)
-            self.counters["shared_batches"] += 1
-        out = []
+        shapes = [self._shape(q) for q in qnames]
+        sp = P.merge_shared_scans([s.plan for s in shapes], sigma=self.sigma)
+        ex = E.cached_shared_executable(sp, self.db, sigma=self.sigma)
+        bindings = [
+            s.query.bind_defaults(r.params) for s, r in zip(shapes, batch)
+        ]
+        results = ex(self.db, bindings)
+        self.counters["shared_batches"] += 1
+        return shapes, results
+
+    def _execute_one(self, req: QueryRequest):
+        """Per-request fallback: the session's degradation ladder
+        (``Session.execute_shape``) with this server's retry/backoff around
+        transient faults.  Returns ``(shape, out, retries)``; raises the
+        final typed error when the request cannot be served."""
+        shape = self._shape(req.qname)
+        binding = shape.query.bind_defaults(req.params)
+        attempt = 0
+        while True:
+            try:
+                out = self.session.execute_shape(
+                    shape.session_shape, binding
+                )
+                return shape, out, attempt
+            except errors.ReproError as e:
+                self.counters["faults"] += 1
+                if errors.is_transient(e) and attempt < self.max_retries:
+                    attempt += 1
+                    self.counters["retries"] += 1
+                    self._backoff(attempt)
+                    continue
+                raise
+
+    def step(self) -> List[QueryResponse]:
+        """Serve one micro-batch; returns this step's responses, including
+        typed-error responses for expired/invalid/failed requests ([] only
+        when there is no work at all)."""
+        now = time.perf_counter()
+        out = self._sweep_expired(now)
+        batch = self._take_batch()
+        # warm/cold is decided by what was compiled when the round began —
+        # validation below may resolve cold shapes as a side effect
+        warm = all(r.qname in self._shapes for r in batch) if batch else True
+        t0 = time.perf_counter()  # cold batches count compile in busy time
+        batch, bad = self._validate(batch)
+        out.extend(bad)
+        batch, shed = self._shed_predicted_misses(batch, time.perf_counter())
+        out.extend(shed)
+        if not batch:
+            # the step still terminated requests (or was genuinely idle)
+            return out
+        head = batch[0].qname
+        shapes = results = None
+        batch_retries = 0
+        while results is None:
+            try:
+                shapes, results = self._execute_batch(batch)
+            except Exception as e:  # noqa: BLE001 — typed triage below
+                typed = errors.classified(e)
+                if not isinstance(typed, errors.ReproError):
+                    raise  # genuine bug: keep original type and traceback
+                self.counters["faults"] += 1
+                if (
+                    errors.is_transient(typed)
+                    and batch_retries < self.max_retries
+                ):
+                    batch_retries += 1
+                    self.counters["retries"] += 1
+                    self._backoff(batch_retries)
+                    continue
+                # degradable (OOM) or retries exhausted: isolate requests
+                # and walk each down the session's degradation ladder
+                out.extend(self._step_degraded(batch, warm, t0))
+                self.counters["batches"] += 1
+                return out
         done = time.perf_counter()
         self._busy["warm" if warm else "cold"] += done - t0
         uniq = list({id(s): s for s in shapes}.values())
         for s in uniq:
             s.busy_s += (done - t0) / len(uniq)
+        if warm:
+            self._note_wall(self._shapes[head], done - t0)
+        rep = E.last_report()
+        rep.retries += batch_retries
         for req, s, res in zip(batch, shapes, results):
             resp = QueryResponse(
                 rid=req.rid,
                 qname=req.qname,
                 params=req.params,
-                result=res.items_np(),
+                result=result_items(res),
                 latency_s=done - req.t_submit,
                 warm=warm,
                 batch_size=len(batch),
+                retries=batch_retries,
             )
             self._lat["warm" if warm else "cold"].append(resp.latency_s)
             self.finished.append(resp)
@@ -277,6 +538,50 @@ class QueryServer:
         self.counters["responses"] += len(batch)
         self.counters["batches"] += 1
         return out
+
+    def _step_degraded(
+        self, batch: List[QueryRequest], warm: bool, t0: float
+    ) -> List[QueryResponse]:
+        """The batch path failed hard: serve each request individually
+        through the degradation ladder so one poisoned request (or a
+        mode-wide OOM) cannot strand the others."""
+        out = []
+        for req in batch:
+            try:
+                shape, res, retries = self._execute_one(req)
+            except errors.ReproError as e:
+                out.append(self._fail(req, e, warm=warm))
+                continue
+            done = time.perf_counter()
+            rep = E.last_report()
+            rep.retries += retries
+            if rep.degraded:
+                self.counters["degraded"] += 1
+            resp = QueryResponse(
+                rid=req.rid,
+                qname=req.qname,
+                params=req.params,
+                result=result_items(res),
+                latency_s=done - req.t_submit,
+                warm=warm,
+                batch_size=1,
+                retries=retries,
+                degraded=rep.degradation,
+            )
+            self._lat["warm" if warm else "cold"].append(resp.latency_s)
+            self.finished.append(resp)
+            out.append(resp)
+            shape.served += 1
+            self.counters["responses"] += 1
+            self._busy["warm" if warm else "cold"] += done - t0
+            t0 = done
+        return out
+
+    def _note_wall(self, shape: _Shape, wall_s: float) -> None:
+        shape.ewma_s = (
+            wall_s if shape.ewma_s is None
+            else 0.3 * wall_s + 0.7 * shape.ewma_s
+        )
 
     def run_until_done(self, max_steps: int = 100_000) -> List[QueryResponse]:
         for _ in range(max_steps):
@@ -305,6 +610,7 @@ class QueryServer:
                     "served": s.served,
                     "compile_s": s.compile_s,
                     "busy_s": s.busy_s,
+                    "ewma_ms": (s.ewma_s or 0.0) * 1e3,
                 }
                 for q, s in self._shapes.items()
             },

@@ -31,9 +31,12 @@ from typing import Dict, Optional, Tuple, Union
 
 import numpy as np
 
+from repro import errors
 from repro.core import llql as L
 from repro.core import plan as P
-from repro.core.adapt import AdaptConfig, AdaptivePlanner, result_items
+from repro.core.adapt import (
+    AdaptConfig, AdaptivePlanner, bitwise_equal, result_items,
+)
 from repro.core.cost import AnalyticCostModel, FusionCostModel, NetCostModel
 from repro.core.lower import compile as compile_plan
 from repro.core.synthesis import synthesize
@@ -41,6 +44,11 @@ from repro.data import storage as S
 from repro.data.table import collect_stats
 from repro.exec import engine as E
 from repro.exec.queries import FACT_RELS, REGISTRY, Query
+
+#: queries whose fused path differs from the bare reference in the last f32
+#: ulp (XLA FMA contraction inside the fused region — DESIGN.md §7), so
+#: degraded-result validation uses allclose instead of bitwise for them
+ALLCLOSE_QUERIES = ("q9",)
 
 
 @dataclass
@@ -55,6 +63,9 @@ class Shape:
     compile_s: float = 0.0
     served: int = 0
     synth_runs: int = 0
+    # degradation-ladder state (DESIGN.md §12): lazily-built executables for
+    # the lower rungs, keyed by mode name
+    mode_ex: Dict[str, tuple] = field(default_factory=dict)
 
 
 class Session:
@@ -129,6 +140,25 @@ class Session:
         self._shapes: Dict[str, Shape] = {}
         self._last_report: Optional[E.ExecutionReport] = None
 
+        # -- fault tolerance (DESIGN.md §12) --------------------------------
+        #: consecutive transient failures before a mode counts as broken
+        self.breaker_threshold = 2
+        #: seconds a tripped (shape, mode) breaker stays open
+        self.breaker_cooldown_s = 30.0
+        self._breaker: Dict[Tuple[str, str], float] = {}  # -> open-until
+        self._breaker_fails: Dict[Tuple[str, str], int] = {}
+        #: recent primary-mode results per (shape, binding) — the reference
+        #: degraded re-executions are equivalence-checked against.  Raw
+        #: executor outputs (no forced d2h sync on the hot path); normalized
+        #: only when a degraded result actually needs comparing.
+        self._ref_results: Dict[tuple, object] = {}
+        self._ref_results_max = 32
+        #: lazily-built shrunken-budget chunked twin of the database — the
+        #: ladder's streamed rung (storage_plan at half the budget)
+        self._degraded_storage_cache = None
+        #: cumulative ladder telemetry across the session's lifetime
+        self.fault_stats = {"faults": 0, "retries": 0, "degraded": 0}
+
     # -- planning funnel -----------------------------------------------------
     def _resolve(self, q: Union[str, Query, L.Expr]) -> Tuple[str, Query]:
         if isinstance(q, str):
@@ -172,6 +202,185 @@ class Session:
         if self.mesh is not None:
             return executable(params)
         return executable(self.db, params)
+
+    # -- degradation ladder (DESIGN.md §12) ----------------------------------
+    #
+    # Every rung realizes the SAME LLQL semantics under the same Γ — the
+    # paper's equivalence result is what makes descending *legal*:
+    #
+    #   fused-Pallas/XLA  →  materialized-XLA  →  streamed out-of-core
+    #
+    # A DeviceOOMError descends immediately (same mode will OOM again); a
+    # transient fault (injected, compile) re-raises for the caller to retry
+    # at the same rung, and descends only after `breaker_threshold`
+    # consecutive failures ("repeated kernel failure").  A descent trips the
+    # per-(shape, mode) circuit breaker: until the cooldown expires, new
+    # requests skip the broken rung without paying the failure again.
+
+    def _ladder_modes(self) -> Tuple[str, ...]:
+        if self.mesh is not None:
+            return ("sharded",)  # no ladder: classification only
+        if self.memory_budget is not None:
+            # already streaming: the only lower rung is a smaller footprint
+            return ("streamed", "streamed-shrunk")
+        return ("fused", "materialized", "streamed")
+
+    def _degraded_storage(self):
+        """The streamed rung's database: ``chunk_db`` under half the
+        session's budget (or half the decoded footprint when fully
+        resident), so the rung provably fits where the resident modes
+        did not."""
+        if self._degraded_storage_cache is None:
+            if self.memory_budget is not None:
+                budget = max(1, self.memory_budget // 2)
+            else:
+                budget = max(1, sum(
+                    a.nbytes
+                    for t in self.base_db.values()
+                    for a in t.columns.values()
+                ) // 2)
+            db = S.chunk_db(
+                self.base_db, memory_budget_bytes=budget,
+                chunk_rows=self.chunk_rows,
+            )
+            fusion = dataclasses.replace(
+                FusionCostModel(), chunk_rows=float(self.chunk_rows)
+            )
+            streamed = tuple(
+                sorted(r for r, t in db.items() if S.is_chunked(t))
+            )
+            self._degraded_storage_cache = (db, fusion, streamed)
+        return self._degraded_storage_cache
+
+    def _mode_executable(self, shape: Shape, mode: str):
+        """(executable, db) realizing ``shape`` at ladder rung ``mode``.
+        The primary rung is the shape's installed executable (kept live so
+        adaptive reinstalls stay visible); lower rungs build lazily through
+        the same executable caches."""
+        modes = self._ladder_modes()
+        if mode == modes[0]:
+            return shape.executable, self.db
+        cached = shape.mode_ex.get(mode)
+        if cached is not None:
+            return cached
+        expr = shape.query.llql()
+        if mode == "materialized":
+            # the same plan, unfused: node-by-node XLA execution — no
+            # Pipeline regions, no Pallas kernels, smaller live sets
+            plan = compile_plan(expr, shape.choices)
+            ex = E.cached_executable(plan, self.db, sigma=self.sigma)
+            db = self.db
+        elif mode in ("streamed", "streamed-shrunk"):
+            db, fusion, streamed = self._degraded_storage()
+            plan = P.fuse(
+                compile_plan(expr, shape.choices),
+                sigma=self.sigma, streamed=streamed, fusion=fusion,
+            )
+            ex = E.cached_executable(plan, db, sigma=self.sigma)
+        else:
+            raise ValueError(f"unknown ladder mode {mode!r}")
+        shape.mode_ex[mode] = (ex, db)
+        return ex, db
+
+    def _trip_breaker(self, name: str, mode: str) -> None:
+        self._breaker[(name, mode)] = (
+            time.monotonic() + self.breaker_cooldown_s
+        )
+        self._breaker_fails.pop((name, mode), None)
+
+    def breakers(self) -> Dict[Tuple[str, str], float]:
+        """Open circuit breakers: ``{(shape, mode): seconds-left}``."""
+        now = time.monotonic()
+        return {
+            k: until - now
+            for k, until in self._breaker.items()
+            if until > now
+        }
+
+    def _binding_key(self, name: str, bound) -> tuple:
+        return (name,) + tuple(
+            sorted((k, repr(v)) for k, v in (bound or {}).items())
+        )
+
+    def _validate_degraded(self, shape: Shape, key: tuple, out) -> None:
+        """Equivalence-check a degraded result against the cached primary
+        result for the same binding, when one is available — reusing the
+        fused==materialized bitwise contract (allclose for the documented
+        ulp-level exceptions)."""
+        ref = self._ref_results.get(key)
+        if ref is None:
+            return
+        a, b = result_items(out), result_items(ref)
+        if bitwise_equal(a, b):
+            return
+        if shape.query.name in ALLCLOSE_QUERIES and set(a) == set(b):
+            if all(
+                np.allclose(a[k], b[k], rtol=1e-5, atol=1e-6) for k in a
+            ):
+                return
+        raise errors.ReproError(
+            f"degraded execution of {shape.query.name!r} diverged from its "
+            f"primary-mode reference — equivalence violation, not noise"
+        )
+
+    def execute_shape(self, shape: Shape, bound=None):
+        """Execute one bound request for ``shape`` with the degradation
+        ladder: start at the lowest rung whose breaker is closed, descend on
+        ``DeviceOOMError`` or repeated transient failure, re-raise typed
+        transients for the caller (``QueryServer``) to retry with backoff.
+        Returns the raw executor output; ``E.last_report()`` is stamped with
+        the fault/degradation ledger."""
+        name = shape.query.name
+        modes = self._ladder_modes()
+        now = time.monotonic()
+        idx = 0
+        while (
+            idx < len(modes) - 1
+            and self._breaker.get((name, modes[idx]), 0.0) > now
+        ):
+            idx += 1
+        faults = 0
+        while True:
+            mode = modes[idx]
+            try:
+                ex, db = self._mode_executable(shape, mode)
+                out = ex(bound) if self.mesh is not None else ex(db, bound)
+            except Exception as e:  # noqa: BLE001 — typed triage below
+                typed = errors.classified(e)
+                if not isinstance(typed, errors.ReproError):
+                    raise  # genuine bug: keep original type and traceback
+                if isinstance(typed, errors.PlanError):
+                    raise typed from (e if typed is not e else None)
+                faults += 1
+                self.fault_stats["faults"] += 1
+                degrade = isinstance(typed, errors.DeviceOOMError)
+                if not degrade and errors.is_transient(typed):
+                    k = (name, mode)
+                    fails = self._breaker_fails.get(k, 0) + 1
+                    self._breaker_fails[k] = fails
+                    degrade = fails >= self.breaker_threshold
+                if degrade and idx < len(modes) - 1:
+                    self._trip_breaker(name, mode)
+                    idx += 1
+                    continue
+                if typed is e:
+                    raise
+                raise typed from e
+            # success at rung `idx`
+            self._breaker_fails.pop((name, mode), None)
+            key = self._binding_key(name, bound)
+            if idx == 0:
+                if len(self._ref_results) >= self._ref_results_max:
+                    self._ref_results.pop(next(iter(self._ref_results)))
+                self._ref_results[key] = out
+            else:
+                self.fault_stats["degraded"] += 1
+                self._validate_degraded(shape, key, out)
+            rep = E.last_report()
+            rep.faults += faults
+            rep.degraded = idx
+            rep.degradation = mode if idx else ""
+            return out
 
     def shape(self, q: Union[str, Query, L.Expr]) -> Shape:
         """The compiled shape for a query — cold pipeline once, cached after.
@@ -221,8 +430,17 @@ class Session:
     ) -> Dict[int, np.ndarray]:
         """Execute ``q`` under this session's planning funnel and return its
         ``{key: np.ndarray}`` result.  ``q`` is a registered query name
-        (``queries.REGISTRY``), a ``Query`` object, or a raw LLQL program."""
+        (``queries.REGISTRY``), a ``Query`` object, or a raw LLQL program.
+
+        Bindings are validated at this boundary (typed ``PlanError`` for
+        unknown names, kind-incompatible values, and NaN floats — never a
+        shape error deep inside jit), and execution runs under the
+        degradation ladder: device OOM or repeated kernel failure re-executes
+        down fused → materialized → streamed (see ``execute_shape``)."""
         shape = self.shape(q)
+        E.validate_binding(
+            shape.plan, params, defaults=shape.query.bind_defaults({})
+        )
         bound = shape.query.bind_defaults(params)
         if shape.planner is not None:
             choices = shape.planner.choose(bound)
@@ -233,7 +451,7 @@ class Session:
                     shape.query.llql(), choices
                 )
             shape.synth_runs = len(shape.planner.races)
-        out = self._call(shape.executable, bound)
+        out = self.execute_shape(shape, bound)
         shape.served += 1
         self._last_report = E.last_report()
         return result_items(out)

@@ -1,0 +1,3 @@
+"""Test-support harnesses that ship with the library (not the test suite):
+deterministic fault injection (``repro.testing.faults``) so recovery paths
+are exercisable on CPU CI without real hardware failures."""
