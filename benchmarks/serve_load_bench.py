@@ -1,0 +1,227 @@
+"""Open-loop tail-latency benchmark for the hardened QueryServer.
+
+    PYTHONPATH=src python -m benchmarks.serve_load_bench [--scale S]
+        [--shards N] [--requests R] [--util U]
+
+Closed-loop driving (submit, drain, repeat) hides queueing: the driver
+waits for the server, so a slow server just slows the driver down and the
+measured latency stays flat.  This benchmark is **open-loop**: request
+arrival times are drawn from a Poisson process *before* the run, and the
+driver submits each request when its arrival time passes, whether or not
+the server has kept up — exactly how load hits a real service, and the
+only way tail latency under queueing is visible (coordinated omission is
+a measurement bug, not a workload property).
+
+Three phases over a mixed query/binding workload (q1-heavy with fresh
+bindings, plus q5 and q18):
+
+* **saturation** — a closed-loop burst measures the service ceiling; the
+  open-loop phases offer ``util`` (default 0.6) of it, so the arrival
+  process is demanding but stable;
+* **clean**    — open-loop Poisson arrivals, per-request deadlines;
+  reports p50/p99 response latency and achieved throughput;
+* **faulted**  — the same arrival schedule with a 10% fault rate injected
+  (``shard-exec`` when sharded, ``kernel-launch`` single-shard): retry,
+  the ladder, and shedding must terminate EVERY request — stranded == 0 —
+  while keeping >= 0.5x clean throughput.
+
+Emits the uniform BENCH record (``BENCH_serve_load.json``) with absolute
+``checks`` the CI perf gate enforces: ``stranded`` (max 0),
+``faulted_over_clean_rps`` (min 0.5), ``clean_p99_within_deadline_ms``
+(max = the deadline).  With ``--shards N`` the same driver runs against a
+sharded session (requires ``XLA_FLAGS=--xla_force_host_platform_device_count>=N``
+on CPU); the single-shard record is the one gated against the committed
+baseline.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro import errors
+from repro.data import tpch
+from repro.serve.query_server import QueryServer
+from repro.session import connect
+from repro.testing import faults
+from .common import emit, write_record
+
+DEADLINE_S = 2.0  # generous per-request budget for CI CPU runners
+FAULT_RATE = 0.1
+UTILIZATION = 0.6  # offered load as a fraction of measured saturation
+
+
+def _workload(rng, n):
+    """A mixed request stream: fresh-binding q1 (hot shape), q5 and q18
+    riding along so rounds interleave shapes (arrival-order fairness and
+    per-shape EWMAs both get exercised)."""
+    out = []
+    for i in range(n):
+        if i % 4 == 3:
+            out.append(("q5", {}) if i % 8 == 3 else
+                       ("q18", {"threshold": float(300 + i % 5)}))
+        else:
+            out.append(("q1", {"date": float(rng.uniform(0.3, 0.95))}))
+    return out
+
+
+def _server(db, shards=0, **kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("backoff_s", 1e-4)
+    kw.setdefault("backoff_cap_s", 2e-3)
+    kw.setdefault("default_deadline_s", DEADLINE_S)
+    srv = QueryServer(connect(dict(db), shards=shards), **kw)
+    srv.warm_up(["q1", "q5", "q18"])
+    return srv
+
+
+def _saturation(srv, work):
+    """Closed-loop service ceiling: burst-submit the whole workload, drain,
+    responses per second."""
+    for qname, params in work:
+        srv.submit(qname, **params)
+    t0 = time.perf_counter()
+    srv.run_until_done()
+    wall = time.perf_counter() - t0
+    return len(work) / wall, wall
+
+
+def _open_loop(srv, work, arrivals):
+    """Drive Poisson arrivals in real time: submit every request whose
+    arrival time has passed, then serve one step; idle-wait only when the
+    queue is empty AND the next arrival is in the future.  Admission
+    rejections are counted by the server and NOT resubmitted (open loop:
+    the client's retry is a new arrival, not this one)."""
+    i = 0
+    t0 = time.perf_counter()
+    while i < len(arrivals) or srv.queue or srv._round:
+        now = time.perf_counter() - t0
+        while i < len(arrivals) and arrivals[i] <= now:
+            qname, params = work[i]
+            try:
+                srv.submit(qname, **params)
+            except errors.AdmissionRejected:
+                pass  # typed shed at the door; ledger keeps the count
+            i += 1
+        if srv.queue or srv._round:
+            srv.step()
+        elif i < len(arrivals):
+            time.sleep(min(1e-3, max(0.0, arrivals[i] - now)))
+    return time.perf_counter() - t0
+
+
+def _phase_stats(srv, wall):
+    stats = srv.stats()
+    lat = [r.latency_s for r in srv.finished if r.ok]
+    p50 = float(np.percentile(lat, 50)) * 1e3 if lat else 0.0
+    p99 = float(np.percentile(lat, 99)) * 1e3 if lat else 0.0
+    stranded = stats["requests"] - stats["responses"]
+    rps = stats["responses"] / wall if wall > 0 else 0.0
+    return stats, p50, p99, stranded, rps
+
+
+def run(
+    scale: float = 0.01,
+    shards: int = 0,
+    requests: int = 48,
+    util: float = UTILIZATION,
+    seed: int = 0,
+    out: str = "BENCH_serve_load.json",
+):
+    db = tpch.generate(scale=scale, seed=seed).tables()
+    faults.disarm()
+    rng = np.random.default_rng(seed)
+    work = _workload(rng, requests)
+    fault_point = "shard-exec" if shards > 1 else "kernel-launch"
+
+    # -- saturation: the service ceiling sets the offered rate --------------
+    sat_rps, sat_wall = _saturation(_server(db, shards=shards), work)
+    rate = max(1.0, util * sat_rps)
+    emit("serve_load/saturation", sat_wall / requests * 1e6,
+         f"rps={sat_rps:.1f},offered={rate:.1f}")
+    # the SAME arrival schedule drives both open-loop phases
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=requests))
+
+    # -- clean: open-loop Poisson arrivals ----------------------------------
+    srv = _server(db, shards=shards)
+    wall = _open_loop(srv, work, arrivals)
+    stats, p50, p99, stranded_c, clean_rps = _phase_stats(srv, wall)
+    emit("serve_load/clean", wall / requests * 1e6,
+         f"rps={clean_rps:.1f},p50_ms={p50:.2f},p99_ms={p99:.2f},"
+         f"shed={stats['shed_deadline']},rej={stats['rejected']}")
+
+    # -- faulted: same arrivals, 10% injected faults ------------------------
+    srv = _server(db, shards=shards, seed=1)
+    with faults.injected(fault_point, mode="rate", rate=FAULT_RATE, seed=7):
+        fwall = _open_loop(srv, work, arrivals)
+    fstats, fp50, fp99, stranded_f, fault_rps = _phase_stats(srv, fwall)
+    assert fstats["faults"] > 0, "rate spec never fired; workload too small"
+    ratio = fault_rps / clean_rps if clean_rps else 0.0
+    emit("serve_load/faulted", fwall / requests * 1e6,
+         f"rps={fault_rps:.1f},p99_ms={fp99:.2f},over_clean={ratio:.2f}x,"
+         f"retries={fstats['retries']},degraded={fstats['degraded']},"
+         f"stranded={stranded_f}")
+
+    write_record(
+        out,
+        "serve_load",
+        {
+            "serve_load/saturation": {
+                "seconds": sat_wall / requests, "requests": requests,
+                "rps": sat_rps,
+            },
+            "serve_load/clean": {
+                "seconds": wall / requests, "requests": requests,
+                "rps": clean_rps, "p50_ms": p50, "p99_ms": p99,
+                "shed_deadline": stats["shed_deadline"],
+                "rejected": stats["rejected"],
+            },
+            "serve_load/faulted": {
+                "seconds": fwall / requests, "requests": requests,
+                "rps": fault_rps, "p50_ms": fp50, "p99_ms": fp99,
+                "retries": fstats["retries"], "faults": fstats["faults"],
+                "degraded": fstats["degraded"],
+                "shed_deadline": fstats["shed_deadline"],
+                "rejected": fstats["rejected"],
+            },
+        },
+        shards=max(1, shards),
+        checks={
+            # the no-silence guarantee: every admitted request terminated
+            "stranded": {
+                "value": float(stranded_c + stranded_f), "max": 0.0,
+            },
+            # faults shed load, they must not collapse it
+            "faulted_over_clean_rps": {"value": ratio, "min": 0.5},
+            # clean open-loop p99 stays inside the per-request deadline
+            "clean_p99_within_deadline_ms": {
+                "value": p99, "max": DEADLINE_S * 1e3,
+            },
+        },
+        scale=scale,
+        offered_rps=float(rate),
+        fault_point=fault_point,
+        utilization=util,
+    )
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.01)
+    ap.add_argument("--shards", type=int, default=0)
+    ap.add_argument("--requests", type=int, default=48)
+    ap.add_argument("--util", type=float, default=UTILIZATION)
+    ap.add_argument("--out", default="BENCH_serve_load.json")
+    args = ap.parse_args()
+    from .common import header
+
+    header()
+    run(
+        scale=args.scale,
+        shards=args.shards,
+        requests=args.requests,
+        util=args.util,
+        out=args.out,
+    )

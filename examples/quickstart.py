@@ -30,7 +30,12 @@
     site — the session walks the degradation ladder (fused →
     materialized → streamed), trips circuit breakers on the broken
     rungs, and keeps serving results bitwise-identical to the clean run
-    (DESIGN.md §12).
+    (DESIGN.md §12);
+12. sharded serving: q5 through a ``QueryServer`` fronting a 2-shard
+    session — a persistent injected shard fault walks the sharded ladder
+    down to the single-shard replan rung, and after the breaker cooldown
+    the mesh serves again (DESIGN.md §13).  Needs ≥ 2 devices: rerun
+    with ``XLA_FLAGS=--xla_force_host_platform_device_count=2`` on CPU.
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -184,6 +189,43 @@ def main() -> None:
           f" faults={rep.faults}")
     print(f"   open circuit breakers: {breakers}")
     print(f"   degraded == clean (bitwise): {same}")
+
+    print("\n== sharded serving: q5 through QueryServer over 2 shards ...")
+    import jax
+    import numpy as np
+
+    if jax.device_count() < 2:
+        print(
+            "   (skipped: 1 device — rerun with "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=2)"
+        )
+        return
+    from repro.serve.query_server import QueryServer
+
+    sharded = repro.connect(db, shards=2)
+    server = QueryServer(sharded, max_batch=2, max_retries=1,
+                         backoff_s=1e-4, backoff_cap_s=1e-3)
+    server.warm_up(["q5"])
+    ref = sharded.query("q5")  # primes the ladder's reference cache
+    # a persistent shard fault: both sharded rungs break, the ladder
+    # replans single-shard — the answer survives the mesh being sick
+    with faults.injected("shard-exec", mode="always", error="oom"):
+        server.submit("q5")
+        (resp,) = server.step()
+    close = resp.ok and set(resp.result) == set(ref) and all(
+        bool(np.allclose(resp.result[k], ref[k], rtol=3e-3, atol=3e-2))
+        for k in ref
+    )
+    print(f"   served degraded from rung '{resp.degraded}',"
+          f" allclose to sharded reference: {close}")
+    print(f"   open breakers: {sorted(m for _, m in sharded.breakers())}")
+    # the breaker cooldown expires -> the mesh serves the primary rung again
+    sharded._breaker.clear()  # (a real deployment waits out the cooldown)
+    server.submit("q5")
+    (resp2,) = server.step()
+    rep2 = sharded.report()
+    print(f"   after recovery: degraded rung = {resp2.degraded or None},"
+          f" shards = {rep2.shards}")
 
 
 if __name__ == "__main__":

@@ -44,6 +44,7 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 from repro.dicts import base as dbase
 from repro.dicts import registry
+from repro.testing import faults as _faults
 
 Axis = Union[str, Tuple[str, ...]]
 
@@ -134,6 +135,10 @@ def _plan_repartition(node, frame, *, axis: Axis, params=None):
     from repro.data.table import Table
     from repro.exec import engine as E
 
+    # injection point: cross-shard row movement (all-to-all / all-gather).
+    # Fires at trace time inside the shard_map body — a cold-path stand-in
+    # for a collective aborting mid-flight.
+    _faults.check("shard-merge", detail=f"repartition {node.kind}")
     mask = frame.primary.live_mask()
     flat: Dict[str, jax.Array] = {}
     for var in frame.order:
@@ -200,6 +205,9 @@ def _plan_exchange(node, built, *, axis: Axis):
     exchanges (scalar Reduce records) psum/pmin/pmax per field."""
     from repro.exec import engine as E
 
+    # injection point: cross-shard partial-dictionary merge (shuffle
+    # all-to-all, allreduce psum/pmin/pmax) — trace time, like dict-build
+    _faults.check("shard-merge", detail=f"exchange {node.kind}")
     if node.kind == "allreduce":
         fops = dict(getattr(node, "field_ops", ()) or ())
         if not isinstance(built, dict) or all(
@@ -331,8 +339,14 @@ def sharded_executor(
     def coerce(params):
         return E.coerce_bindings(plan, params, defaults=default_params)
 
+    fused_regions = sum(isinstance(n, cplan.Pipeline) for n in splan.nodes)
+
     def run_local(cols, masks, pvals):
         trace_counter[0] += 1  # python side effect: fires per trace only
+        # injection point: per-shard local execution — trace time, models
+        # one shard's device exhausting memory during the partial phase
+        # (default error kind ``oom``)
+        _faults.check("shard-oom", detail=f"{n_sh} shards")
         local_db = {}
         for rel in cols:
             n = next(iter(cols[rel].values())).shape[0]
@@ -368,16 +382,24 @@ def sharded_executor(
         )
 
         def run_scalar(params=None):
+            # injection point: sharded whole-plan dispatch (the sharded
+            # twin of ``kernel-launch``) — fires per call, warm and cold
+            _faults.check("shard-exec")
             t0 = time.perf_counter()
-            out = jax.block_until_ready(
-                wrapped_scalar(cols_in, masks_in, coerce(params))
-            )
+            try:
+                out = jax.block_until_ready(
+                    wrapped_scalar(cols_in, masks_in, coerce(params))
+                )
+            except Exception as e:  # noqa: BLE001 — boundary translation
+                E._raise_classified(e)
             publish(time.perf_counter() - t0)
             run_scalar.last_report = E.last_report()
             return out
 
         run_scalar.trace_counter = trace_counter
         run_scalar.last_report = None
+        run_scalar.fused_regions = fused_regions
+        run_scalar.n_shards = n_sh
         return run_scalar
 
     def body(cols, masks, pvals):
@@ -400,10 +422,16 @@ def sharded_executor(
     ds = getattr(result_node, "choice", None)
 
     def run(params=None):
+        # injection point: sharded whole-plan dispatch (the sharded twin
+        # of ``kernel-launch``) — fires per call, warm and cold
+        _faults.check("shard-exec")
         t0 = time.perf_counter()
-        ks, vs, valid = jax.block_until_ready(
-            wrapped(cols_in, masks_in, coerce(params))
-        )
+        try:
+            ks, vs, valid = jax.block_until_ready(
+                wrapped(cols_in, masks_in, coerce(params))
+            )
+        except Exception as e:  # noqa: BLE001 — boundary translation
+            E._raise_classified(e)
         publish(time.perf_counter() - t0)
         run.last_report = E.last_report()
         return ShardedDictResult(
@@ -412,6 +440,8 @@ def sharded_executor(
 
     run.trace_counter = trace_counter
     run.last_report = None
+    run.fused_regions = fused_regions
+    run.n_shards = n_sh
     return run
 
 
@@ -595,6 +625,54 @@ def execute_plan_sharded(
     )(params)
 
 
+class ShardedExecutable:
+    """``engine.Executable``-interface adapter over a sharded ``run``
+    callable, so ``Session``/``QueryServer`` drive sharded and single-shard
+    shapes through one calling convention ``ex(db, params)``.
+
+    The underlying executor closes over the build-time column arrays, so
+    the ``db`` argument is interface parity only (asserted to be the same
+    database when provided).  ``call_batched`` executes the batch as B warm
+    launches of the one cached ``shard_map`` trace — collectives cannot
+    ride ``vmap``, so a sharded micro-batch amortizes the *trace*, not the
+    dispatch; the server's retry/deadline machinery is unchanged."""
+
+    #: batched calls re-enter one trace sequentially (no vmapped twin), so
+    #: ``QueryServer.warm_up`` skips tracing power-of-two batch buckets
+    vmapped_batches = False
+
+    def __init__(self, run, db=None):
+        self._run = run
+        self._db = db
+        self.calls = 0
+
+    @property
+    def fused_regions(self) -> int:
+        return getattr(self._run, "fused_regions", 0)
+
+    @property
+    def n_shards(self) -> int:
+        return getattr(self._run, "n_shards", 1)
+
+    @property
+    def trace_count(self) -> int:
+        return self._run.trace_counter[0]
+
+    @property
+    def last_report(self):
+        return getattr(self._run, "last_report", None)
+
+    def __call__(self, db=None, params=None):
+        assert db is None or self._db is None or db is self._db, (
+            "sharded executables close over their build-time database"
+        )
+        self.calls += 1
+        return self._run(params)
+
+    def call_batched(self, db, params_list):
+        return [self(db, p) for p in params_list]
+
+
 _SHARDED_CACHE: Dict[tuple, Tuple[object, object]] = {}
 _SHARDED_CACHE_STATS = {"hits": 0, "misses": 0}
 _SHARDED_CACHE_MAX = 32
@@ -607,6 +685,7 @@ def cached_sharded_executor(
     axis: Axis,
     shard_rels: Tuple[str, ...] = ("lineitem",),
     sigma=None,
+    fuse: bool = True,
 ):
     """Distributed twin of ``engine.cached_executable``: the built (jitted
     shard_map) executor is cached by (plan fingerprint, DictChoice tuple,
@@ -632,6 +711,7 @@ def cached_sharded_executor(
         tuple(sorted(mesh.shape.items())),
         axis if isinstance(axis, str) else tuple(axis),
         tuple(shard_rels),
+        fuse,  # the materialized-sharded ladder rung is its own trace
     )
     hit = _SHARDED_CACHE.get(key)
     if hit is not None and hit[0] is db:
@@ -639,7 +719,13 @@ def cached_sharded_executor(
         run = hit[1]
     else:
         _SHARDED_CACHE_STATS["misses"] += 1
-        run = sharded_executor(plan, db, mesh, axis, shard_rels, sigma=sigma)
+        # injection point: cold sharded executable construction — same
+        # retry contract as the single-shard ``compile`` point (fires
+        # before the cache insert, so a failed build leaves no entry)
+        _faults.check("compile", detail=f"sharded {str(plan.fingerprint())[:32]}")
+        run = sharded_executor(
+            plan, db, mesh, axis, shard_rels, sigma=sigma, fuse=fuse
+        )
         if len(_SHARDED_CACHE) >= _SHARDED_CACHE_MAX:
             _SHARDED_CACHE.pop(next(iter(_SHARDED_CACHE)))
         _SHARDED_CACHE[key] = (db, run)
@@ -652,6 +738,8 @@ def cached_sharded_executor(
         return run({**bound, **(params or {})})
 
     bound_run.trace_counter = run.trace_counter
+    bound_run.fused_regions = run.fused_regions
+    bound_run.n_shards = run.n_shards
     return bound_run
 
 

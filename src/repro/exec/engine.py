@@ -2878,6 +2878,10 @@ class Executable:
     same-shape requests); each batch-size bucket traces once.
     """
 
+    #: batched calls run one stacked vmapped trace per power-of-two bucket
+    #: (``QueryServer.warm_up`` pre-traces the buckets when True)
+    vmapped_batches = True
+
     def __init__(self, plan, db: Dict[str, "Table"], sigma=None):
         from repro.core import plan as P
 
@@ -3028,6 +3032,10 @@ class BoundExecutable:
         return self.executable.trace_count
 
     @property
+    def vmapped_batches(self) -> bool:
+        return self.executable.vmapped_batches
+
+    @property
     def last_report(self) -> Optional[ExecutionReport]:
         return self.executable.last_report
 
@@ -3043,6 +3051,9 @@ class StreamedExecutable:
     eagerly; the per-chunk region functions inside are compiled once and
     cached (``_REGION_CACHE``), so repeated calls and parameter rebinds
     re-enter compiled code just like the resident ``Executable``."""
+
+    #: batched calls loop the eager driver — no vmapped buckets to warm
+    vmapped_batches = False
 
     def __init__(self, plan, db: Dict[str, "Table"], sigma=None):
         from repro.core import plan as P

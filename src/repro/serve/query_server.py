@@ -32,6 +32,17 @@ query shapes whose plans share a fact-table scan: the batch executes as one
 ``engine.cached_shared_executable`` — DESIGN.md §9) and responses demux
 back to their requests by rid.
 
+Sharded sessions (``connect(db, shards=N)``) serve through the same loop:
+``session.shape`` compiles onto ``distributed.cached_sharded_executor``
+and the ``ShardedExecutable`` adapter speaks the executable interface, so
+admission, deadlines, EWMA shedding, retry, and the ladder all apply
+unchanged.  Collectives cannot ride ``vmap``, so a sharded micro-batch
+executes as B warm launches of the one cached ``shard_map`` trace
+(``vmapped_batches=False`` — batching still amortizes queueing and drain
+overhead, not the launch).  Only ``share_scans=True`` stays per-host:
+cross-query shared-scan merging is not wired through ``shard_map``, and
+that combination raises :class:`UnsupportedSessionError` at construction.
+
 Fault tolerance (DESIGN.md §12) — every submitted request terminates with a
 result or a *typed* error, never silence:
 
@@ -70,6 +81,13 @@ from repro.core.adapt import result_items
 from repro.exec import engine as E
 from repro.exec.queries import QUERIES, Query
 
+#: retry-after hint (seconds) when admission-rejecting before ANY warm
+#: latency has been observed — deliberately conservative (one cold compile
+#: is tens of ms on CPU, more on device): a client backing off this long
+#: cannot re-arrive before the first batch could possibly have drained.
+#: Once a shape has served warm traffic the hint uses the measured EWMA.
+COLD_RETRY_AFTER_S = 0.05
+
 
 @dataclass
 class QueryRequest:
@@ -78,7 +96,7 @@ class QueryRequest:
     params: Dict[str, object]
     t_submit: float = 0.0
     deadline_s: Optional[float] = None  # relative budget given at submit
-    t_deadline: Optional[float] = None  # absolute (perf_counter) deadline
+    t_deadline: Optional[float] = None  # absolute (server-clock) deadline
 
 
 @dataclass
@@ -91,6 +109,9 @@ class QueryResponse:
     warm: bool  # shape was already compiled when this request ran
     batch_size: int = 1
     error: Optional[BaseException] = None  # typed ReproError on failure
+    #: ``error.to_dict()`` wire form (kind/transient/message + payload) —
+    #: what a network client would receive; None on success
+    error_info: Optional[Dict[str, object]] = None
     retries: int = 0  # transient-fault retries consumed
     degraded: str = ""  # ladder rung that produced the result, if not primary
 
@@ -128,6 +149,7 @@ class QueryServer:
         backoff_cap_s: float = 0.05,
         default_deadline_s: Optional[float] = None,
         seed: int = 0,
+        clock=None,
     ):
         from repro.session import Session, connect
 
@@ -135,11 +157,12 @@ class QueryServer:
             # deprecated shim: a raw {relation: Table} db dict opens a
             # session on the spot (the old constructor-soup signature)
             session = connect(session, delta=delta, queries=queries)
-        if session.mesh is not None:
+        if session.mesh is not None and share_scans:
             raise errors.UnsupportedSessionError(
-                f"QueryServer micro-batches through vmapped executables and "
-                f"cannot front a sharded session ({session.shards} shards); "
-                f"serve sharded sessions through session.query directly"
+                f"share_scans=True cannot front a sharded session "
+                f"({session.shards} shards): cross-query shared-scan "
+                f"merging is per-host only; serve sharded sessions with "
+                f"share_scans=False"
             )
         self.session = session
         self.db = session.db
@@ -153,6 +176,10 @@ class QueryServer:
         self.backoff_cap_s = backoff_cap_s
         self.default_deadline_s = default_deadline_s
         self._rng = random.Random(seed)  # deterministic backoff jitter
+        #: monotonic clock driving deadlines, latency counters, and the
+        #: EWMA shedding predictor — injectable (``clock=``) so tests
+        #: advance time instead of sleeping
+        self._clock = clock if clock is not None else time.perf_counter
         self.sigma = session.sigma
         self.queue: List[QueryRequest] = []
         self.finished: List[QueryResponse] = []
@@ -187,7 +214,7 @@ class QueryServer:
             self.counters["warm_hits"] += 1
             return shape
         q = self.queries[qname]
-        t0 = time.perf_counter()
+        t0 = self._clock()
         # the session is the planning funnel: synthesize → fuse → cached
         # executable, plus — for adaptive sessions — the warm-up race, so
         # the installed executable is already the measured winner
@@ -196,7 +223,7 @@ class QueryServer:
         # trigger the trace now so the first serve measures warm execution
         ex(self.db, q.bind_defaults({}))
         shape = _Shape(
-            q, ex, dict(ss.choices), time.perf_counter() - t0,
+            q, ex, dict(ss.choices), self._clock() - t0,
             plan=ss.plan, session_shape=ss,
         )
         self._shapes[qname] = shape
@@ -208,10 +235,14 @@ class QueryServer:
         """Precompile shapes so first requests hit the warm path.  With
         ``batch_buckets`` the vmapped power-of-two micro-batch buckets up to
         ``max_batch`` are traced too — after this, no request mix can
-        trigger a compile."""
+        trigger a compile.  Executables that don't vmap their batches
+        (``vmapped_batches=False``: sharded, streamed) have exactly one
+        trace, already warmed by ``_shape`` — no buckets to pre-trace."""
         for qname in qnames or sorted(self.queries):
             shape = self._shape(qname)
-            if not batch_buckets:
+            if not batch_buckets or not getattr(
+                shape.executable, "vmapped_batches", True
+            ):
                 continue
             binding = shape.query.bind_defaults({})
             b = 2
@@ -245,7 +276,7 @@ class QueryServer:
             )
         rid = self._next_rid
         self._next_rid += 1
-        now = time.perf_counter()
+        now = self._clock()
         if deadline_s is None:
             deadline_s = self.default_deadline_s
         self.queue.append(
@@ -262,11 +293,14 @@ class QueryServer:
 
     def _retry_after_hint(self, depth: int) -> float:
         """How long until the queue has likely drained a batch: pending
-        rounds × the mean warm batch wall (50ms floor when cold)."""
+        rounds × the mean warm batch wall.  Cold start (no shape has served
+        warm traffic yet) falls back to :data:`COLD_RETRY_AFTER_S`."""
         walls = [
             s.ewma_s for s in self._shapes.values() if s.ewma_s is not None
         ]
-        per_batch = (sum(walls) / len(walls)) if walls else 0.05
+        per_batch = (
+            (sum(walls) / len(walls)) if walls else COLD_RETRY_AFTER_S
+        )
         return max(1, depth // max(1, self.max_batch)) * per_batch
 
     # -- serving loop --------------------------------------------------------
@@ -325,8 +359,16 @@ class QueryServer:
         guarantee: every submitted request reaches ``finished``."""
         resp = QueryResponse(
             rid=req.rid, qname=req.qname, params=req.params, result=None,
-            latency_s=time.perf_counter() - req.t_submit, warm=warm,
+            latency_s=self._clock() - req.t_submit, warm=warm,
             error=err, retries=retries,
+            error_info=(
+                err.to_dict() if isinstance(err, errors.ReproError)
+                else {
+                    "kind": type(err).__name__,
+                    "transient": errors.is_transient(err),
+                    "message": str(err),
+                }
+            ),
         )
         self.counters["errors"] += 1
         self.counters["responses"] += 1
@@ -473,16 +515,16 @@ class QueryServer:
         """Serve one micro-batch; returns this step's responses, including
         typed-error responses for expired/invalid/failed requests ([] only
         when there is no work at all)."""
-        now = time.perf_counter()
+        now = self._clock()
         out = self._sweep_expired(now)
         batch = self._take_batch()
         # warm/cold is decided by what was compiled when the round began —
         # validation below may resolve cold shapes as a side effect
         warm = all(r.qname in self._shapes for r in batch) if batch else True
-        t0 = time.perf_counter()  # cold batches count compile in busy time
+        t0 = self._clock()  # cold batches count compile in busy time
         batch, bad = self._validate(batch)
         out.extend(bad)
-        batch, shed = self._shed_predicted_misses(batch, time.perf_counter())
+        batch, shed = self._shed_predicted_misses(batch, self._clock())
         out.extend(shed)
         if not batch:
             # the step still terminated requests (or was genuinely idle)
@@ -511,7 +553,7 @@ class QueryServer:
                 out.extend(self._step_degraded(batch, warm, t0))
                 self.counters["batches"] += 1
                 return out
-        done = time.perf_counter()
+        done = self._clock()
         self._busy["warm" if warm else "cold"] += done - t0
         uniq = list({id(s): s for s in shapes}.values())
         for s in uniq:
@@ -552,7 +594,7 @@ class QueryServer:
             except errors.ReproError as e:
                 out.append(self._fail(req, e, warm=warm))
                 continue
-            done = time.perf_counter()
+            done = self._clock()
             rep = E.last_report()
             rep.retries += retries
             if rep.degraded:

@@ -26,6 +26,19 @@ point               site
 ``dict-build``      dictionary construction (``engine.build_dict``) —
                     fires at trace time (the build is jitted), so it
                     models cold-path build failures
+``shard-exec``      sharded whole-plan dispatch
+                    (``distributed.sharded_executor``'s run callable) —
+                    the sharded twin of ``kernel-launch``; fires per call,
+                    warm and cold
+``shard-merge``     cross-shard collective realization
+                    (``distributed._plan_exchange`` /
+                    ``_plan_repartition``) — fires at trace time inside
+                    the ``shard_map`` body, modelling a cold-path
+                    all-to-all / all-gather / allreduce failure
+``shard-oom``       per-shard local execution (``run_local`` inside the
+                    ``shard_map`` body, trace time) — default error kind
+                    ``oom``: one shard's device exhausting memory during
+                    the partial phase
 ==================  ========================================================
 
 A *spec* arms one point with fail-once / fail-nth / fail-rate / fail-always
@@ -52,7 +65,9 @@ from contextlib import contextmanager
 from dataclasses import dataclass
 from typing import Dict, List, Optional
 
-from repro.errors import CompileError, DeviceOOMError, FaultInjected
+from repro.errors import (
+    CompileError, DeviceOOMError, FaultInjected, ShardExecError,
+)
 
 POINTS = (
     "compile",
@@ -61,12 +76,24 @@ POINTS = (
     "h2d",
     "chunk-decode",
     "dict-build",
+    "shard-exec",
+    "shard-merge",
+    "shard-oom",
 )
 
 ERROR_KINDS = {
     "fault": FaultInjected,
     "oom": DeviceOOMError,
     "compile": CompileError,
+    "shard": ShardExecError,
+}
+
+#: points whose unspecified error kind is NOT the generic ``fault`` —
+#: ``shard-oom`` models a shard's device memory exhausting, so arming it
+#: without an explicit kind raises ``DeviceOOMError``
+DEFAULT_ERROR = {
+    "shard-oom": "oom",
+    "shard-merge": "shard",
 }
 
 MODES = ("once", "nth", "rate", "always")
@@ -116,6 +143,8 @@ class FaultSpec:
         )
         if cls is FaultInjected:
             return cls(msg, point=self.point)
+        if cls is ShardExecError:
+            return cls(msg, site=self.point)
         err = cls(msg)
         err.injected_point = self.point
         return err
@@ -129,13 +158,15 @@ def arm(
     mode: str = "once",
     n: int = 1,
     rate: float = 0.0,
-    error: str = "fault",
+    error: Optional[str] = None,
     seed: int = 0,
 ) -> FaultSpec:
     if point not in POINTS:
         raise ValueError(f"unknown injection point {point!r}; have {POINTS}")
     if mode not in MODES:
         raise ValueError(f"unknown fault mode {mode!r}; have {MODES}")
+    if error is None:
+        error = DEFAULT_ERROR.get(point, "fault")
     if error not in ERROR_KINDS:
         raise ValueError(
             f"unknown error kind {error!r}; have {tuple(ERROR_KINDS)}"
@@ -179,7 +210,7 @@ def injected(
     mode: str = "once",
     n: int = 1,
     rate: float = 0.0,
-    error: str = "fault",
+    error: Optional[str] = None,
     seed: int = 0,
 ):
     """Scoped arm/disarm — yields the spec so tests can assert hit/fired
@@ -206,6 +237,8 @@ def parse_env(value: str) -> List[FaultSpec]:
         compile:nth:2          # 2nd cold compile raises FaultInjected
         h2d:rate:0.1:oom       # 10% of chunk uploads raise DeviceOOMError
         chunk-decode:once      # first chunk decode fails
+        shard-exec:rate:0.1    # 10% of sharded dispatches fault
+        shard-oom:once         # first per-shard trace raises DeviceOOMError
     """
     specs: List[FaultSpec] = []
     for entry in value.split(","):
@@ -216,7 +249,10 @@ def parse_env(value: str) -> List[FaultSpec]:
         point = parts[0]
         mode = parts[1] if len(parts) > 1 and parts[1] else "once"
         arg = parts[2] if len(parts) > 2 and parts[2] else ""
-        error = parts[3] if len(parts) > 3 and parts[3] else "fault"
+        error = (
+            parts[3] if len(parts) > 3 and parts[3]
+            else DEFAULT_ERROR.get(point, "fault")
+        )
         n, rate = 1, 0.0
         if mode == "nth":
             n = int(arg or 1)
@@ -236,16 +272,30 @@ def parse_env(value: str) -> List[FaultSpec]:
 ENV_SPECS: List[FaultSpec] = parse_env(os.environ.get("REPRO_FAULTS", ""))
 
 
+#: the specs the last ``arm_env()`` call armed — re-arming replaces them
+_ENV_ARMED: List[FaultSpec] = []
+
+
 def arm_env() -> List[FaultSpec]:
     """Arm the ``REPRO_FAULTS``-described specs (fresh copies, zeroed
-    counters) and return them; [] when the env var is empty/absent."""
-    out = []
+    counters) and return them; [] when the env var is empty/absent.
+
+    Idempotent: calling it again first removes the specs the previous call
+    armed (fixture setup running twice must not double the injection rate),
+    and re-arming after a ``disarm()`` re-plants fresh zeroed specs."""
+    for prev in _ENV_ARMED:
+        specs = _ARMED.get(prev.point, [])
+        if prev in specs:
+            specs.remove(prev)
+        if not specs:
+            _ARMED.pop(prev.point, None)
+    _ENV_ARMED.clear()
     for s in ENV_SPECS:
-        out.append(
+        _ENV_ARMED.append(
             arm(s.point, s.mode, n=s.n, rate=s.rate, error=s.error,
                 seed=s.seed)
         )
-    return out
+    return list(_ENV_ARMED)
 
 
 def stats() -> Dict[str, Dict[str, int]]:

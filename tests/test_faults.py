@@ -298,11 +298,142 @@ def test_validate_binding_accepts_numpy_scalars(db):
     assert bitwise_equal(out, session.query("q1", date=0.9))
 
 
-def test_sharded_session_rejected_with_typed_error(db):
+def test_sharded_share_scans_rejected_with_typed_error(db):
+    # sharded sessions serve through QueryServer since the shard-aware
+    # ladder landed; only the share_scans combination stays unsupported
+    # (cross-query shared-scan merging is per-host only)
     from repro.serve.query_server import QueryServer
 
     session = repro.connect(dict(db))
     session.mesh = object()  # simulate an N-way mesh without N devices
     session.shards = 4
     with pytest.raises(errors.UnsupportedSessionError, match="4 shards"):
-        QueryServer(session)
+        QueryServer(session, share_scans=True)
+
+
+# -- shard fault points, arming semantics, wire-form round trip --------------
+
+
+def test_shard_points_default_error_kinds():
+    # shard-oom models a shard's device memory exhausting: arming it
+    # without an explicit kind raises DeviceOOMError, not FaultInjected
+    with faults.injected("shard-oom"):
+        with pytest.raises(errors.DeviceOOMError):
+            faults.check("shard-oom")
+    with faults.injected("shard-merge"):
+        with pytest.raises(errors.ShardExecError) as ei:
+            faults.check("shard-merge")
+        assert ei.value.site == "shard-merge"
+        assert errors.is_transient(ei.value)
+    with faults.injected("shard-exec"):
+        with pytest.raises(errors.FaultInjected):
+            faults.check("shard-exec")
+    specs = faults.parse_env("shard-exec:rate:0.1,shard-oom:once")
+    assert specs[0].error == "fault" and specs[1].error == "oom"
+
+
+def test_classify_maps_collective_failures():
+    err = errors.classify(RuntimeError("NCCL all_to_all launch aborted"))
+    assert isinstance(err, errors.ShardExecError)
+    assert err.site == "collective" and errors.is_transient(err)
+    # a collective that died from memory exhaustion still classifies as
+    # OOM — the ladder must descend, not retry the same doomed rung
+    assert isinstance(
+        errors.classify(RuntimeError("RESOURCE_EXHAUSTED during all_gather")),
+        errors.DeviceOOMError,
+    )
+
+
+def test_arm_env_is_idempotent(monkeypatch):
+    monkeypatch.setattr(faults, "ENV_SPECS", faults.parse_env("h2d:rate:0.5"))
+    faults.arm_env()
+    b = faults.arm_env()  # fixture setup running twice
+    assert len(faults.active()["h2d"]) == 1  # injection rate NOT doubled
+    assert faults.active()["h2d"][0] is b[0]
+
+
+def test_arm_env_rearms_fresh_after_disarm(monkeypatch):
+    monkeypatch.setattr(faults, "ENV_SPECS", faults.parse_env("h2d:once"))
+    (a,) = faults.arm_env()
+    with pytest.raises(errors.FaultInjected):
+        faults.check("h2d")
+    faults.disarm()
+    (b,) = faults.arm_env()
+    assert b is not a and (b.hits, b.fired) == (0, 0)
+    with pytest.raises(errors.FaultInjected):
+        faults.check("h2d")  # the once-spec fires again from zero
+
+
+def test_rate_draws_identical_across_processes():
+    """Two processes arming the same (point, rate, seed) draw the identical
+    fault sequence — the chaos matrix is reproducible across CI jobs."""
+    import os
+    import subprocess
+    import sys
+
+    code = (
+        "from repro.testing import faults\n"
+        "s = faults.FaultSpec('shard-exec', 'rate', rate=0.3, seed=11)\n"
+        "print(''.join(str(int(s.should_fire(i))) for i in range(1, 101)))\n"
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    outs = [
+        subprocess.run(
+            [sys.executable, "-c", code],
+            capture_output=True, text=True, env=env, timeout=60,
+        )
+        for _ in range(2)
+    ]
+    assert all(o.returncode == 0 for o in outs), outs[0].stderr[-2000:]
+    assert outs[0].stdout == outs[1].stdout
+    local = faults.FaultSpec("shard-exec", "rate", rate=0.3, seed=11)
+    want = "".join(str(int(local.should_fire(i))) for i in range(1, 101))
+    assert outs[0].stdout.strip() == want
+    assert 0 < want.count("1") < 100
+
+
+def test_error_wire_form_round_trips_whole_taxonomy():
+    # generic: every taxonomy member survives to_dict -> from_dict with
+    # its type, message, and transience intact
+    for name, cls in errors._taxonomy().items():
+        err = cls("x")
+        d = err.to_dict()
+        assert d["kind"] == name and d["message"] == "x"
+        back = errors.from_dict(d)
+        assert type(back) is type(err)
+        assert errors.is_transient(back) == errors.is_transient(err)
+    # declared payload fields ride the wire form
+    for err in (
+        errors.DeadlineExceeded("late", deadline_s=0.5, predicted_s=0.7),
+        errors.AdmissionRejected("full", queue_depth=9, retry_after_s=0.2),
+        errors.FaultInjected("boom", point="h2d"),
+        errors.ShardExecError("collective died", site="merge"),
+    ):
+        back = errors.from_dict(err.to_dict())
+        assert type(back) is type(err) and str(back) == str(err)
+        for f in err._payload_fields:
+            assert getattr(back, f) == getattr(err, f)
+    # unknown kinds fall back to the base (forward compatibility)
+    back = errors.from_dict({"kind": "FutureError", "message": "m"})
+    assert type(back) is errors.ReproError and str(back) == "m"
+
+
+def test_breaker_cooldown_uses_injected_clock(db):
+    t = [0.0]
+    session = repro.connect(dict(db), clock=lambda: t[0])
+    session._trip_breaker("q1", "fused")
+    assert session.breakers()[("q1", "fused")] == pytest.approx(
+        session.breaker_cooldown_s
+    )
+    # an open breaker makes execute_shape skip the broken rung entirely
+    shape = session.shape("q1")
+    session.execute_shape(shape, shape.query.bind_defaults({}))
+    assert session.fault_stats["degraded"] == 1
+    assert E.last_report().degradation == "materialized"
+    # advance the injected clock past the cooldown — no sleeping
+    t[0] = session.breaker_cooldown_s + 1.0
+    assert session.breakers() == {}
+    session.execute_shape(shape, shape.query.bind_defaults({}))
+    assert session.fault_stats["degraded"] == 1  # primary rung again
+    assert E.last_report().degradation == ""

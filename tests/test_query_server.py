@@ -68,6 +68,12 @@ def test_microbatches_group_same_shape_requests(db):
 
 
 def test_counters_and_stats(db):
+    # the executable cache is global and keyed by (fingerprint, schema, Σ),
+    # so an earlier test file serving q1 over an identically-shaped db would
+    # make the "cold" request below warm — clear it so cold means cold
+    from repro.exec import engine as E
+
+    E.clear_exec_cache()
     srv = QueryServer(db, queries=_subset("q1"), max_batch=2)
     srv.submit("q1", date=0.7)  # cold: pays synthesis + compile
     srv.step()

@@ -183,3 +183,48 @@ def test_env_matrix_chaos_terminates(db):
             assert bitwise_equal(resp.result, clean[key].result)
         else:
             assert isinstance(resp.error, errors.ReproError)
+
+
+def test_server_deadline_sweep_with_injected_clock(db):
+    t = [100.0]
+    server = QueryServer(
+        repro.connect(dict(db)), clock=lambda: t[0], max_batch=4
+    )
+    server.warm_up(["q1"])
+    server.submit("q1", deadline_s=5.0, date=0.7)
+    t[0] += 10.0  # the deadline passes without any wall-clock sleeping
+    (resp,) = server.step()
+    assert isinstance(resp.error, errors.DeadlineExceeded)
+    assert resp.latency_s == pytest.approx(10.0)
+    assert server.counters["shed_deadline"] == 1
+
+
+def test_cold_start_retry_after_hint_is_documented_constant(db):
+    from repro.serve.query_server import COLD_RETRY_AFTER_S
+
+    server = _server(db, max_queue=1)
+    server.submit("q1", date=0.5)
+    with pytest.raises(errors.AdmissionRejected) as ei:
+        server.submit("q1", date=0.51)
+    # no shape has served warm traffic yet: the hint falls back to the
+    # conservative documented constant instead of a magic floor
+    assert ei.value.retry_after_s == pytest.approx(COLD_RETRY_AFTER_S)
+    d = ei.value.to_dict()
+    assert d["kind"] == "AdmissionRejected"
+    assert d["retry_after_s"] == ei.value.retry_after_s
+
+
+def test_responses_carry_wire_form_error_info(db):
+    server = _server(db)
+    server.warm_up(["q1"])
+    server.submit("q1", deadline_s=0.0, date=0.9)
+    (resp,) = server.step()
+    assert not resp.ok
+    assert resp.error_info["kind"] == "DeadlineExceeded"
+    assert resp.error_info["transient"] is False
+    assert resp.error_info["deadline_s"] == 0.0
+    back = errors.from_dict(resp.error_info)
+    assert isinstance(back, errors.DeadlineExceeded)
+    server.submit("q1", date=0.7)
+    (ok,) = server.step()
+    assert ok.ok and ok.error_info is None
